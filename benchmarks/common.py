@@ -1,0 +1,40 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from repro.core.baselines.bo import bo_search
+from repro.core.baselines.maff import maff_search
+from repro.core.scheduler import GraphCentricScheduler
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import WORKLOADS, workload_slo
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "bench")
+
+
+def emit(rows: List[Dict], name: str) -> None:
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def run_method(method: str, workload: str, *, bo_rounds: int = 100,
+               seed: int = 0):
+    """Run one searcher; returns (env with trace, best/Schedule result)."""
+    wf = WORKLOADS[workload]()
+    slo = workload_slo(workload)
+    env = SimulatedPlatform().environment()
+    if method == "aarc":
+        res = GraphCentricScheduler(env).schedule(wf, slo)
+        return env, res.cost, res.configs
+    if method == "maff":
+        best = maff_search(wf, slo, env)
+        return env, best.cost, best.configs
+    if method == "bo":
+        best = bo_search(wf, slo, env, n_rounds=bo_rounds, seed=seed)
+        return env, (best.cost if best else float("inf")), \
+            (best.configs if best else {})
+    raise ValueError(method)

@@ -1,0 +1,45 @@
+"""Fig. 3 — Bayesian Optimization over the decoupled Chatbot space.
+
+Validates the paper's motivation numbers: after 100 rounds BO reduces
+cost by ~32% but takes ~10 h of sampling wall time, with ~18% mean
+fluctuation amplitude and >50% of changes being increases.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core.baselines.bo import bo_search
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import WORKLOADS, workload_slo
+
+from benchmarks.common import emit
+
+
+def main(verbose: bool = True, rounds: int = 100, seed: int = 0):
+    wf = WORKLOADS["chatbot"]()
+    env = SimulatedPlatform().environment()
+    bo_search(wf, workload_slo("chatbot"), env, n_rounds=rounds, seed=seed)
+
+    costs = [s.cost for s in env.trace.samples if math.isfinite(s.cost)]
+    first, last_best = costs[0], min(costs)
+    reduction = 1.0 - last_best / first
+    total_runtime_h = env.trace.total_search_runtime / 3600.0
+    diffs = [costs[i + 1] - costs[i] for i in range(len(costs) - 1)]
+    amp = (sum(abs(d) for d in diffs) / len(diffs)) / \
+        (sum(costs) / len(costs))
+    frac_increase = sum(1 for d in diffs if d > 0) / len(diffs)
+
+    rows = [{"round": s.index, "cost": s.cost, "runtime": s.e2e_runtime,
+             "feasible": s.feasible} for s in env.trace.samples]
+    emit(rows, "fig3_bo")
+    if verbose:
+        print(f"fig3,bo_cost_reduction,{reduction:.3f},paper=0.3213")
+        print(f"fig3,bo_total_runtime_h,{total_runtime_h:.2f},paper=9.76")
+        print(f"fig3,bo_fluctuation_amplitude,{amp:.3f},paper=0.183")
+        print(f"fig3,bo_fraction_increases,{frac_increase:.3f},paper>0.5")
+    return {"reduction": reduction, "runtime_h": total_runtime_h,
+            "amplitude": amp, "frac_increase": frac_increase}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 6/7 — runtime and cost traces vs sample count per method.
+
+Validates the qualitative dynamics: AARC's runtime trends *up* toward
+the SLO while its cost trends *down* and converges in tens of samples;
+BO fluctuates; MAFF terminates early in local optima.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.serverless.workloads import WORKLOADS, workload_slo
+
+from benchmarks.common import emit, run_method
+
+
+def main(verbose: bool = True):
+    rows = []
+    summary = {}
+    for name in WORKLOADS:
+        slo = workload_slo(name)
+        for method in ("aarc", "bo", "maff"):
+            env, _, _ = run_method(method, name)
+            best = math.inf
+            for s in env.trace.samples:
+                if s.feasible:
+                    best = min(best, s.cost)
+                rows.append({"workflow": name, "method": method,
+                             "sample": s.index, "runtime": s.e2e_runtime,
+                             "cost": s.cost, "best_cost": best,
+                             "feasible": s.feasible})
+            summary[(name, method)] = best
+        if verbose:
+            # AARC: runtime of final feasible config approaches the SLO
+            env, cost, _ = run_method("aarc", name)
+            final_rt = [s.e2e_runtime for s in env.trace.samples
+                        if s.feasible][-1]
+            print(f"fig67,{name}_aarc_final_runtime_frac_of_slo,"
+                  f"{final_rt / slo:.3f},paper: approaches 1")
+    emit(rows, "fig67_convergence")
+    return summary
+
+
+if __name__ == "__main__":
+    main()

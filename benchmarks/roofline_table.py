@@ -1,0 +1,74 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-cell table.
+
+Reads artifacts/dryrun/*.json produced by repro.launch.dryrun and emits
+the markdown table for EXPERIMENTS.md plus CSV summary lines.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "single"):
+    out = {}
+    for path in glob.glob(os.path.join(ART, f"*__{tag}.json")):
+        with open(path) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s "
+           "| dominant | useful | GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for arch in ARCH_IDS:
+        live, skips = cells_for(get_config(arch))
+        for _, shape in live:
+            r = rows.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | MISSING | | | | | |")
+                continue
+            gb = r["memory_analysis"]["temp_size_in_bytes"] / 1e9
+            lines.append(
+                f"| {arch} | {shape} | {r['kind']} | {r['compute_s']:.4f} "
+                f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| {r['dominant']} | {r['useful_ratio']:.3f} "
+                f"| {gb:.1f} |")
+        for shape, reason in skips:
+            lines.append(f"| {arch} | {shape} | - | skipped | | | "
+                         f"| - | - |")
+    return hdr + "\n".join(lines)
+
+
+def main(verbose: bool = True):
+    rows = load("single")
+    multi = load("multi")
+    if verbose:
+        n_cells = sum(len(cells_for(get_config(a))[0]) for a in ARCH_IDS)
+        print(f"roofline,single_pod_cells,{len(rows)}/{n_cells},baseline")
+        print(f"roofline,multi_pod_cells,{len(multi)}/{n_cells},"
+              f"compile-proof")
+        dom = {}
+        for r in rows.values():
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        for k, v in sorted(dom.items()):
+            print(f"roofline,dominant_{k},{v},cells")
+        worst = sorted(rows.values(), key=lambda r: r["useful_ratio"])[:3]
+        for r in worst:
+            print(f"roofline,lowest_useful,{r['arch']}:{r['shape']}="
+                  f"{r['useful_ratio']:.3f},hillclimb candidate")
+    return rows
+
+
+if __name__ == "__main__":
+    table = markdown_table(load("single"))
+    print(table)
+    main()

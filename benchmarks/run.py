@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV lines per benchmark and writes JSON
+artifacts under artifacts/bench/. ``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    from benchmarks import (fig2_decoupling, fig3_bo, fig5_search,
+                            fig67_convergence, fig8_input_aware,
+                            roofline_table, table2_optimal, tpu_autotune)
+    benches = [
+        ("fig2_decoupling", fig2_decoupling.main),
+        ("fig3_bo", fig3_bo.main),
+        ("fig5_search", fig5_search.main),
+        ("fig67_convergence", fig67_convergence.main),
+        ("table2_optimal", table2_optimal.main),
+        ("fig8_input_aware", fig8_input_aware.main),
+        ("tpu_autotune", tpu_autotune.main),
+        ("roofline_table", roofline_table.main),
+    ]
+    failures = 0
+    for name, fn in benches:
+        print(f"# === {name} ===")
+        t0 = time.time()
+        try:
+            fn(verbose=True)
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception as exc:  # pragma: no cover
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"# {name} FAILED: {exc!r}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

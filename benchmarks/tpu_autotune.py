@@ -1,0 +1,41 @@
+"""Beyond-paper benchmark: AARC vs BO vs MAFF on the *TPU stage graph*
+(the hardware-adapted domain) — search efficiency and plan cost across
+three representative archs.
+"""
+from __future__ import annotations
+
+from repro.autotune import plan
+from repro.configs import SHAPES, get_config
+
+from benchmarks.common import emit
+
+ARCHS = ["olmo-1b", "qwen2-moe-a2.7b", "llama-3.2-vision-90b"]
+
+
+def main(verbose: bool = True):
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        base = plan(cfg, shape, 1e9, method="aarc", max_trail=0)
+        slo = base.step_time * 1.8
+        per = {}
+        for method in ("aarc", "bo", "maff"):
+            r = plan(cfg, shape, slo, method=method, max_trail=64)
+            per[method] = r
+            rows.append({"arch": arch, "method": method,
+                         "step_time": r.step_time, "cost": r.cost,
+                         "n_samples": r.n_samples,
+                         "search_runtime": r.search_runtime})
+        if verbose:
+            for b in ("bo", "maff"):
+                print(f"tpu_autotune,{arch}_cost_saving_vs_{b},"
+                      f"{1 - per['aarc'].cost / per[b].cost:.3f},")
+            print(f"tpu_autotune,{arch}_search_speedup_vs_bo,"
+                  f"{per['bo'].search_runtime / max(per['aarc'].search_runtime, 1e-9):.1f}x,")
+    emit(rows, "tpu_autotune")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

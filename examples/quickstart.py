@@ -1,0 +1,43 @@
+"""Quickstart: AARC end-to-end on the paper's Chatbot workflow.
+
+Runs the Graph-Centric Scheduler + Priority Configurator against the
+120 s SLO, prints the discovered decoupled per-function configuration,
+and compares it with the BO and MAFF baselines — the paper's core
+experiment in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.baselines.bo import bo_search
+from repro.core.baselines.maff import maff_search
+from repro.core.scheduler import GraphCentricScheduler
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import chatbot, workload_slo
+
+
+def main():
+    slo = workload_slo("chatbot")
+
+    # --- AARC ---------------------------------------------------------
+    env = SimulatedPlatform().environment()
+    result = GraphCentricScheduler(env).schedule(chatbot(), slo)
+    print(f"AARC  critical path: {' -> '.join(result.critical_path)}")
+    print(f"AARC  e2e {result.e2e_runtime:.1f}s (SLO {slo:.0f}s), "
+          f"cost {result.cost:.1f}, {result.n_samples} samples, "
+          f"search wall {env.trace.total_search_runtime:.0f}s")
+    for name, cfg in result.configs.items():
+        print(f"      {name:16s} {cfg}")
+
+    # --- baselines ------------------------------------------------------
+    env = SimulatedPlatform().environment()
+    best = maff_search(chatbot(), slo, env)
+    print(f"MAFF  cost {best.cost:.1f}, {env.trace.n_samples} samples, "
+          f"search wall {env.trace.total_search_runtime:.0f}s")
+
+    env = SimulatedPlatform().environment()
+    best = bo_search(chatbot(), slo, env, n_rounds=60)
+    print(f"BO    cost {best.cost:.1f}, {env.trace.n_samples} samples, "
+          f"search wall {env.trace.total_search_runtime:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

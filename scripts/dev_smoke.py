@@ -1,0 +1,56 @@
+"""Dev driver: one forward+loss / prefill / decode per reduced arch."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS
+from repro.configs.registry import reduced_config
+from repro.models.model import Model
+
+
+def batch_for(cfg, b=2, s=32):
+    key = jax.random.key(0)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model), cfg.jdtype)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model), cfg.jdtype)
+    return batch
+
+
+def main():
+    only = sys.argv[1:] or ARCH_IDS
+    for name in only:
+        cfg = reduced_config(name)
+        model = Model(cfg)
+        try:
+            params, axes = model.build(jax.random.key(1))
+            n = sum(x.size for x in jax.tree.leaves(params))
+            batch = batch_for(cfg)
+            loss, metrics = jax.jit(model.loss)(params, batch)
+            assert jnp.isfinite(loss), f"{name}: loss NaN"
+            # serving path
+            b, s = 2, 16
+            pre = {k: (v[:, :s] if v.ndim > 1 and k in ("tokens", "labels")
+                       else v)[:b] for k, v in batch.items()}
+            logits, cache = jax.jit(
+                lambda p, bt: model.prefill(p, bt, max_len=64))(params, pre)
+            assert jnp.all(jnp.isfinite(logits)), f"{name}: prefill NaN"
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok)
+            assert jnp.all(jnp.isfinite(logits2)), f"{name}: decode NaN"
+            print(f"OK   {name:24s} params={n:>10,} loss={float(loss):.3f}")
+        except Exception:
+            print(f"FAIL {name}")
+            traceback.print_exc()
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

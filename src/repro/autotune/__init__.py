@@ -1,0 +1,28 @@
+"""AARC-on-TPU: the paper's decoupled-resource configurator applied to
+distributed LM training/serving stages.
+
+The mapping (DESIGN.md §2):
+
+  serverless function   ->  pipeline stage (layer group / embed / head)
+  workflow DAG          ->  stage graph of the train/serve step
+  vCPU knob             ->  per-stage chip allocation (0.1..10 "cpu"
+                            units = 2.56..256 chips of a pod)
+  memory knob           ->  per-stage activation budget (MB knob ->
+                            fraction of full activation residency;
+                            lower budget = deeper remat = recompute)
+  execute-the-workflow  ->  analytic roofline oracle fed by the
+                            dry-run's measured per-unit FLOPs/bytes
+  cost t(mu0 cpu+mu1 mem) -> chip-seconds + HBM-GB-seconds
+  end-to-end SLO        ->  step-latency target
+
+Algorithms 1 & 2 (and the BO/MAFF baselines) run *unchanged* — only
+the Environment's oracle differs, which is the point: AARC is
+oracle-agnostic, and critical-path + priority-deallocation converges
+in tens of samples where BO needs hundreds.
+"""
+from repro.autotune.stages import StageSpec, build_stage_graph
+from repro.autotune.oracle import TPUStageOracle, make_tpu_env
+from repro.autotune.planner import PlanResult, plan
+
+__all__ = ["StageSpec", "build_stage_graph", "TPUStageOracle",
+           "make_tpu_env", "PlanResult", "plan"]

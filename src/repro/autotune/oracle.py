@@ -1,0 +1,112 @@
+"""Analytic roofline oracle: StageSpec x ResourceConfig -> seconds.
+
+The decoupled knobs (paper §III):
+
+  cpu ∈ [0.1, 10]   — per-stage chip share: chips = cpu/10 x pod(256).
+                      Compute and HBM-bandwidth terms scale with chips
+                      (with an Amdahl-style collective tax that grows
+                      with chip count — more chips, more all-reduce).
+  mem ∈ [128,10240] — per-stage activation budget as a fraction of the
+                      full residency: below it, remat recomputes —
+                      runtime multiplier up to +35% (full remat), and
+                      below the *floor* (params + minimal workspace
+                      don't fit) the stage OOMs like a serverless
+                      function whose working set exceeds its quota.
+
+Runtime = max(compute, memory, collective) + fixed dispatch latency.
+This is exactly the serverless simulator's role with TPU physics; the
+AARC/BO/MAFF searchers only ever see the Environment interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost import PricingModel
+from repro.core.dag import Node
+from repro.core.env import Environment, ExecutionError
+from repro.core.resources import CPU_MAX, MEM_MAX_MB
+from repro.autotune.stages import StageSpec
+from repro.roofline.hw import TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleConfig:
+    pod_chips: int = 256
+    hw: HardwareSpec = TPU_V5E
+    dispatch_latency: float = 0.3e-3     # step launch overhead, seconds
+    collective_frac: float = 0.08        # payload fraction all-reduced
+    remat_max_penalty: float = 0.35
+    mfu: float = 0.5                     # attainable fraction of peak
+
+
+class TPUStageOracle:
+    """node -> seconds under the node's decoupled (cpu, mem) config."""
+
+    def __init__(self, cfg: OracleConfig = OracleConfig()):
+        self.cfg = cfg
+
+    def chips(self, node: Node) -> int:
+        frac = node.config.cpu / CPU_MAX
+        return max(int(round(frac * self.cfg.pod_chips)),
+                   node.payload.min_chips)
+
+    def _mem_state(self, node: Node):
+        """(penalty multiplier, fits) for the activation budget."""
+        spec: StageSpec = node.payload
+        chips = self.chips(node)
+        budget_frac = node.config.mem / MEM_MAX_MB
+        # params must fit regardless; activations scale with budget
+        per_chip = (spec.param_bytes + spec.act_bytes * budget_frac) / chips
+        hbm = self.cfg.hw.hbm_bytes * 0.9
+        if spec.param_bytes / chips > hbm:
+            return 0.0, False                      # params alone OOM
+        if per_chip > hbm:
+            # even the requested budget doesn't fit on these chips
+            return 0.0, False
+        # recompute penalty grows as the budget shrinks below full
+        penalty = self.cfg.remat_max_penalty * (1.0 - budget_frac)
+        return penalty, True
+
+    def runtime(self, node: Node) -> float:
+        spec: StageSpec = node.payload
+        chips = self.chips(node)
+        penalty, fits = self._mem_state(node)
+        if not fits:
+            raise ExecutionError(
+                f"{spec.name}: working set exceeds HBM at "
+                f"{chips} chips / {node.config.mem:.0f} MB budget")
+        hw = self.cfg.hw
+        compute = spec.flops * (1.0 + penalty) / \
+            (chips * hw.peak_flops_bf16 * self.cfg.mfu)
+        memory = (spec.param_bytes + spec.act_bytes * (1.0 + penalty)) / \
+            (chips * hw.hbm_bandwidth)
+        # collective tax: ring all-reduce over the stage's chips
+        coll_bytes = spec.param_bytes * self.cfg.collective_frac \
+            * 2.0 * (chips - 1) / max(chips, 1)
+        collective = coll_bytes / (hw.ici_link_bandwidth *
+                                   hw.ici_links_per_chip)
+        return (max(compute, memory) + collective
+                + self.cfg.dispatch_latency)
+
+    def __call__(self, node: Node) -> float:
+        return self.runtime(node)
+
+    def clamped(self, node: Node) -> float:
+        """Wall time a failing configuration burns before abort."""
+        spec: StageSpec = node.payload
+        chips = self.chips(node)
+        hw = self.cfg.hw
+        return (spec.param_bytes + spec.act_bytes) / \
+            (chips * hw.hbm_bandwidth) + 10 * self.cfg.dispatch_latency
+
+
+#: TPU pricing: mu0 per cpu-unit-second (25.6 chips), mu1 per "MB"
+#: budget-second — same constants as the paper so cost numbers compare.
+TPU_PRICING = PricingModel(mu0=0.512, mu1=0.001, mu2=0.0)
+
+
+def make_tpu_env(oracle_cfg: OracleConfig = OracleConfig()) -> Environment:
+    oracle = TPUStageOracle(oracle_cfg)
+    return Environment(oracle, pricing=TPU_PRICING,
+                       clamped_oracle=oracle.clamped)

@@ -1,0 +1,12 @@
+"""Assigned architecture configs (+ shape grid + registry).
+
+Every architecture from the assignment table is a ``ModelConfig`` in its
+own module; ``registry.get_config(name)`` / ``--arch <id>`` select them.
+``shapes.SHAPES`` defines the four input-shape cells; applicability
+rules (decode/long-context skips) live in ``shapes.cells_for``.
+"""
+from repro.configs.registry import (ARCH_IDS, get_config, reduced_config)
+from repro.configs.shapes import (SHAPES, Shape, cells_for, input_shape)
+
+__all__ = ["ARCH_IDS", "get_config", "reduced_config",
+           "SHAPES", "Shape", "cells_for", "input_shape"]

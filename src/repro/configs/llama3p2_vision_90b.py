@@ -1,0 +1,26 @@
+"""llama-3.2-vision-90b [vlm] — gated cross-attn image layers; STUB frontend.
+
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]. Every 5th layer is a
+tanh-gated cross-attention layer over precomputed patch embeddings
+(B, 1601, 8192) — the vision tower is a stub per the assignment. 100
+layers counted *including* the interleaved cross-attn layers (20 cross
++ 80 self). Full attention => long_500k skipped. The heaviest cell
+overall (~90B params) — the multi-pod sizing case.
+"""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    n_frontend_tokens=1601,
+)

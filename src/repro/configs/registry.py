@@ -1,0 +1,70 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig.
+
+``get_config(id)`` returns the full assigned config (exercised only via
+the ShapeDtypeStruct dry-run); ``reduced_config(id)`` returns a tiny
+same-family config for CPU smoke tests (one real forward/train step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.models.mamba2 import SSMConfig
+from repro.models.model import ModelConfig
+from repro.models.moe import MoEConfig
+from repro.models.xlstm import XLSTMConfig
+
+from repro.configs import (granite_moe_3b_a800m, llama3p2_vision_90b, olmo_1b,
+                           qwen1p5_32b, qwen2_moe_a2p7b, qwen3_0p6b,
+                           starcoder2_7b, whisper_tiny, xlstm_350m,
+                           zamba2_1p2b)
+
+_MODULES = [zamba2_1p2b, qwen2_moe_a2p7b, granite_moe_3b_a800m, xlstm_350m,
+            starcoder2_7b, qwen3_0p6b, qwen1p5_32b, olmo_1b, whisper_tiny,
+            llama3p2_vision_90b]
+
+CONFIGS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+ARCH_IDS: List[str] = list(CONFIGS)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_IDS}")
+    cfg = CONFIGS[name]
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def reduced_config(name: str, **overrides) -> ModelConfig:
+    """Tiny same-family config: same block structure, laptop-sized dims.
+
+    Used by the per-arch smoke tests (instantiate + one real step on
+    CPU, assert shapes and no NaNs). fp32 so CPU numerics are tight.
+    """
+    cfg = get_config(name)
+    r = dict(
+        d_model=128, n_heads=4, kv_heads=min(cfg.kv_heads, 4), head_dim=32,
+        d_ff=256, vocab=512, vocab_pad=64, n_layers=4, dtype="float32",
+        remat="none", max_pos=256 if cfg.max_pos else 0,
+        n_frontend_tokens=16 if cfg.n_frontend_tokens else 0,
+        n_encoder_layers=2 if cfg.n_encoder_layers else 0,
+    )
+    if cfg.moe is not None:
+        r["moe"] = MoEConfig(
+            n_experts=8, top_k=2, expert_ff=64,
+            shared_ff=128 if cfg.moe.shared_ff else 0,
+            norm_topk=cfg.moe.norm_topk)
+        r["d_ff"] = 64
+    if cfg.ssm is not None:
+        r["ssm"] = SSMConfig(state=16, head_dim=32, expand=2, conv_kernel=4,
+                             chunk=32)
+    if cfg.xlstm is not None:
+        r["xlstm"] = XLSTMConfig(n_heads=4, expand=2, conv_kernel=4,
+                                 slstm_every=2,
+                                 ffn_factor=cfg.xlstm.ffn_factor)
+    if cfg.shared_attn_every:
+        r["shared_attn_every"] = 2
+        r["shared_attn_d_ff"] = 256
+    if cfg.cross_attn_every:
+        r["cross_attn_every"] = 2
+    r.update(overrides)
+    return dataclasses.replace(cfg, **r)

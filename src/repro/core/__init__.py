@@ -1,0 +1,28 @@
+"""AARC core — the paper's contribution, backend-generic.
+
+Graph-Centric Scheduler (Algorithm 1) + Priority Configurator
+(Algorithm 2) over decoupled resource configurations, plus the BO and
+MAFF baselines and the Input-Aware plugin (§IV-D).
+"""
+from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
+from repro.core.critical_path import (SubPath, find_critical_path,
+                                      find_detour_subpath, runtime_sum)
+from repro.core.dag import Node, Workflow
+from repro.core.env import Environment, ExecutionError, Sample, SearchTrace
+from repro.core.input_aware import InputAwareEngine, InputClass
+from repro.core.priority import Operation, priority_configuration
+from repro.core.resources import (BASE_CONFIG, ResourceConfig, coupled_config,
+                                  quantize_cpu, quantize_mem)
+from repro.core.scheduler import GraphCentricScheduler, ScheduleResult, schedule
+
+__all__ = [
+    "DEFAULT_PRICING", "PricingModel", "workflow_cost",
+    "SubPath", "find_critical_path", "find_detour_subpath", "runtime_sum",
+    "Node", "Workflow",
+    "Environment", "ExecutionError", "Sample", "SearchTrace",
+    "InputAwareEngine", "InputClass",
+    "Operation", "priority_configuration",
+    "BASE_CONFIG", "ResourceConfig", "coupled_config",
+    "quantize_cpu", "quantize_mem",
+    "GraphCentricScheduler", "ScheduleResult", "schedule",
+]

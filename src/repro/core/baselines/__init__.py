@@ -1,0 +1,4 @@
+from repro.core.baselines.bo import BayesianOptimizer, bo_search
+from repro.core.baselines.maff import maff_search
+
+__all__ = ["BayesianOptimizer", "bo_search", "maff_search"]

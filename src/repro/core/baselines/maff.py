@@ -1,0 +1,67 @@
+"""MAFF baseline (Zubko et al. [14]), adapted to workflows per §IV-A(b).
+
+MAFF is *memory-centric gradient descent* with AWS-style coupling: vCPU
+is allocated proportionally (1 core per 1024 MB of memory), so the
+search walks a 1-D coupled axis per function. It iteratively shrinks
+memory while cost decreases; "if a workflow's SLO is violated, the
+process reverts to the previous step and terminates" — which is exactly
+why it gets stuck in local optima on CPU-heavy / memory-light
+workloads (ML Pipeline) where the coupled axis cannot express
+(high cpu, low mem) points.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+from repro.core.cost import workflow_cost
+from repro.core.dag import Workflow
+from repro.core.env import Environment, Sample
+from repro.core.resources import (MEM_MIN_MB, MEM_MAX_MB, coupled_config,
+                                  quantize_mem)
+
+
+def maff_search(wf: Workflow, slo: float, env: Environment, *,
+                shrink: float = 0.4, min_rel_step: float = 0.02,
+                max_samples: int = 200) -> Optional[Sample]:
+    """Coupled memory descent, one function at a time.
+
+    For each function (in topological order): repeatedly multiply its
+    memory by ``(1 - shrink)`` (cpu follows the 1-per-1024MB coupling);
+    on SLO violation or cost increase revert and halve the shrink step;
+    terminate the function's descent once the step falls below
+    ``min_rel_step`` — MAFF's per-function gradient descent with step
+    decay. Returns the best feasible sample.
+    """
+    # start from the coupled base configuration
+    for node in wf:
+        node.config = coupled_config(MEM_MAX_MB)
+    sample = env.execute(wf, slo=slo, note="maff:base")
+    if not sample.feasible:
+        return None
+    prev_cost = sample.cost
+
+    n = env.trace.n_samples
+    for name in wf.topological_order():
+        node = wf.nodes[name]
+        step = shrink
+        while step >= min_rel_step and env.trace.n_samples - n < max_samples:
+            old_cfg, old_rt = node.config, node.runtime
+            new_mem = quantize_mem(node.config.mem * (1.0 - step))
+            if new_mem >= node.config.mem - 1e-9:       # at the lattice floor
+                break
+            node.config = coupled_config(new_mem)
+            sample = env.execute(wf, slo=slo, note=f"maff:{name}")
+            if (sample.error
+                    or not math.isfinite(sample.e2e_runtime)
+                    or sample.e2e_runtime > slo
+                    or sample.cost >= prev_cost):
+                node.config, node.runtime = old_cfg, old_rt
+                step *= 0.5                              # revert + decay
+            else:
+                prev_cost = sample.cost
+
+    best = env.trace.best_feasible()
+    if best is not None:
+        wf.apply_configs(best.configs)
+    return best

@@ -1,0 +1,46 @@
+"""Pricing model (§IV-A d).
+
+cost_ij = t_ij * (mu0 * cpu_j + mu1 * mem_j) + mu2
+
+The paper sets mu0 = 0.512, mu1 = 0.001, mu2 = 0 and *states* mu1 is
+per GB-second. That unit cannot reproduce the paper's own Table II:
+at per-GB pricing, memory is ~0.2 % of workflow cost, so the claimed
+ML-Pipeline saving (-61.7 % total cost achieved chiefly through a
+-87.5 % memory cut) is arithmetically impossible. The numbers *are*
+consistent if mu1 = 0.001 is per **MB**-second (memory ≈ 2/3 of the
+base-config rate, 10240 MB * 0.001 = 10.24 vs 10 vCPU * 0.512 = 5.12).
+We therefore apply mu1 per MB-second and record the discrepancy in
+EXPERIMENTS.md §Fidelity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.core.resources import ResourceConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingModel:
+    mu0: float = 0.512   # price per vCPU-second
+    mu1: float = 0.001   # price per MB-second (see module docstring)
+    mu2: float = 0.0     # price per request / orchestration
+
+    def function_cost(self, runtime_s: float, config: ResourceConfig) -> float:
+        return runtime_s * self.rate(config) + self.mu2
+
+    def rate(self, config: ResourceConfig) -> float:
+        """$ per second at this configuration (excluding mu2)."""
+        return self.mu0 * config.cpu + self.mu1 * config.mem
+
+
+DEFAULT_PRICING = PricingModel()
+
+
+def workflow_cost(pricing: PricingModel, nodes: Iterable) -> float:
+    """Total cost of one workflow execution = sum of function costs.
+
+    ``nodes`` is an iterable of objects with ``.runtime`` and ``.config``
+    (e.g. :class:`repro.core.dag.Node`).
+    """
+    return sum(pricing.function_cost(n.runtime, n.config) for n in nodes)

@@ -1,0 +1,177 @@
+"""Workflow DAG abstraction for AARC.
+
+A workflow is a DAG of *functions* (nodes). Each node owns a mutable
+``ResourceConfig`` and, once the workflow has been executed under that
+config, a measured ``runtime``. The DAG supports:
+
+  * topological execution against a pluggable runtime oracle
+    (``Workflow.execute``) — node weights become measured runtimes,
+  * end-to-end latency = longest path (parallel branches overlap),
+  * the graph queries used by Algorithm 1 (critical path, detour
+    sub-paths) which live in :mod:`repro.core.critical_path`.
+
+The oracle is any callable ``node -> runtime_seconds`` so the same DAG
+machinery drives the serverless simulator, a real-measurement backend,
+or the TPU roofline backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+from repro.core.resources import ResourceConfig
+
+RuntimeOracle = Callable[["Node"], float]
+
+
+@dataclasses.dataclass
+class Node:
+    """One function in a serverless workflow (or one stage in a step graph)."""
+
+    name: str
+    config: ResourceConfig = dataclasses.field(default_factory=ResourceConfig)
+    runtime: float = 0.0          # seconds, measured under ``config``
+    scheduled: bool = False       # Algorithm 1's "scheduled" flag
+    payload: object = None        # backend-specific (e.g. FunctionSpec)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Node({self.name}, cfg={self.config}, rt={self.runtime:.3f})"
+
+
+class Workflow:
+    """A DAG of named nodes with adjacency maintained both ways."""
+
+    def __init__(self, name: str = "workflow"):
+        self.name = name
+        self.nodes: Dict[str, Node] = {}
+        self._succ: Dict[str, List[str]] = {}
+        self._pred: Dict[str, List[str]] = {}
+
+    # -- construction -------------------------------------------------
+    def add_node(self, node: Node) -> Node:
+        if node.name in self.nodes:
+            raise ValueError(f"duplicate node {node.name!r}")
+        self.nodes[node.name] = node
+        self._succ[node.name] = []
+        self._pred[node.name] = []
+        return node
+
+    def add_function(self, name: str, payload: object = None,
+                     config: Optional[ResourceConfig] = None) -> Node:
+        return self.add_node(Node(name=name, payload=payload,
+                                  config=config or ResourceConfig()))
+
+    def add_edge(self, src: str, dst: str) -> None:
+        if src not in self.nodes or dst not in self.nodes:
+            raise KeyError(f"unknown edge endpoint {src!r}->{dst!r}")
+        if dst in self._succ[src]:
+            return
+        self._succ[src].append(dst)
+        self._pred[dst].append(src)
+        # cheap cycle guard: dst must not reach src
+        if self._reaches(dst, src):
+            self._succ[src].remove(dst)
+            self._pred[dst].remove(src)
+            raise ValueError(f"edge {src}->{dst} would create a cycle")
+
+    def chain(self, *names: str) -> None:
+        for a, b in zip(names, names[1:]):
+            self.add_edge(a, b)
+
+    def _reaches(self, start: str, goal: str) -> bool:
+        stack, seen = [start], set()
+        while stack:
+            cur = stack.pop()
+            if cur == goal:
+                return True
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self._succ[cur])
+        return False
+
+    # -- queries ------------------------------------------------------
+    def successors(self, name: str) -> Sequence[str]:
+        return tuple(self._succ[name])
+
+    def predecessors(self, name: str) -> Sequence[str]:
+        return tuple(self._pred[name])
+
+    def sources(self) -> List[str]:
+        return [n for n in self.nodes if not self._pred[n]]
+
+    def sinks(self) -> List[str]:
+        return [n for n in self.nodes if not self._succ[n]]
+
+    def __iter__(self) -> Iterator[Node]:
+        return iter(self.nodes.values())
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def topological_order(self) -> List[str]:
+        indeg = {n: len(self._pred[n]) for n in self.nodes}
+        ready = sorted([n for n, d in indeg.items() if d == 0])
+        order: List[str] = []
+        while ready:
+            cur = ready.pop(0)
+            order.append(cur)
+            for s in self._succ[cur]:
+                indeg[s] -= 1
+                if indeg[s] == 0:
+                    # keep deterministic order
+                    lo, hi = 0, len(ready)
+                    while lo < hi:
+                        mid = (lo + hi) // 2
+                        if ready[mid] < s:
+                            lo = mid + 1
+                        else:
+                            hi = mid
+                    ready.insert(lo, s)
+        if len(order) != len(self.nodes):
+            raise ValueError("workflow graph has a cycle")
+        return order
+
+    # -- execution ----------------------------------------------------
+    def execute(self, oracle: RuntimeOracle) -> float:
+        """Execute every node through ``oracle`` and return the
+        end-to-end latency (longest weighted path, i.e. parallel
+        branches run concurrently as on a real FaaS platform)."""
+        for node in self.nodes.values():
+            node.runtime = float(oracle(node))
+        return self.end_to_end_latency()
+
+    def end_to_end_latency(self) -> float:
+        """Longest path through the DAG using current node runtimes."""
+        finish: Dict[str, float] = {}
+        for name in self.topological_order():
+            start = max((finish[p] for p in self._pred[name]), default=0.0)
+            finish[name] = start + self.nodes[name].runtime
+        return max(finish.values(), default=0.0)
+
+    def path_latency(self, path: Sequence[str]) -> float:
+        return sum(self.nodes[n].runtime for n in path)
+
+    # -- bookkeeping ---------------------------------------------------
+    def configs(self) -> Dict[str, ResourceConfig]:
+        return {n.name: n.config.copy() for n in self.nodes.values()}
+
+    def apply_configs(self, configs: Dict[str, ResourceConfig]) -> None:
+        for name, cfg in configs.items():
+            self.nodes[name].config = cfg.copy()
+
+    def reset_flags(self) -> None:
+        for node in self.nodes.values():
+            node.scheduled = False
+
+    def copy(self) -> "Workflow":
+        wf = Workflow(self.name)
+        for node in self.nodes.values():
+            wf.add_node(Node(name=node.name, config=node.config.copy(),
+                             runtime=node.runtime, scheduled=node.scheduled,
+                             payload=node.payload))
+        for src, dsts in self._succ.items():
+            for dst in dsts:
+                wf._succ[src].append(dst)
+                wf._pred[dst].append(src)
+        return wf

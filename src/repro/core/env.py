@@ -1,0 +1,139 @@
+"""Execution environment abstraction + sampling trace.
+
+Every configuration search (AARC, BO, MAFF) measures candidate configs
+by *executing the workflow* through an :class:`Environment`. The
+environment supplies the runtime oracle (simulator, real platform, or
+TPU roofline model) and the pricing model; the :class:`SearchTrace`
+records one row per sample so the benchmarks can reproduce the paper's
+Fig. 3/5/6/7 directly from any searcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
+from repro.core.dag import Node, Workflow
+from repro.core.resources import ResourceConfig
+
+
+class ExecutionError(RuntimeError):
+    """Raised by an oracle when a function fails under its config (OOM)."""
+
+
+@dataclasses.dataclass
+class Sample:
+    index: int
+    e2e_runtime: float           # end-to-end workflow latency implied by configs
+    cost: float                  # cost of one workflow execution (all functions)
+    configs: Dict[str, ResourceConfig]
+    feasible: bool               # SLO met and no function error
+    error: bool = False          # a function failed (e.g. OOM-killed)
+    trial_time: float = 0.0      # wall time this *sample* consumed during search
+    note: str = ""
+
+
+@dataclasses.dataclass
+class SearchTrace:
+    samples: List[Sample] = dataclasses.field(default_factory=list)
+
+    def record(self, e2e: float, cost: float, wf: Workflow, feasible: bool,
+               error: bool = False, trial_time: Optional[float] = None,
+               note: str = "") -> Sample:
+        if trial_time is None:
+            trial_time = e2e
+        s = Sample(index=len(self.samples), e2e_runtime=e2e, cost=cost,
+                   configs=wf.configs(), feasible=feasible, error=error,
+                   trial_time=trial_time if math.isfinite(trial_time) else 0.0,
+                   note=note)
+        self.samples.append(s)
+        return s
+
+    @property
+    def total_search_runtime(self) -> float:
+        """Σ wall time consumed by all samples (Fig. 5a). A full-workflow
+        execution costs its end-to-end latency; an AARC trial costs only
+        the re-invoked function's runtime."""
+        return sum(s.trial_time for s in self.samples)
+
+    @property
+    def total_search_cost(self) -> float:
+        """Σ execution costs over all samples (Fig. 5b)."""
+        return sum(s.cost for s in self.samples if math.isfinite(s.cost))
+
+    @property
+    def n_samples(self) -> int:
+        return len(self.samples)
+
+    def best_feasible(self) -> Optional[Sample]:
+        feas = [s for s in self.samples if s.feasible]
+        return min(feas, key=lambda s: s.cost) if feas else None
+
+
+class Environment:
+    """Wraps a runtime oracle; executes workflows and logs samples.
+
+    ``clamped_oracle`` (optional) estimates the wall time a *failing*
+    execution burns before the platform kills it (a real OOM'd
+    invocation still consumes search time and money). Without it,
+    failures are recorded with infinite runtime.
+    """
+
+    def __init__(self, oracle: Callable[[Node], float],
+                 pricing: PricingModel = DEFAULT_PRICING,
+                 clamped_oracle: Optional[Callable[[Node], float]] = None):
+        self._oracle = oracle
+        self._clamped = clamped_oracle
+        self.pricing = pricing
+        self.trace = SearchTrace()
+
+    def reset_trace(self) -> None:
+        self.trace = SearchTrace()
+
+    def oracle(self, node: Node) -> float:
+        return self._oracle(node)
+
+    def execute(self, wf: Workflow, slo: float, note: str = "") -> Sample:
+        """Execute the whole workflow under current configs, log a sample.
+
+        A function-level failure (e.g. OOM below the working set) makes
+        the sample infeasible; the failed attempt is charged the
+        thrash-until-killed wall time so search budgets stay honest.
+        """
+        try:
+            e2e = wf.execute(self.oracle)
+        except ExecutionError as exc:
+            if self._clamped is not None:
+                e2e = wf.execute(self._clamped)
+                cost = workflow_cost(self.pricing, wf)
+            else:
+                e2e = math.inf
+                cost = sum(self.pricing.rate(n.config) for n in wf)
+            return self.trace.record(e2e, cost, wf, feasible=False,
+                                     error=True, note=f"error:{exc}")
+        cost = workflow_cost(self.pricing, wf)
+        feasible = e2e <= slo
+        return self.trace.record(e2e, cost, wf, feasible=feasible, note=note)
+
+    def execute_function(self, wf: Workflow, node: Node, slo: float,
+                         note: str = "") -> Sample:
+        """Re-invoke a *single* function under its new config (serverless
+        functions are independently invocable); every other node keeps
+        its cached runtime. The sample's ``trial_time`` is only this
+        invocation's wall time — the heart of AARC's search-time win:
+        one AARC trial costs one function run, one BO/MAFF trial costs a
+        full workflow execution.
+        """
+        try:
+            rt = self.oracle(node)
+            error = False
+        except ExecutionError:
+            rt = self._clamped(node) if self._clamped is not None else math.inf
+            error = True
+        node.runtime = rt if math.isfinite(rt) else node.runtime
+        e2e = wf.end_to_end_latency()
+        cost = workflow_cost(self.pricing, wf)
+        feasible = (not error) and e2e <= slo
+        return self.trace.record(e2e, cost, wf, feasible=feasible, error=error,
+                                 trial_time=rt, note=note)

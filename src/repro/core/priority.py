@@ -1,0 +1,146 @@
+"""Algorithm 2 — Priority Configuration.
+
+Priority-scheduled, decoupled resource deallocation for a *path* of
+sequentially-executed functions under a latency SLO:
+
+  * two ops per function (``cpu`` and ``mem``) enter a max-priority
+    queue with priority ``inf`` (untried ops are most promising),
+  * popping an op *deallocates* a portion (``step`` fraction) of that
+    resource and re-executes the workflow to measure runtime and cost,
+  * on SLO violation / cost increase / invocation error the change is
+    **reverted**, the step is halved (exponential backoff) and the op
+    re-enters with priority 0 until its ``trail`` budget is exhausted,
+  * on success the op re-enters keyed by the realized cost reduction,
+  * the loop ends when the queue is empty or ``MAX_TRAIL`` samples have
+    been consumed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.cost import workflow_cost
+from repro.core.dag import Workflow
+from repro.core.env import Environment
+from repro.core.resources import ResourceConfig, quantize_cpu, quantize_mem
+
+#: per-op exponential-backoff budget (paper: FUNC_TRIAL)
+FUNC_TRIAL = 3
+#: per-path sampling budget (paper: MAX_TRAIL)
+MAX_TRAIL = 64
+#: initial deallocation portion: remove half of the resource
+INITIAL_STEP = 0.5
+
+
+@dataclasses.dataclass
+class Operation:
+    func: str           # node name
+    type: str           # "cpu" | "mem"
+    step: float         # fraction of the resource to deallocate
+    trail: int          # remaining backoff retries
+
+
+def _deallocated(cfg: ResourceConfig, op: Operation) -> ResourceConfig:
+    """Config with a ``step`` portion of ``op.type`` deprived (Table I)."""
+    if op.type == "cpu":
+        return ResourceConfig(cpu=quantize_cpu(cfg.cpu * (1.0 - op.step)),
+                              mem=cfg.mem)
+    if op.type == "mem":
+        return ResourceConfig(cpu=cfg.cpu,
+                              mem=quantize_mem(cfg.mem * (1.0 - op.step)))
+    raise ValueError(f"unknown resource type {op.type!r}")
+
+
+class _MaxPQ:
+    """Max-heap with deterministic FIFO tie-breaking."""
+
+    def __init__(self) -> None:
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def push(self, op: Operation, priority: float) -> None:
+        heapq.heappush(self._heap, (-priority, next(self._seq), op))
+
+    def pop(self) -> Operation:
+        return heapq.heappop(self._heap)[2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+def priority_configuration(
+    wf: Workflow,
+    path: Sequence[str],
+    slo: float,
+    env: Environment,
+    *,
+    global_slo: Optional[float] = None,
+    max_trail: int = MAX_TRAIL,
+    func_trial: int = FUNC_TRIAL,
+    initial_step: float = INITIAL_STEP,
+) -> Dict[str, ResourceConfig]:
+    """Configure the functions along ``path`` so that the path latency
+    stays within ``slo`` at minimum cost. Returns the per-function
+    configs (also left applied on the workflow nodes).
+
+    ``global_slo`` is the end-to-end SLO used for sample bookkeeping
+    (it differs from ``slo`` when configuring a detour sub-path against
+    its sub-SLO).
+    """
+    if global_slo is None:
+        global_slo = slo
+    path = [p for p in path]
+    if not path:
+        return {}
+
+    pq = _MaxPQ()
+    for name in path:                               # Alg 2 line 3-10
+        for rtype in ("cpu", "mem"):
+            pq.push(Operation(func=name, type=rtype, step=initial_step,
+                              trail=func_trial), priority=math.inf)
+
+    prev_cost = workflow_cost(env.pricing, wf)      # last *accepted* cost
+    count = 0
+    while len(pq) > 0 and count < max_trail:        # Alg 2 line 11
+        op = pq.pop()
+        node = wf.nodes[op.func]
+        old_cfg = node.config
+        new_cfg = _deallocated(old_cfg, op)
+        if new_cfg.as_tuple() == old_cfg.as_tuple():
+            # quantizes to no change (resource at floor / step too small):
+            # the op is exhausted and consumes no sample budget.
+            continue
+        count += 1
+
+        old_runtime = node.runtime
+        node.config = new_cfg                       # deallocate(op)
+        # AARC re-invokes only the re-configured function; the rest of
+        # the path keeps its cached (deterministic) runtimes.
+        sample = env.execute_function(
+            wf, node, slo=global_slo,
+            note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
+        path_latency = wf.path_latency(path)
+        violated = (sample.error                    # invocation failed (OOM)
+                    or not math.isfinite(sample.e2e_runtime)
+                    or path_latency > slo
+                    or sample.e2e_runtime > global_slo
+                    or sample.cost >= prev_cost)    # Alg 2 line 14
+
+        if violated:
+            node.config = old_cfg                   # revert (allocate(op))
+            node.runtime = old_runtime
+            op.trail -= 1
+            op.step *= 0.5                          # exponential backoff
+            if op.trail > 0:                        # Alg 2 line 16-18
+                pq.push(op, priority=0.0)
+        else:
+            reduced = prev_cost - sample.cost       # Alg 2 line 20-21
+            prev_cost = sample.cost
+            pq.push(op, priority=reduced)
+
+    for name in path:
+        wf.nodes[name].scheduled = True
+    return {name: wf.nodes[name].config.copy() for name in path}

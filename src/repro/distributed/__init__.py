@@ -1,0 +1,18 @@
+"""Distribution layer: logical-axis sharding rules, mesh helpers,
+collective utilities and fault tolerance.
+
+Params carry *logical* axis names (("embed", "mlp"), ...); a
+:class:`ShardingRules` table maps logical names to mesh axes and yields
+``NamedSharding``s for any param/activation tree. The same model code
+therefore runs on a laptop (trivial mesh) and on the 512-chip
+production mesh unchanged — only the rules differ.
+"""
+from repro.distributed.sharding import (ShardingRules, FSDP_RULES,
+                                        SERVING_RULES, TP_RULES,
+                                        logical_to_sharding, tree_shardings,
+                                        shard_batch_spec)
+
+__all__ = [
+    "ShardingRules", "FSDP_RULES", "SERVING_RULES", "TP_RULES",
+    "logical_to_sharding", "tree_shardings", "shard_batch_spec",
+]

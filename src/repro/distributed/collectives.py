@@ -1,0 +1,113 @@
+"""Explicit collectives: int8-compressed gradient all-reduce with error
+feedback, for the slow cross-pod (DCN/ICI-bridge) links.
+
+Under GSPMD the intra-pod gradient reduction is automatic; compression
+has to be *explicit*, so the cross-pod sync runs under ``shard_map``
+over the ``pod`` mesh axis only:
+
+    per-pod grads --quantize(int8 + per-leaf scale)--> psum over "pod"
+    --dequantize--> mean; the quantization error is fed back into the
+    next step's gradients (error feedback keeps SGD unbiased in the
+    long run — Karimireddy et al. 2019).
+
+4x less cross-pod traffic at bf16 (8x at fp32) for one extra VPU pass.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_int8(tree: PyTree, axis_name: str) -> PyTree:
+    """Quantized all-reduce-mean of a pytree over a shard_map axis.
+
+    int8 payloads are summed in int32 (no overflow below ~2^23 pods);
+    per-leaf scales are max-reduced so every pod dequantizes alike.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(x):
+        q, scale = quantize_int8(x)
+        scale = jax.lax.pmax(scale, axis_name)
+        # requantize against the agreed scale so the sum is consistent
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * scale / n).astype(x.dtype)
+
+    return jax.tree.map(one, tree)
+
+
+def cross_pod_grad_sync(grads: PyTree, error: Optional[PyTree],
+                        axis_name: str = "pod"
+                        ) -> Tuple[PyTree, PyTree]:
+    """int8 all-reduce-mean with error feedback.
+
+    Call inside shard_map over the pod axis. Standard EF-SGD form:
+    ``g_eff = g + e;  q = Q(g_eff);  sync = psum(q)/n;
+    e' = g_eff - deQ(q)`` (the locally-dropped quantization residual
+    re-enters next step). Returns (synced fp32 mean, new_error).
+    """
+    if error is not None:
+        grads = jax.tree.map(
+            lambda g, e: (g.astype(jnp.float32) + e).astype(g.dtype),
+            grads, error)
+    n = jax.lax.psum(1, axis_name)
+
+    def one(x):
+        _, scale = quantize_int8(x)
+        scale = jax.lax.pmax(scale, axis_name)        # agreed scale
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        local_dq = q * scale
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        synced = (total.astype(jnp.float32) * scale / n).astype(x.dtype)
+        new_err = x.astype(jnp.float32) - local_dq
+        return synced, new_err
+
+    pairs = jax.tree.map(one, grads)
+    is_pair = lambda t: isinstance(t, tuple)
+    synced = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_error = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return synced, new_error
+
+
+def make_compressed_sync(mesh: Mesh, state_axes_spec: PyTree = None):
+    """Wrap grads -> synced grads via shard_map over the ``pod`` axis.
+
+    Everything stays GSPMD-sharded over the other axes (``auto``); only
+    the pod dim is manual. Returns None if the mesh has no pod axis.
+    """
+    if "pod" not in mesh.shape or mesh.shape["pod"] == 1:
+        return None
+
+    other = frozenset(a for a in mesh.axis_names if a != "pod")
+
+    def sync(grads: PyTree, error: PyTree) -> Tuple[PyTree, PyTree]:
+        def inner(g, e):
+            return cross_pod_grad_sync(g, e, "pod")
+
+        specs = jax.tree.map(lambda _: P(), grads)
+        from jax.experimental.shard_map import shard_map
+        fn = shard_map(inner, mesh=mesh,
+                       in_specs=(specs, specs), out_specs=(specs, specs),
+                       check_rep=False, auto=other)
+        return fn(grads, error)
+
+    return sync

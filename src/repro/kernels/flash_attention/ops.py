@@ -1,0 +1,31 @@
+"""Public jit'd wrapper: (b, s, h, d) layout in, kernel layout inside."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_kv",
+                                    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Causal GQA flash attention.
+
+    q: (b, s, h, d); k/v: (b, s, hkv, d); returns (b, s, h, d).
+    The (b, h, s, d) transpose keeps head_dim on the 128-lane minor
+    axis and seq on the sublane axis inside the kernel.
+    """
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_kv=block_kv, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense softmax)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (b, s, h, d); k/v: (b, s, hkv, d). fp32 softmax, GQA grouping."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+    if causal:
+        skv = k.shape[1]
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)

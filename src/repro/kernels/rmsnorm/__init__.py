@@ -1,0 +1,3 @@
+from repro.kernels.rmsnorm.ops import fused_rmsnorm
+
+__all__ = ["fused_rmsnorm"]

@@ -1,0 +1,25 @@
+"""Public jit'd wrapper: any (..., d) shape."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import fused_rmsnorm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def fused_rmsnorm(x: jnp.ndarray, residual: jnp.ndarray, w: jnp.ndarray, *,
+                  eps: float = 1e-6, interpret: bool = False):
+    """Fused (x + residual) -> RMSNorm. Returns (normed, new_residual)."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    r2 = residual.reshape(-1, shape[-1])
+    rows = x2.shape[0]
+    block = rows if rows < 256 else 256
+    while rows % block:
+        block //= 2
+    y, nr = fused_rmsnorm_2d(x2, r2, w, eps=eps, block_rows=block,
+                             interpret=interpret)
+    return y.reshape(shape), nr.reshape(shape)

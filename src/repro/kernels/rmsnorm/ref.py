@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused residual + RMSNorm."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+def fused_rmsnorm_ref(x, residual, w, *, eps: float = 1e-6):
+    s = (x.astype(jnp.float32) + residual.astype(jnp.float32)).astype(x.dtype)
+    return rms_norm(s, w, eps=eps), s

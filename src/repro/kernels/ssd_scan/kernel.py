@@ -1,0 +1,130 @@
+"""Mamba2 SSD chunked scan — TPU Pallas kernels (two-pass design).
+
+The GPU SSD kernel fuses a warp-level associative scan; the TPU
+adaptation splits the work by arithmetic intensity:
+
+  pass 1  ``_intra_kernel``   grid (batch, chunk): dense Q×Q decay-
+          weighted matmuls on the MXU produce the *intra-chunk* output
+          and each chunk's state summary (S_c, decay_c).
+  host    a tiny ``lax.scan`` over seq/chunk steps combines the chunk
+          summaries into incoming states h_{c-1} (O(c·h·n·p) work —
+          bandwidth-trivial, latency-bound, pointless to kernelize).
+  pass 2  ``_inter_kernel``   grid (batch, chunk): applies the incoming
+          state through C·h_{c-1}·exp(cum) and adds the intra output.
+
+All within-chunk tensors are VMEM-resident blocks; chunk=128 keeps the
+(q × q) decay matrix MXU-aligned. Accumulation is fp32 throughout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _intra_kernel(xh_ref, bm_ref, cm_ref, cum_ref, dt_ref,
+                  y_ref, s_ref, dec_ref):
+    """One (batch, chunk) cell.
+
+    xh: (q, h, p); bm/cm: (q, n); cum: (q, h) inclusive cumsum of
+    dt*A (log-decay); dt: (q, h).
+    Outputs: y (q, h, p) intra-chunk, s (h, n, p) summary, dec (h,).
+    """
+    xh = xh_ref[0, 0].astype(jnp.float32)
+    bm = bm_ref[0, 0].astype(jnp.float32)
+    cm = cm_ref[0, 0].astype(jnp.float32)
+    cum = cum_ref[0, 0].astype(jnp.float32)          # (q, h)
+    dt = dt_ref[0, 0].astype(jnp.float32)
+    q, h, p = xh.shape
+
+    # decay matrix L[i, j, h] = exp(cum_i - cum_j), lower-triangular
+    li = cum[:, None, :] - cum[None, :, :]                       # (q, k, h)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril = (cols <= rows)[:, :, None]
+    l_mat = jnp.where(tril, jnp.exp(jnp.where(tril, li, 0.0)), 0.0)
+    # G[i, j] = C_i · B_j  — one (q, n) x (n, q) MXU matmul
+    g_mat = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())))
+    m_mat = g_mat[:, :, None] * l_mat * dt[None, :, :]           # (q, k, h)
+    # y[i, h, p] = Σ_j m[i, j, h] x[j, h, p] — batched over h on the MXU
+    y = jax.lax.dot_general(m_mat.transpose(2, 0, 1),
+                            xh.transpose(1, 0, 2),
+                            (((2,), (1,)), ((0,), (0,))))        # (h, q, p)
+    y_ref[0, 0] = y.transpose(1, 0, 2).astype(y_ref.dtype)
+
+    # chunk summary S_c[h, n, p] = Σ_j exp(cum_q - cum_j) dt_j B_j x_j^T
+    w = jnp.exp(cum[-1:, :] - cum) * dt                          # (q, h)
+    wx = xh * w[:, :, None]                                      # (q, h, p)
+    s = jax.lax.dot_general(bm, wx.reshape(q, h * p),
+                            (((0,), (0,)), ((), ())))            # (n, h*p)
+    s_ref[0, 0] = s.reshape(-1, h, p).transpose(1, 0, 2).astype(s_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(cum[-1, :]).astype(dec_ref.dtype)
+
+
+def _inter_kernel(cm_ref, cum_ref, hprev_ref, y_intra_ref, y_ref):
+    """y[i,h,p] = y_intra[i,h,p] + exp(cum_i) * (C_i · h_prev[h,:,:])."""
+    cm = cm_ref[0, 0].astype(jnp.float32)             # (q, n)
+    cum = cum_ref[0, 0].astype(jnp.float32)           # (q, h)
+    hprev = hprev_ref[0, 0].astype(jnp.float32)       # (h, n, p)
+    q, h = cum.shape
+    # (h, q, n) @ (h, n, p) -> (h, q, p)
+    ch = jax.lax.dot_general(
+        jnp.broadcast_to(cm[None], (h, q, cm.shape[1])), hprev,
+        (((2,), (1,)), ((0,), (0,))))
+    y_inter = ch.transpose(1, 0, 2) * jnp.exp(cum)[:, :, None]
+    y_ref[0, 0] = (y_intra_ref[0, 0].astype(jnp.float32)
+                + y_inter).astype(y_ref.dtype)
+
+
+def ssd_intra(xh, bm, cm, cum, dt, *, interpret: bool = False):
+    """xh: (b, c, q, h, p); bm/cm: (b, c, q, n); cum/dt: (b, c, q, h)."""
+    b, c, q, h, p = xh.shape
+    n = bm.shape[-1]
+    spec_qhp = pl.BlockSpec((1, 1, q, h, p), lambda ib, ic: (ib, ic, 0, 0, 0))
+    spec_qn = pl.BlockSpec((1, 1, q, n), lambda ib, ic: (ib, ic, 0, 0))
+    spec_qh = pl.BlockSpec((1, 1, q, h), lambda ib, ic: (ib, ic, 0, 0))
+    return pl.pallas_call(
+        _intra_kernel,
+        grid=(b, c),
+        in_specs=[spec_qhp, spec_qn, spec_qn, spec_qh, spec_qh],
+        out_specs=[
+            spec_qhp,
+            pl.BlockSpec((1, 1, h, n, p), lambda ib, ic: (ib, ic, 0, 0, 0)),
+            pl.BlockSpec((1, 1, h), lambda ib, ic: (ib, ic, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, h, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, c, h), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xh, bm, cm, cum, dt)
+
+
+def ssd_inter(cm, cum, h_prevs, y_intra, out_dtype, *,
+              interpret: bool = False):
+    """cm: (b, c, q, n); cum: (b, c, q, h); h_prevs: (b, c, h, n, p)."""
+    b, c, q, n = cm.shape
+    h = cum.shape[-1]
+    p = h_prevs.shape[-1]
+    return pl.pallas_call(
+        _inter_kernel,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda ib, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, q, h), lambda ib, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, 1, h, n, p), lambda ib, ic: (ib, ic, 0, 0, 0)),
+            pl.BlockSpec((1, 1, q, h, p), lambda ib, ic: (ib, ic, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, h, p),
+                               lambda ib, ic: (ib, ic, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, q, h, p), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(cm, cum, h_prevs, y_intra)

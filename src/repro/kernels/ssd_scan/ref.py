@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the SSD scan kernel.
+
+Delegates to the chunked reference in repro.models.mamba2 (which is
+itself validated against a naive per-token recurrence in the tests).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import SSMConfig, _ssd_chunked
+
+
+def ssd_scan_ref(xh, b_mat, c_mat, log_a, dt, *, chunk: int = 128,
+                 h0: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    cfg = SSMConfig(state=b_mat.shape[-1], head_dim=xh.shape[-1], chunk=chunk)
+    return _ssd_chunked(xh, b_mat, c_mat, log_a, dt, cfg, h0=h0)
+
+
+def ssd_scan_naive(xh, b_mat, c_mat, log_a, dt):
+    """O(s) per-token recurrence — the ground-truth semantics."""
+    import jax
+
+    def step(h, inp):
+        x_t, b_t, c_t, la_t, dt_t = inp
+        h = h * jnp.exp(la_t)[:, :, None, None] + \
+            jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, h)
+        return h, y
+
+    b, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    h0 = jnp.zeros((b, h, n, p), jnp.float32)
+    tr = lambda a: jnp.moveaxis(a, 1, 0)
+    hn, ys = jax.lax.scan(step, h0, (tr(xh.astype(jnp.float32)),
+                                     tr(b_mat.astype(jnp.float32)),
+                                     tr(c_mat.astype(jnp.float32)),
+                                     tr(log_a.astype(jnp.float32)),
+                                     tr(dt.astype(jnp.float32))))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), hn

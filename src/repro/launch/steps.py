@@ -1,0 +1,125 @@
+"""Step builders: (arch config, shape, mesh) -> lowered jitted steps.
+
+Each builder assembles ShapeDtypeStruct inputs + NamedShardings from the
+logical-axis rules and returns ``jax.jit(step).lower(...)`` without
+allocating anything — the object the dry-run compiles and the roofline
+analysis reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import Shape
+from repro.distributed.sharding import (FSDP_RULES, ShardingRules,
+                                        activation_sharding, tree_shardings)
+from repro.models.model import Model, ModelConfig
+from repro.training.data import batch_axes_for, batch_specs
+from repro.training.optimizer import (AdamWConfig, adamw_init,
+                                      train_state_axes)
+from repro.training.train_step import make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything a dry-run / driver needs for one (arch x shape x mesh)."""
+    kind: str
+    lowered: Any                 # jax .lower() result
+    in_specs: Tuple
+    in_shardings: Tuple
+    model: Model
+
+
+def _abstract_state(model: Model):
+    specs, axes = model.abstract_params()
+    state_specs = jax.eval_shape(adamw_init, specs)
+    return state_specs, train_state_axes(axes)
+
+
+def build_train_step(cfg: ModelConfig, shape: Shape, mesh, *,
+                     rules: ShardingRules = FSDP_RULES,
+                     opt_cfg: Optional[AdamWConfig] = None,
+                     microbatches: int = 1,
+                     donate: bool = True,
+                     unroll_accum: bool = False) -> StepBundle:
+    model = Model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+    state_specs, state_axes = _abstract_state(model)
+    state_sh = tree_shardings(mesh, rules, state_axes, state_specs)
+
+    b_specs = batch_specs(cfg, shape, kind="train")
+    b_axes = batch_axes_for(b_specs)
+    b_sh = tree_shardings(mesh, rules, b_axes, b_specs)
+
+    step = make_train_step(model, opt_cfg, microbatches=microbatches,
+                           unroll=unroll_accum)
+    jitted = jax.jit(step,
+                     in_shardings=(state_sh, b_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,) if donate else ())
+    with mesh, activation_sharding(mesh, rules):
+        lowered = jitted.lower(state_specs, b_specs)
+    return StepBundle("train", lowered, (state_specs, b_specs),
+                      (state_sh, b_sh), model)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: Shape, mesh, *,
+                       rules: ShardingRules = FSDP_RULES) -> StepBundle:
+    model = Model(cfg)
+    p_specs, p_axes = model.abstract_params()
+    p_sh = tree_shardings(mesh, rules, p_axes, p_specs)
+
+    b_specs = batch_specs(cfg, shape, kind="prefill")
+    b_axes = batch_axes_for(b_specs)
+    b_sh = tree_shardings(mesh, rules, b_axes, b_specs)
+
+    max_len = shape.seq_len
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+    with mesh, activation_sharding(mesh, rules):
+        lowered = jitted.lower(p_specs, b_specs)
+    return StepBundle("prefill", lowered, (p_specs, b_specs),
+                      (p_sh, b_sh), model)
+
+
+def build_serve_step(cfg: ModelConfig, shape: Shape, mesh, *,
+                     rules: ShardingRules = FSDP_RULES,
+                     donate: bool = True) -> StepBundle:
+    """One-token decode against a seq_len-deep cache (decode shapes)."""
+    model = Model(cfg)
+    p_specs, p_axes = model.abstract_params()
+    p_sh = tree_shardings(mesh, rules, p_axes, p_specs)
+
+    c_specs, c_axes = model.abstract_cache(shape.global_batch, shape.seq_len)
+    c_sh = tree_shardings(mesh, rules, c_axes, c_specs)
+
+    t_specs = batch_specs(cfg, shape, kind="decode")
+    t_sh = tree_shardings(mesh, rules,
+                          {"tokens": ("batch", None)}, t_specs)
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, t_sh["tokens"]),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,) if donate else ())
+    with mesh, activation_sharding(mesh, rules):
+        lowered = jitted.lower(p_specs, c_specs, t_specs["tokens"])
+    return StepBundle("decode", lowered, (p_specs, c_specs, t_specs),
+                      (p_sh, c_sh, t_sh), model)
+
+
+def build_step(cfg: ModelConfig, shape: Shape, mesh, **kw) -> StepBundle:
+    builder = {"train": build_train_step, "prefill": build_prefill_step,
+               "decode": build_serve_step}[shape.kind]
+    return builder(cfg, shape, mesh, **kw)

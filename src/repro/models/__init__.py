@@ -1,0 +1,11 @@
+"""LM substrate: model definitions for the 10 assigned architectures.
+
+Pure-functional JAX: params are pytrees of jnp arrays; every leaf has a
+parallel *logical axis* annotation consumed by
+:mod:`repro.distributed.sharding` to derive PartitionSpecs. Layer
+stacks use ``lax.scan`` over stacked params so HLO stays compact for
+100-layer models.
+"""
+from repro.models.model import (Model, ModelConfig, build_model)
+
+__all__ = ["Model", "ModelConfig", "build_model"]

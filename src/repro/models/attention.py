@@ -1,0 +1,247 @@
+"""Multi-head attention: GQA, RoPE, qk-norm, QKV bias, KV cache, cross-attn.
+
+Three execution paths selected by ``impl``:
+  * ``"xla"``              — pure jnp einsum (dry-run / any backend),
+  * ``"pallas"``           — TPU Pallas flash kernel (target hardware),
+  * ``"pallas_interpret"`` — same kernel, interpreter mode (CPU tests).
+
+Softmax accumulates in fp32. Decode attends a single new token against
+a sharded KV cache (sequence dim shardable over the model axis — the
+softmax/contraction collectives are inserted by GSPMD, which is the
+flash-decode communication pattern).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+def make_attention_params(key, d_model: int, n_heads: int, kv_heads: int,
+                          head_dim: int, dtype, *, qkv_bias: bool = False,
+                          qk_norm: bool = False,
+                          kv_d_model: Optional[int] = None):
+    """kv_d_model: source dim for K/V projections (cross-attention)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    kv_d = kv_d_model or d_model
+    params: Dict[str, jnp.ndarray] = {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(kk, kv_d, kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, kv_d, kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype,
+                         scale=(n_heads * head_dim) ** -0.5),
+    }
+    axes = {"wq": ("embed", "qkv"), "wk": ("embed", "kv_qkv"),
+            "wv": ("embed", "kv_qkv"), "wo": ("qkv", "embed")}
+    if qkv_bias:
+        params.update({"bq": jnp.zeros((n_heads * head_dim,), dtype),
+                       "bk": jnp.zeros((kv_heads * head_dim,), dtype),
+                       "bv": jnp.zeros((kv_heads * head_dim,), dtype)})
+        axes.update({"bq": ("qkv",), "bk": ("kv_qkv",), "bv": ("kv_qkv",)})
+    if qk_norm:
+        params.update({"q_norm": jnp.ones((head_dim,), dtype),
+                       "k_norm": jnp.ones((head_dim,), dtype)})
+        axes.update({"q_norm": ("head_dim",), "k_norm": ("head_dim",)})
+    return params, axes
+
+
+def _project_qkv(params: PyTree, x: jnp.ndarray, kv_x: jnp.ndarray,
+                 n_heads: int, kv_heads: int, head_dim: int,
+                 positions: Optional[jnp.ndarray], kv_positions: Optional[jnp.ndarray],
+                 rope_theta: Optional[float]):
+    b = x.shape[0]
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", kv_x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", kv_x, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, -1, n_heads, head_dim)
+    k = k.reshape(b, -1, kv_heads, head_dim)
+    v = v.reshape(b, -1, kv_heads, head_dim)
+    if "q_norm" in params:                       # qwen3-style per-head qk-norm
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if rope_theta is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, kv_positions, rope_theta)
+    return q, k, v
+
+
+#: above this query length the GQA groups are expanded (repeat k/v to
+#: the full head count) so the score tensor keeps a single head dim
+#: that shards over the model axis — without it GSPMD replicates the
+#: (hkv, group, sq, skv) scores when neither factor divides the axis
+#: (§Perf hillclimb C1: llama-90b train memory term 136.8 s -> see
+#: EXPERIMENTS.md). Decode (sq = 1) keeps the grouped form: repeating
+#: there would multiply KV-cache read traffic by `group`.
+GQA_EXPAND_MIN_SQ = 128
+
+
+def _sdpa_xla(q, k, v, *, causal: bool, q_offset: int = 0,
+              kv_len_mask: Optional[jnp.ndarray] = None):
+    """q: (b, sq, h, d); k/v: (b, skv, hkv, d) with GQA head grouping."""
+    from repro.distributed.sharding import constrain
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    group = h // hkv
+    skv = k.shape[1]
+    if group > 1 and sq >= GQA_EXPAND_MIN_SQ:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+        hkv, group = h, 1
+    if group == 1:
+        # scores shard over heads when divisible, else over the q-seq
+        # dim (spec assigns heads_act first; act_seq picks the model
+        # axis up only when heads can't — e.g. starcoder2's 36 heads)
+        score_axes = ("batch", "heads_act", "act_seq", None)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        scores = constrain(scores / (d ** 0.5), score_axes)
+        if causal:
+            mask = (jnp.arange(skv)[None, :]
+                    <= (jnp.arange(sq) + q_offset)[:, None])
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        if kv_len_mask is not None:
+            scores = jnp.where(kv_len_mask[:, None, None, :], scores,
+                               NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        probs = constrain(probs, score_axes)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        return out
+    qg = q.reshape(b, sq, hkv, group, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / (d ** 0.5)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len_mask is not None:                 # (b, skv) valid-key mask
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+#: sequences longer than this use the scan-over-query-blocks path so the
+#: score matrix never materializes at (S, S).
+CHUNKED_SEQ_THRESHOLD = 2048
+Q_BLOCK = 1024
+
+#: dry-run measurement hook: unroll the q-block scan so XLA cost
+#: analysis counts every block (while bodies are otherwise counted
+#: once). Set via repro.launch measurement paths only.
+UNROLL_QBLOCK_SCAN = False
+
+
+def _sdpa_xla_chunked(q, k, v, *, causal: bool, q_block: int = Q_BLOCK):
+    """Blockwise attention: scan over query blocks, full keys per block.
+
+    Peak memory is O(q_block * S) instead of O(S^2) — the long-prefill
+    path (32k+). Equivalent math to :func:`_sdpa_xla` (fp32 softmax).
+    """
+    b, sq, h, d = q.shape
+    assert sq % q_block == 0, f"seq {sq} not divisible by q_block {q_block}"
+    nblk = sq // q_block
+    qb = q.reshape(b, nblk, q_block, h, d).transpose(1, 0, 2, 3, 4)
+
+    def step(_, args):
+        i, qi = args                                  # qi: (b, q_block, h, d)
+        oi = _sdpa_xla(qi, k, v, causal=causal, q_offset=i * q_block)
+        return None, oi
+
+    _, ob = jax.lax.scan(step, None, (jnp.arange(nblk), qb),
+                         unroll=UNROLL_QBLOCK_SCAN)
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+
+
+def sdpa(q, k, v, *, causal: bool, impl: str = "xla"):
+    """Dispatch: Pallas flash kernel, chunked-XLA, or dense-XLA."""
+    if impl in ("pallas", "pallas_interpret") and causal:
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(q, k, v,
+                                         interpret=(impl == "pallas_interpret"))
+    if q.shape[1] > CHUNKED_SEQ_THRESHOLD and q.shape[1] == k.shape[1]:
+        return _sdpa_xla_chunked(q, k, v, causal=causal)
+    return _sdpa_xla(q, k, v, causal=causal)
+
+
+def attention(params: PyTree, x: jnp.ndarray, *, n_heads: int, kv_heads: int,
+              head_dim: int, causal: bool = True,
+              rope_theta: Optional[float] = None,
+              positions: Optional[jnp.ndarray] = None,
+              kv_x: Optional[jnp.ndarray] = None,
+              impl: str = "xla") -> jnp.ndarray:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    b, s, _ = x.shape
+    kv_src = kv_x if kv_x is not None else x
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    kv_positions = (jnp.broadcast_to(jnp.arange(kv_src.shape[1]), (b, kv_src.shape[1]))
+                    if kv_x is not None else positions)
+    q, k, v = _project_qkv(params, x, kv_src, n_heads, kv_heads, head_dim,
+                           positions, kv_positions,
+                           rope_theta if kv_x is None else None)
+    out = sdpa(q, k, v, causal=causal and kv_x is None,
+               impl=impl if kv_x is None else "xla")
+    out = out.reshape(b, s, n_heads * head_dim)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"])
+
+
+# --------------------------------------------------------------------------
+# KV-cache decode
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, kv_heads: int, max_len: int, head_dim: int,
+                  dtype) -> Dict[str, jnp.ndarray]:
+    return {"k": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, kv_heads, head_dim), dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_attention(params: PyTree, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                     *, n_heads: int, kv_heads: int, head_dim: int,
+                     rope_theta: Optional[float] = None) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode: x (b, 1, d) against cache (b, S, hkv, hd).
+
+    The new K/V is written at position ``length``; attention masks keys
+    beyond ``length``. Cache seq dim can be sharded over the model axis.
+    """
+    b = x.shape[0]
+    positions = cache["length"][:, None]                       # (b, 1)
+    q, k_new, v_new = _project_qkv(params, x, x, n_heads, kv_heads, head_dim,
+                                   positions, positions, rope_theta)
+    max_len = cache["k"].shape[1]
+    onehot = jax.nn.one_hot(cache["length"], max_len, dtype=x.dtype)  # (b, S)
+    k = cache["k"] + onehot[:, :, None, None] * k_new                 # scatter
+    v = cache["v"] + onehot[:, :, None, None] * v_new
+    valid = jnp.arange(max_len)[None, :] <= cache["length"][:, None]  # (b, S)
+    out = _sdpa_xla(q, k, v, causal=False, kv_len_mask=valid)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    new_cache = {"k": k, "v": v, "length": cache["length"] + 1}
+    return out, new_cache
+
+
+def prefill_into_cache(params: PyTree, x: jnp.ndarray, *, n_heads: int,
+                       kv_heads: int, head_dim: int, max_len: int,
+                       rope_theta: Optional[float] = None,
+                       impl: str = "xla") -> Tuple[jnp.ndarray, Dict]:
+    """Causal prefill that also returns the populated KV cache."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(params, x, x, n_heads, kv_heads, head_dim,
+                           positions, positions, rope_theta)
+    out = sdpa(q, k, v, causal=True, impl=impl)
+    out = out.reshape(b, s, n_heads * head_dim)
+    out = jnp.einsum("bse,ed->bsd", out, params["wo"])
+    pad = max_len - s
+    cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+             "length": jnp.full((b,), s, jnp.int32)}
+    return out, cache

@@ -1,0 +1,162 @@
+"""Shared neural-net layers (pure jnp, shardable).
+
+Conventions:
+  * params are dicts of jnp arrays; every creator returns
+    ``(params, axes)`` where ``axes`` mirrors the param tree with
+    tuples of logical axis names (see repro.distributed.sharding).
+  * compute dtype is the activation dtype (bf16 on TPU); norms and
+    softmax accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, *, scale: Optional[float] = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return _normal(key, (in_dim, out_dim), dtype, scale)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray], eps: float = 1e-6):
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: Optional[jnp.ndarray],
+               bias: Optional[jnp.ndarray], eps: float = 1e-5):
+    """Parametric LN; pass weight=bias=None for OLMo's non-parametric LN."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        out = out * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def make_norm_params(key, d: int, norm_type: str, dtype) -> Tuple[PyTree, PyTree]:
+    if norm_type == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}, {"w": ("embed",)}
+    if norm_type == "layernorm":
+        return ({"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+                {"w": ("embed",), "b": ("embed",)})
+    if norm_type == "nonparametric":       # OLMo
+        return {}, {}
+    raise ValueError(norm_type)
+
+
+def apply_norm(params: PyTree, x: jnp.ndarray, norm_type: str):
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["w"])
+    if norm_type == "layernorm":
+        return layer_norm(x, params["w"], params["b"])
+    if norm_type == "nonparametric":
+        return layer_norm(x, None, None)
+    raise ValueError(norm_type)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                     # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def make_mlp_params(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        params = {"gate": dense_init(k1, d_model, d_ff, dtype),
+                  "up": dense_init(k2, d_model, d_ff, dtype),
+                  "down": dense_init(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5)}
+        axes = {"gate": ("embed", "mlp"), "up": ("embed", "mlp"),
+                "down": ("mlp", "embed")}
+    elif mlp_type == "gelu":
+        params = {"up": dense_init(k1, d_model, d_ff, dtype),
+                  "up_b": jnp.zeros((d_ff,), dtype),
+                  "down": dense_init(k2, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+                  "down_b": jnp.zeros((d_model,), dtype)}
+        axes = {"up": ("embed", "mlp"), "up_b": ("mlp",),
+                "down": ("mlp", "embed"), "down_b": ("embed",)}
+    else:
+        raise ValueError(mlp_type)
+    return params, axes
+
+
+def apply_mlp(params: PyTree, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["gate"])
+        up = jnp.einsum("...d,df->...f", x, params["up"])
+        h = jax.nn.silu(gate) * up
+        return jnp.einsum("...f,fd->...d", h, params["down"])
+    if mlp_type == "gelu":
+        h = jnp.einsum("...d,df->...f", x, params["up"]) + params["up_b"]
+        h = jax.nn.gelu(h)
+        return jnp.einsum("...f,fd->...d", h, params["down"]) + params["down_b"]
+    raise ValueError(mlp_type)
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+
+def make_embed_params(key, vocab: int, d_model: int, dtype, tie: bool):
+    k1, k2 = jax.random.split(key)
+    params = {"tok": _normal(k1, (vocab, d_model), dtype, d_model ** -0.5)}
+    axes = {"tok": ("vocab", "embed")}
+    if not tie:
+        params["out"] = _normal(k2, (d_model, vocab), dtype, d_model ** -0.5)
+        axes["out"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed_tokens(params: PyTree, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["tok"][tokens]
+
+
+def unembed(params: PyTree, x: jnp.ndarray) -> jnp.ndarray:
+    if "out" in params:
+        return jnp.einsum("...d,dv->...v", x, params["out"])
+    return jnp.einsum("...d,vd->...v", x, params["tok"])

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality) block, chunkwise-parallel.
+
+TPU adaptation of the CUDA SSD kernel: the sequence is partitioned into
+chunks of ``chunk`` tokens; within-chunk interactions are dense
+(Q×Q) matmuls that map onto the MXU, and the cross-chunk state is a
+short ``lax.scan`` recurrence over ``seq/chunk`` steps — the standard
+chunked-scan reformulation that replaces the GPU's warp-level
+associative scan with systolic-friendly block matmuls. A Pallas kernel
+for the within-chunk part lives in ``repro/kernels/ssd_scan``.
+
+State per head: h ∈ R^{N×P} with N = ssm_state, P = head_dim. Decode
+is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state: int = 64          # N
+    head_dim: int = 64       # P
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk: int = 128
+
+
+def d_inner(d_model: int, cfg: SSMConfig) -> int:
+    return cfg.expand * d_model
+
+
+def n_heads(d_model: int, cfg: SSMConfig) -> int:
+    return d_inner(d_model, cfg) // cfg.head_dim
+
+
+def make_mamba2_params(key, d_model: int, cfg: SSMConfig, dtype):
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    n = cfg.state
+    ks = jax.random.split(key, 8)
+    params: Dict[str, jnp.ndarray] = {
+        "z_proj": dense_init(ks[0], d_model, di, dtype),
+        "x_proj": dense_init(ks[1], d_model, di, dtype),
+        "b_proj": dense_init(ks[2], d_model, n, dtype),
+        "c_proj": dense_init(ks[3], d_model, n, dtype),
+        "dt_proj": dense_init(ks[4], d_model, h, dtype),
+        "conv_x": (jax.random.normal(ks[5], (cfg.conv_kernel, di), jnp.float32)
+                   * cfg.conv_kernel ** -0.5).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = -exp(A_log)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[6], di, d_model, dtype, scale=di ** -0.5),
+    }
+    axes = {"z_proj": ("embed", "inner"), "x_proj": ("embed", "inner"),
+            "b_proj": ("embed", "state"), "c_proj": ("embed", "state"),
+            "dt_proj": ("embed", "ssm_heads"), "conv_x": ("conv", "inner"),
+            "A_log": ("ssm_heads",), "dt_bias": ("ssm_heads",),
+            "D": ("ssm_heads",), "norm_w": ("inner",),
+            "out_proj": ("inner", "embed")}
+    return params, axes
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq. x: (b, s, ch), w: (k, ch)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):                      # k is tiny (4): unrolled taps
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssd_chunked(xh, b_mat, c_mat, log_a, dt, cfg: SSMConfig,
+                 h0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    xh:    (b, s, h, p)  inputs per head
+    b_mat: (b, s, n)     input->state projection (shared across heads)
+    c_mat: (b, s, n)     state->output projection
+    log_a: (b, s, h)     per-step log decay (dt * A, negative)
+    dt:    (b, s, h)     step sizes
+    returns y (b, s, h, p), final state (b, h, n, p)
+    """
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    q = min(cfg.chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    c = s // q
+    xh = xh.reshape(bsz, c, q, h, p)
+    bm = b_mat.reshape(bsz, c, q, n)
+    cm = c_mat.reshape(bsz, c, q, n)
+    la = log_a.reshape(bsz, c, q, h)
+    dt = dt.reshape(bsz, c, q, h)
+
+    cum = jnp.cumsum(la, axis=2)                                  # (b,c,q,h)
+    # intra-chunk: decay matrix L[i,j] = exp(cum_i - cum_j), i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # (b,c,q,k,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    l_mat = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    g_mat = jnp.einsum("bcqn,bckn->bcqk", cm, bm)                 # (b,c,q,k)
+    m_mat = g_mat[..., None] * l_mat * dt[:, :, None, :, :]       # (b,c,q,k,h)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m_mat, xh)
+
+    # chunk summaries: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                  # (b,c,q,h)
+    w = decay_end * dt                                            # (b,c,q,h)
+    s_chunk = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w, bm, xh)     # (b,c,h,n,p)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (b,c,h)
+
+    def step(hprev, inp):
+        s_c, dec = inp                                            # (b,h,n,p),(b,h)
+        hnew = hprev * dec[..., None, None] + s_c
+        return hnew, hprev                                        # emit h_{c-1}
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, n, p), jnp.float32)   # state carried in fp32
+    h0 = h0.astype(jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (s_chunk.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                    # (b,c,h,n,p)
+
+    # inter-chunk: y_i += C_i · h_{c-1} · exp(cum_i)
+    c_decay = cm[:, :, :, None, :] * jnp.exp(cum)[..., None]      # (b,c,q,h,n)
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", c_decay, h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def apply_mamba2(params: PyTree, x: jnp.ndarray, cfg: SSMConfig,
+                 use_kernel: bool = False, interpret: bool = False,
+                 return_state: bool = False):
+    """Full-sequence (train / prefill) Mamba2 block. x: (b, s, d)."""
+    bsz, s, _ = x.shape
+    di = params["x_proj"].shape[1]
+    h = params["A_log"].shape[0]
+    p = di // h
+
+    z = jnp.einsum("bsd,de->bse", x, params["z_proj"])
+    xr_pre = jnp.einsum("bsd,de->bse", x, params["x_proj"])   # pre-conv (cache)
+    xr = jax.nn.silu(_causal_conv(xr_pre, params["conv_x"]))
+    bm = jnp.einsum("bsd,dn->bsn", x, params["b_proj"])
+    cm = jnp.einsum("bsd,dn->bsn", x, params["c_proj"])
+
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])                                 # (h,)
+    log_a = dt * a                                                # (b,s,h)
+
+    xh = xr.reshape(bsz, s, h, p)
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, h_last = ssd_ops.ssd_scan(xh, bm, cm, log_a, dt, chunk=cfg.chunk,
+                                     interpret=interpret)
+    else:
+        y, h_last = _ssd_chunked(xh, bm, cm, log_a, dt, cfg)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z).astype(y.dtype), params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    return (out, h_last, xr_pre) if return_state else out
+
+
+def apply_mamba2_with_state(params: PyTree, x: jnp.ndarray, cfg: SSMConfig,
+                            use_kernel: bool = False, interpret: bool = False
+                            ) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill entry point: full-seq output + decode-ready cache."""
+    out, h_last, xr_pre = apply_mamba2(params, x, cfg, use_kernel=use_kernel,
+                                       interpret=interpret, return_state=True)
+    k = cfg.conv_kernel
+    conv = xr_pre[:, -(k - 1):, :]
+    pad = (k - 1) - conv.shape[1]
+    if pad > 0:                                   # prompt shorter than window
+        conv = jnp.pad(conv, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"h": h_last.astype(x.dtype), "conv": conv}
+
+
+# --------------------------------------------------------------------------
+# decode (recurrent, O(1) per token)
+# --------------------------------------------------------------------------
+
+def init_mamba2_cache(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    di = d_inner(d_model, cfg)
+    h = n_heads(d_model, cfg)
+    return {"h": jnp.zeros((batch, h, cfg.state, cfg.head_dim), dtype),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), dtype)}
+
+
+def decode_mamba2(params: PyTree, x: jnp.ndarray, cache: Dict, cfg: SSMConfig
+                  ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token recurrent step. x: (b, 1, d)."""
+    bsz = x.shape[0]
+    di = params["x_proj"].shape[1]
+    h = params["A_log"].shape[0]
+    p = di // h
+
+    z = jnp.einsum("bsd,de->bse", x, params["z_proj"])[:, 0]
+    xr = jnp.einsum("bsd,de->bse", x, params["x_proj"])[:, 0]     # (b, di)
+    window = jnp.concatenate([cache["conv"], xr[:, None, :]], axis=1)  # (b,k,di)
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_x"])
+    xr = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    bm = jnp.einsum("bsd,dn->bn", x, params["b_proj"])
+    cm = jnp.einsum("bsd,dn->bn", x, params["c_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bh", x, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])                                      # (b,h)
+    a = jnp.exp(dt * -jnp.exp(params["A_log"]))                   # (b,h)
+
+    xh = xr.reshape(bsz, h, p)
+    h_new = (cache["h"] * a[..., None, None].astype(cache["h"].dtype)
+             + jnp.einsum("bh,bn,bhp->bhnp", dt.astype(x.dtype), bm, xh))
+    y = jnp.einsum("bn,bhnp->bhp", cm, h_new)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(bsz, di)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"])
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, {"h": h_new, "conv": new_conv}

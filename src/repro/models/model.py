@@ -1,0 +1,869 @@
+"""Model factory: one config schema, six families, three entry points.
+
+Families
+  dense   — decoder-only transformer (starcoder2, qwen3, qwen1.5, olmo)
+  moe     — decoder-only with MoE FFN (qwen2-moe, granite-moe)
+  hybrid  — Mamba2 backbone + one *shared* attention block applied every
+            k layers (zamba2)
+  ssm     — xLSTM: mLSTM blocks with a recurrent sLSTM block every k
+            (xlstm-350m)
+  audio   — encoder-decoder over precomputed frame embeddings (whisper;
+            conv frontend is a stub per the assignment)
+  vlm     — decoder with gated cross-attention to precomputed patch
+            embeddings every k layers (llama-3.2-vision)
+
+Entry points
+  ``forward``      full-sequence logits (training / evaluation)
+  ``loss``         next-token CE (+ MoE aux) with fp32 softmax
+  ``prefill``      full-sequence pass that also emits the decode cache
+  ``decode_step``  one-token step against the cache
+
+Params and caches are dict pytrees; every leaf has a parallel *logical
+axes* annotation (tuple of names) consumed by repro.distributed.sharding.
+``abstract_params`` / ``abstract_cache`` trace the constructors under
+``jax.eval_shape`` so the 512-chip dry-run never allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import mamba2 as m2
+from repro.models import xlstm as xl
+from repro.models.layers import (apply_norm, dense_init, make_embed_params,
+                                 make_norm_params, unembed)
+from repro.models.moe import MoEConfig
+from repro.models.transformer import (BLOCK_CACHE_AXES, BLOCK_CACHE_AXES_Q,
+                                      BlockConfig,
+                                      apply_cross_block, apply_decoder_block,
+                                      cross_source_kv, decode_cross_block,
+                                      decode_decoder_block, init_block_cache,
+                                      is_axes_leaf, make_cross_block,
+                                      make_decoder_block, prepend_axis,
+                                      prefill_decoder_block, stack_params)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|moe|hybrid|ssm|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"
+    mlp: str = "swiglu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: Optional[float] = 10000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[m2.SSMConfig] = None
+    xlstm: Optional[xl.XLSTMConfig] = None
+    shared_attn_every: int = 0       # hybrid: shared block cadence
+    shared_attn_d_ff: int = 0        # hybrid: shared block MLP width
+    cross_attn_every: int = 0        # vlm: gated cross-attn cadence
+    n_frontend_tokens: int = 0       # vlm/audio: stub frontend seq len
+    n_encoder_layers: int = 0        # audio: encoder depth
+    max_pos: int = 0                 # audio: learned decoder positions
+    dtype: str = "bfloat16"
+    attn_impl: str = "xla"           # xla | pallas | pallas_interpret
+    use_ssm_kernel: bool = False
+    vocab_pad: int = 256
+    remat: str = "dots"              # none | dots | full
+    sub_quadratic: bool = False      # can serve long_500k
+    scan_unroll: int = 1             # lax.scan unroll; -1 = full unroll
+    kv_cache_quant: bool = False     # int8 KV cache (dense/moe decode)
+
+    @property
+    def unroll(self):
+        """Value for lax.scan(unroll=...): -1 means fully unrolled —
+        required for exact cost_analysis (XLA counts while-loop bodies
+        once, ignoring trip counts)."""
+        return True if self.scan_unroll < 0 else self.scan_unroll
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad
+        return ((self.vocab + p - 1) // p) * p
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    def block_cfg(self, *, moe: bool = True, d_ff: Optional[int] = None
+                  ) -> BlockConfig:
+        return BlockConfig(
+            d_model=self.d_model, n_heads=self.n_heads, kv_heads=self.kv_heads,
+            head_dim=self.hd, d_ff=d_ff if d_ff is not None else self.d_ff,
+            norm=self.norm, mlp=self.mlp, qkv_bias=self.qkv_bias,
+            qk_norm=self.qk_norm, rope_theta=self.rope_theta,
+            moe=self.moe if moe else None, attn_impl=self.attn_impl)
+
+    def n_params(self) -> int:
+        """Total parameter count (for MODEL_FLOPS and docs)."""
+        import math
+        model = Model(self)
+        specs, _ = model.abstract_params()
+        return sum(math.prod(s.shape) for s in jax.tree.leaves(specs))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        total = self.n_params()
+        if self.moe is None:
+            return total
+        per_expert = 3 * self.d_model * self.moe.expert_ff
+        inactive = (self.moe.n_experts - self.moe.top_k) * per_expert \
+            * self.n_layers
+        return total - inactive
+
+
+_REMAT_POLICIES: Dict[str, Any] = {
+    "full": None,  # jax.checkpoint default: save nothing
+}
+
+
+def _maybe_remat(fn: Callable, remat: str) -> Callable:
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(f"unknown remat policy {remat!r}")
+
+
+# ==========================================================================
+# the Model
+# ==========================================================================
+
+
+class Model:
+    """Functional model wrapper: holds only the (frozen) config."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        build = {"dense": self._build_decoder, "moe": self._build_decoder,
+                 "hybrid": self._build_hybrid, "ssm": self._build_xlstm,
+                 "audio": self._build_audio, "vlm": self._build_vlm}
+        if cfg.family not in build:
+            raise ValueError(f"unknown family {cfg.family!r}")
+        self._build = build[cfg.family]
+
+    # -- parameter construction -------------------------------------------
+
+    def init(self, key) -> PyTree:
+        return self._build(key)[0]
+
+    def build(self, key) -> Tuple[PyTree, PyTree]:
+        """Concrete (params, logical-axes)."""
+        return self._build(key)
+
+    def abstract_params(self) -> Tuple[PyTree, PyTree]:
+        """(ShapeDtypeStruct tree, axes tree) — no allocation."""
+        box = []
+
+        def initonly(key):
+            params, axes = self._build(key)
+            box.append(axes)          # static side-channel survives tracing
+            return params
+
+        specs = jax.eval_shape(initonly, jax.random.key(0))
+        return specs, box[0]
+
+    # -- shared pieces ------------------------------------------------------
+
+    def _make_embed(self, key):
+        cfg = self.cfg
+        params, axes = make_embed_params(key, cfg.padded_vocab, cfg.d_model,
+                                         cfg.jdtype, cfg.tie_embeddings)
+        return params, axes
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        logits = unembed(params["embed"], x).astype(jnp.float32)
+        if cfg.padded_vocab != cfg.vocab:          # mask pad columns
+            mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+            logits = jnp.where(mask, logits, -1e30)
+        return constrain(logits, ("batch", "act_seq", "vocab"))
+
+    def _embed_tokens(self, params, tokens):
+        x = params["embed"]["tok"][tokens]
+        return constrain(x, ("batch", "act_seq", None))
+
+    # ======================================================================
+    # family: dense / moe
+    # ======================================================================
+
+    def _build_decoder(self, key):
+        cfg = self.cfg
+        ke, kl, kn = jax.random.split(key, 3)
+        bcfg = cfg.block_cfg()
+        emb_p, emb_a = self._make_embed(ke)
+        layers_p, layers_a = stack_params(
+            kl, cfg.n_layers, lambda k: make_decoder_block(k, bcfg, cfg.jdtype))
+        norm_p, norm_a = make_norm_params(kn, cfg.d_model, cfg.norm, cfg.jdtype)
+        return ({"embed": emb_p, "layers": layers_p, "final_norm": norm_p},
+                {"embed": emb_a, "layers": layers_a, "final_norm": norm_a})
+
+    def _decoder_forward(self, params, x):
+        cfg = self.cfg
+        bcfg = cfg.block_cfg()
+
+        def body(carry, lp):
+            h, aux = carry
+            h = constrain(h, ("batch", "act_seq", None))
+            h, a = apply_decoder_block(lp, h, bcfg)
+            return (h, aux + a), None
+
+        body = _maybe_remat(body, cfg.remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"], unroll=cfg.unroll)
+        return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+    # ======================================================================
+    # family: hybrid (zamba2)
+    # ======================================================================
+
+    def _shared_flags(self):
+        """Static per-layer flags: apply the shared block after layer i.
+
+        Returned as numpy so python control flow (prefill/decode loops,
+        cache sizing) can branch on it; the scan path wraps in jnp.
+        """
+        import numpy as np
+        cfg = self.cfg
+        k = cfg.shared_attn_every
+        return (np.arange(cfg.n_layers) % k) == (k - 1)
+
+    def _build_hybrid(self, key):
+        cfg = self.cfg
+        ke, kl, ks, kn = jax.random.split(key, 4)
+        emb_p, emb_a = self._make_embed(ke)
+
+        def make_mamba_layer(k):
+            k1, k2 = jax.random.split(k)
+            mp, ma = m2.make_mamba2_params(k1, cfg.d_model, cfg.ssm, cfg.jdtype)
+            np_, na = make_norm_params(k2, cfg.d_model, cfg.norm, cfg.jdtype)
+            return {"mamba": mp, "norm": np_}, {"mamba": ma, "norm": na}
+
+        layers_p, layers_a = stack_params(kl, cfg.n_layers, make_mamba_layer)
+        sb_cfg = cfg.block_cfg(moe=False, d_ff=cfg.shared_attn_d_ff)
+        shared_p, shared_a = make_decoder_block(ks, sb_cfg, cfg.jdtype)
+        norm_p, norm_a = make_norm_params(kn, cfg.d_model, cfg.norm, cfg.jdtype)
+        return ({"embed": emb_p, "layers": layers_p, "shared": shared_p,
+                 "final_norm": norm_p},
+                {"embed": emb_a, "layers": layers_a, "shared": shared_a,
+                 "final_norm": norm_a})
+
+    def _hybrid_forward(self, params, x):
+        cfg = self.cfg
+        sb_cfg = cfg.block_cfg(moe=False, d_ff=cfg.shared_attn_d_ff)
+        flags = self._shared_flags()
+        shared = params["shared"]
+
+        def body(carry, xs):
+            h, aux = carry
+            h = constrain(h, ("batch", "act_seq", None))
+            lp, flag = xs
+            hn = apply_norm(lp["norm"], h, cfg.norm)
+            h = h + m2.apply_mamba2(lp["mamba"], hn, cfg.ssm,
+                                    use_kernel=cfg.use_ssm_kernel,
+                                    interpret=cfg.attn_impl == "pallas_interpret")
+            h = jax.lax.cond(
+                flag,
+                lambda v: apply_decoder_block(shared, v, sb_cfg)[0],
+                lambda v: v, h)
+            return (h, aux), None
+
+        body = _maybe_remat(body, cfg.remat)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   (params["layers"], jnp.asarray(flags)),
+                                   unroll=cfg.unroll)
+        return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+    # ======================================================================
+    # family: ssm (xlstm)
+    # ======================================================================
+
+    def _xlstm_kinds(self):
+        """Per-layer block kind: every k-th is an sLSTM block."""
+        cfg = self.cfg
+        k = cfg.xlstm.slstm_every
+        return ["slstm" if (i % k) == (k - 1) else "mlstm"
+                for i in range(cfg.n_layers)]
+
+    def _build_xlstm(self, key):
+        cfg = self.cfg
+        ke, kn, *kls = jax.random.split(key, 2 + cfg.n_layers)
+        emb_p, emb_a = self._make_embed(ke)
+        layers_p, layers_a = [], []
+        for kind, k in zip(self._xlstm_kinds(), kls):
+            k1, k2 = jax.random.split(k)
+            np_, na = make_norm_params(k2, cfg.d_model, cfg.norm, cfg.jdtype)
+            if kind == "mlstm":
+                p, a = xl.make_mlstm_params(k1, cfg.d_model, cfg.xlstm,
+                                            cfg.jdtype)
+            else:
+                p, a = xl.make_slstm_params(k1, cfg.d_model, cfg.xlstm,
+                                            cfg.jdtype)
+            layers_p.append({"block": p, "norm": np_})
+            layers_a.append({"block": a, "norm": na})
+        norm_p, norm_a = make_norm_params(kn, cfg.d_model, cfg.norm, cfg.jdtype)
+        return ({"embed": emb_p, "layers": layers_p, "final_norm": norm_p},
+                {"embed": emb_a, "layers": layers_a, "final_norm": norm_a})
+
+    def _xlstm_forward(self, params, x):
+        cfg = self.cfg
+
+        def layer(lp, kind, h):
+            hn = apply_norm(lp["norm"], h, cfg.norm)
+            if kind == "mlstm":
+                return h + xl.apply_mlstm(lp["block"], hn, cfg.xlstm)
+            out, _ = xl.apply_slstm(lp["block"], hn, cfg.xlstm)
+            return h + out
+
+        for lp, kind in zip(params["layers"], self._xlstm_kinds()):
+            x = constrain(x, ("batch", "act_seq", None))
+            fn = _maybe_remat(functools.partial(layer, lp, kind), cfg.remat)
+            x = fn(x)
+        aux = jnp.zeros((), jnp.float32)
+        return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+    # ======================================================================
+    # family: audio (whisper enc-dec; frame embeddings from stub frontend)
+    # ======================================================================
+
+    def _build_audio(self, key):
+        cfg = self.cfg
+        ke, kp, kenc, kdec, kn1, kn2 = jax.random.split(key, 6)
+        emb_p, emb_a = self._make_embed(ke)
+        emb_p["pos"] = dense_init(kp, cfg.max_pos, cfg.d_model, cfg.jdtype,
+                                  scale=0.02)
+        emb_a["pos"] = (None, "embed")
+        enc_cfg = cfg.block_cfg(moe=False)
+        enc_p, enc_a = stack_params(
+            kenc, cfg.n_encoder_layers,
+            lambda k: make_decoder_block(k, enc_cfg, cfg.jdtype))
+        dec_cfg = cfg.block_cfg(moe=False)
+        dec_p, dec_a = stack_params(
+            kdec, cfg.n_layers,
+            lambda k: make_cross_block(k, dec_cfg, cfg.jdtype, self_attn=True))
+        n1_p, n1_a = make_norm_params(kn1, cfg.d_model, cfg.norm, cfg.jdtype)
+        n2_p, n2_a = make_norm_params(kn2, cfg.d_model, cfg.norm, cfg.jdtype)
+        return ({"embed": emb_p, "enc_layers": enc_p, "enc_norm": n1_p,
+                 "layers": dec_p, "final_norm": n2_p},
+                {"embed": emb_a, "enc_layers": enc_a, "enc_norm": n1_a,
+                 "layers": dec_a, "final_norm": n2_a})
+
+    @staticmethod
+    def _sinusoid(seq: int, d: int) -> jnp.ndarray:
+        pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        angle = pos / jnp.power(10000.0, dim / d)
+        return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+    def _encode(self, params, frames):
+        """frames: (b, s_enc, d_model) precomputed frame embeddings."""
+        cfg = self.cfg
+        enc_cfg = cfg.block_cfg(moe=False)
+        x = frames + self._sinusoid(frames.shape[1],
+                                    cfg.d_model).astype(frames.dtype)
+
+        def body(h, lp):
+            h = constrain(h, ("batch", "act_seq", None))
+            h, _ = apply_decoder_block(lp, h, enc_cfg, causal=False)
+            return h, None
+
+        body = _maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"],
+                            unroll=cfg.unroll)
+        return apply_norm(params["enc_norm"], x, cfg.norm)
+
+    def _audio_forward(self, params, tokens, frames):
+        cfg = self.cfg
+        dec_cfg = cfg.block_cfg(moe=False)
+        enc_out = self._encode(params, frames)
+        s = tokens.shape[1]
+        x = self._embed_tokens(params, tokens) + params["embed"]["pos"][:s]
+
+        def body(h, lp):
+            h = constrain(h, ("batch", "act_seq", None))
+            return apply_cross_block(lp, h, enc_out, dec_cfg), None
+
+        body = _maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=cfg.unroll)
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+        return x, jnp.zeros((), jnp.float32)
+
+    # ======================================================================
+    # family: vlm (llama-3.2-vision: gated cross-attn every k layers)
+    # ======================================================================
+
+    def _vlm_seg(self) -> Tuple[int, int]:
+        """(n_segments, self_per_segment): k-1 self layers + 1 cross."""
+        cfg = self.cfg
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0, "n_layers must divide cross cadence"
+        return cfg.n_layers // k, k - 1
+
+    def _build_vlm(self, key):
+        cfg = self.cfg
+        ke, ks, kc, kn = jax.random.split(key, 4)
+        nseg, nself = self._vlm_seg()
+        emb_p, emb_a = self._make_embed(ke)
+        bcfg = cfg.block_cfg(moe=False)
+
+        def make_segment(k):
+            k1, k2 = jax.random.split(k)
+            sp, sa = stack_params(
+                k1, nself, lambda kk: make_decoder_block(kk, bcfg, cfg.jdtype))
+            cp, ca = make_cross_block(k2, bcfg, cfg.jdtype, gated=True,
+                                      self_attn=False)
+            return {"self": sp, "cross": cp}, {"self": sa, "cross": ca}
+
+        seg_p, seg_a = stack_params(ks, nseg, make_segment)
+        norm_p, norm_a = make_norm_params(kn, cfg.d_model, cfg.norm, cfg.jdtype)
+        return ({"embed": emb_p, "segments": seg_p, "final_norm": norm_p},
+                {"embed": emb_a, "segments": seg_a, "final_norm": norm_a})
+
+    def _vlm_forward(self, params, x, patches):
+        cfg = self.cfg
+        bcfg = cfg.block_cfg(moe=False)
+
+        def inner(h, lp):
+            h = constrain(h, ("batch", "act_seq", None))
+            h, _ = apply_decoder_block(lp, h, bcfg)
+            return h, None
+
+        def segment(carry, sp):
+            h, aux = carry
+            h, _ = jax.lax.scan(_maybe_remat(inner, cfg.remat), h,
+                                sp["self"], unroll=cfg.unroll)
+            h = apply_cross_block(sp["cross"], h, patches, bcfg, gated=True)
+            return (h, aux), None
+
+        (x, aux), _ = jax.lax.scan(segment,
+                                   (x, jnp.zeros((), jnp.float32)),
+                                   params["segments"],
+                                   unroll=cfg.unroll)
+        return apply_norm(params["final_norm"], x, cfg.norm), aux
+
+    # ======================================================================
+    # public API: forward / loss
+    # ======================================================================
+
+    def forward(self, params: PyTree, batch: Dict[str, jnp.ndarray]
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward. Returns (logits fp32, aux loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        if cfg.family == "audio":
+            x, aux = self._audio_forward(params, tokens, batch["frames"])
+        else:
+            x = self._embed_tokens(params, tokens)
+            if cfg.family in ("dense", "moe"):
+                x, aux = self._decoder_forward(params, x)
+            elif cfg.family == "hybrid":
+                x, aux = self._hybrid_forward(params, x)
+            elif cfg.family == "ssm":
+                x, aux = self._xlstm_forward(params, x)
+            elif cfg.family == "vlm":
+                x, aux = self._vlm_forward(params, x, batch["patches"])
+            else:
+                raise ValueError(cfg.family)
+        return self._logits(params, x), aux
+
+    def loss(self, params: PyTree, batch: Dict[str, jnp.ndarray]
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token CE over valid (label >= 0) positions + MoE aux."""
+        logits, aux = self.forward(params, batch)
+        labels = batch["labels"]
+        valid = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        ce = (lse - picked) * valid
+        n = jnp.maximum(valid.sum(), 1.0)
+        ce_mean = ce.sum() / n
+        total = ce_mean + aux
+        return total, {"loss": total, "ce": ce_mean, "aux": aux,
+                       "tokens": n}
+
+    # ======================================================================
+    # public API: serving (prefill / decode)
+    # ======================================================================
+
+    def make_cache(self, batch: int, max_len: int) -> Tuple[PyTree, PyTree]:
+        """Zero-initialized decode cache + logical axes (concrete)."""
+        return self._make_cache(batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int
+                       ) -> Tuple[PyTree, PyTree]:
+        box = []
+
+        def mk():
+            cache, axes = self._make_cache(batch, max_len)
+            box.append(axes)
+            return cache
+
+        specs = jax.eval_shape(mk)
+        return specs, box[0]
+
+    def _make_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = cfg.jdtype
+        length = jnp.zeros((batch,), jnp.int32)
+        la = ("batch",)
+        if cfg.family in ("dense", "moe"):
+            bcfg = cfg.block_cfg()
+            one = lambda: init_block_cache(batch, max_len, bcfg, dt,
+                                           quantized=cfg.kv_cache_quant)
+            kv = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[one() for _ in range(cfg.n_layers)]) \
+                if cfg.n_layers > 1 else jax.tree.map(
+                    lambda x: x[None], one())
+            base_axes = (BLOCK_CACHE_AXES_Q if cfg.kv_cache_quant
+                         else BLOCK_CACHE_AXES)
+            axes = {"layers": prepend_axis(base_axes),
+                    "length": la}
+            return {"layers": kv, "length": length}, axes
+        if cfg.family == "hybrid":
+            n_apps = int(self._shared_flags().sum())
+            bcfg = cfg.block_cfg(moe=False, d_ff=cfg.shared_attn_d_ff)
+            mamba = [m2.init_mamba2_cache(batch, cfg.d_model, cfg.ssm, dt)
+                     for _ in range(cfg.n_layers)]
+            mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *mamba)
+            attn = [init_block_cache(batch, max_len, bcfg, dt)
+                    for _ in range(n_apps)]
+            attn = jax.tree.map(lambda *xs: jnp.stack(xs), *attn)
+            axes = {"mamba": {"h": ("layers", "batch", "inner", None, None),
+                              "conv": ("layers", "batch", None, "inner")},
+                    "attn": prepend_axis(BLOCK_CACHE_AXES),
+                    "length": la}
+            return {"mamba": mamba, "attn": attn, "length": length}, axes
+        if cfg.family == "ssm":
+            caches, axes_l = [], []
+            for kind in self._xlstm_kinds():
+                if kind == "mlstm":
+                    caches.append(xl.init_mlstm_cache(batch, cfg.d_model,
+                                                      cfg.xlstm, dt))
+                    axes_l.append({"C": ("batch", "heads", None, None),
+                                   "n": ("batch", "heads", None),
+                                   "m": ("batch", "heads"),
+                                   "conv": ("batch", None, "inner")})
+                else:
+                    caches.append(xl.init_slstm_state(batch, cfg.d_model,
+                                                      cfg.xlstm))
+                    axes_l.append({k: ("batch", "heads", None)
+                                   for k in ("c", "n", "h", "m")})
+            return ({"layers": caches, "length": length},
+                    {"layers": axes_l, "length": la})
+        if cfg.family == "audio":
+            bcfg = cfg.block_cfg(moe=False)
+            one = lambda: dict(
+                init_block_cache(batch, max_len, bcfg, dt),
+                xk=jnp.zeros((batch, cfg.n_frontend_tokens, cfg.kv_heads,
+                              cfg.hd), dt),
+                xv=jnp.zeros((batch, cfg.n_frontend_tokens, cfg.kv_heads,
+                              cfg.hd), dt))
+            kv = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[one() for _ in range(cfg.n_layers)])
+            ca = dict(BLOCK_CACHE_AXES,
+                      xk=("batch", None, None, None),
+                      xv=("batch", None, None, None))
+            return ({"layers": kv, "length": length},
+                    {"layers": prepend_axis(ca), "length": la})
+        if cfg.family == "vlm":
+            nseg, nself = self._vlm_seg()
+            bcfg = cfg.block_cfg(moe=False)
+            self_kv = jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape(nseg, nself, *xs[0].shape),
+                *[init_block_cache(batch, max_len, bcfg, dt)
+                  for _ in range(nseg * nself)])
+            cross = {"xk": jnp.zeros((nseg, batch, cfg.n_frontend_tokens,
+                                      cfg.kv_heads, cfg.hd), dt),
+                     "xv": jnp.zeros((nseg, batch, cfg.n_frontend_tokens,
+                                      cfg.kv_heads, cfg.hd), dt)}
+            axes = {"self": prepend_axis(prepend_axis(BLOCK_CACHE_AXES, "seg")),
+                    "cross": {"xk": ("seg", "batch", None, None, None),
+                              "xv": ("seg", "batch", None, None, None)},
+                    "length": la}
+            return {"self": self_kv, "cross": cross, "length": length}, axes
+        raise ValueError(cfg.family)
+
+    # -- prefill ------------------------------------------------------------
+
+    def prefill(self, params: PyTree, batch: Dict[str, jnp.ndarray],
+                max_len: int) -> Tuple[jnp.ndarray, PyTree]:
+        """Process the full prompt; emit last-position logits + cache."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        length = jnp.full((b,), s, jnp.int32)
+
+        if cfg.family in ("dense", "moe"):
+            bcfg = cfg.block_cfg()
+            x = self._embed_tokens(params, tokens)
+
+            def body(h, lp):
+                h = constrain(h, ("batch", "act_seq", None))
+                h, _, c = prefill_decoder_block(
+                    lp, h, bcfg, max_len, quantized=cfg.kv_cache_quant)
+                return h, c
+
+            x, kv = jax.lax.scan(body, x, params["layers"],
+                                 unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x[:, -1:]),
+                    {"layers": kv, "length": length})
+
+        if cfg.family == "hybrid":
+            # mamba prefill runs the chunked scan and keeps final states;
+            # shared-attn applications emit their own KV caches.
+            bcfg = cfg.block_cfg(moe=False, d_ff=cfg.shared_attn_d_ff)
+            x = self._embed_tokens(params, tokens)
+            flags = self._shared_flags()
+            mamba_states, attn_caches = [], []
+            n_layers = cfg.n_layers
+            for i in range(n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                hn = apply_norm(lp["norm"], x, cfg.norm)
+                y, st = self._mamba_prefill(lp["mamba"], hn)
+                x = x + y
+                mamba_states.append(st)
+                if bool(flags[i]):
+                    x, _, c = prefill_decoder_block(params["shared"], x, bcfg,
+                                                    max_len)
+                    attn_caches.append(c)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            cache = {"mamba": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *mamba_states),
+                     "attn": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                          *attn_caches),
+                     "length": length}
+            return self._logits(params, x[:, -1:]), cache
+
+        if cfg.family == "ssm":
+            x = self._embed_tokens(params, tokens)
+            states = []
+            for lp, kind in zip(params["layers"], self._xlstm_kinds()):
+                hn = apply_norm(lp["norm"], x, cfg.norm)
+                if kind == "mlstm":
+                    y, st = self._mlstm_prefill(lp["block"], hn)
+                else:
+                    y, st = xl.apply_slstm(lp["block"], hn, cfg.xlstm)
+                x = x + y
+                states.append(st)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x[:, -1:]),
+                    {"layers": states, "length": length})
+
+        if cfg.family == "audio":
+            bcfg = cfg.block_cfg(moe=False)
+            enc_out = self._encode(params, batch["frames"])
+            x = self._embed_tokens(params, tokens) + params["embed"]["pos"][:s]
+
+            def body(h, lp):
+                h = constrain(h, ("batch", "act_seq", None))
+                xk, xv = cross_source_kv(lp["cross_attn"], enc_out, bcfg)
+                h2, _, c = self._prefill_cross(lp, h, enc_out, bcfg, max_len)
+                return h2, dict(c, xk=xk, xv=xv)
+
+            x, kv = jax.lax.scan(body, x, params["layers"],
+                                 unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x[:, -1:]),
+                    {"layers": kv, "length": length})
+
+        if cfg.family == "vlm":
+            bcfg = cfg.block_cfg(moe=False)
+            patches = batch["patches"]
+            x = self._embed_tokens(params, tokens)
+
+            def inner(h, lp):
+                h = constrain(h, ("batch", "act_seq", None))
+                h, _, c = prefill_decoder_block(lp, h, bcfg, max_len)
+                return h, c
+
+            def segment(h, sp):
+                h, self_kv = jax.lax.scan(inner, h, sp["self"],
+                                          unroll=cfg.unroll)
+                xk, xv = cross_source_kv(sp["cross"]["cross_attn"], patches,
+                                         bcfg)
+                h = apply_cross_block(sp["cross"], h, patches, bcfg,
+                                      gated=True)
+                return h, {"self": self_kv, "xk": xk, "xv": xv}
+
+            x, seg_kv = jax.lax.scan(segment, x, params["segments"],
+                                     unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            cache = {"self": seg_kv["self"],
+                     "cross": {"xk": seg_kv["xk"], "xv": seg_kv["xv"]},
+                     "length": length}
+            return self._logits(params, x[:, -1:]), cache
+
+        raise ValueError(cfg.family)
+
+    def _mamba_prefill(self, mp, hn):
+        """Mamba2 full-seq pass that also returns the final SSM state."""
+        cfg = self.cfg
+        y, st = m2.apply_mamba2_with_state(mp, hn, cfg.ssm)
+        return y, st
+
+    def _mlstm_prefill(self, bp, hn):
+        return xl.apply_mlstm_with_state(bp, hn, cfg=self.cfg.xlstm)
+
+    @staticmethod
+    def _prefill_cross(lp, h, enc_out, bcfg, max_len):
+        """Whisper decoder layer prefill: causal self-KV cache + cross."""
+        from repro.models.attention import _project_qkv, sdpa
+        from repro.models.layers import apply_mlp
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        hn = apply_norm(lp["norm_self"], h, bcfg.norm)
+        q, k, v = _project_qkv(lp["self_attn"], hn, hn, bcfg.n_heads,
+                               bcfg.kv_heads, bcfg.head_dim, positions,
+                               positions, bcfg.rope_theta)
+        o = sdpa(q, k, v, causal=True, impl=bcfg.attn_impl)
+        h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                           lp["self_attn"]["wo"])
+        h2 = apply_cross_block({kk: vv for kk, vv in lp.items()
+                                if kk not in ("self_attn", "norm_self")},
+                               h, enc_out, bcfg)
+        pad = max_len - s
+        cache = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+        return h2, None, cache
+
+    # -- decode -------------------------------------------------------------
+
+    def decode_step(self, params: PyTree, cache: PyTree,
+                    tokens: jnp.ndarray) -> Tuple[jnp.ndarray, PyTree]:
+        """One token for every sequence. tokens: (b, 1) int32."""
+        cfg = self.cfg
+        length = cache["length"]
+        x = self._embed_tokens(params, tokens)
+
+        if cfg.family in ("dense", "moe"):
+            bcfg = cfg.block_cfg()
+
+            def body(h, xs):
+                lp, c = xs
+                h = constrain(h, ("batch", "act_seq", None))
+                h, c2 = decode_decoder_block(lp, h, c, length, bcfg)
+                return h, c2
+
+            x, kv = jax.lax.scan(body, x, (params["layers"],
+                                           cache["layers"]),
+                                 unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x),
+                    {"layers": kv, "length": length + 1})
+
+        if cfg.family == "hybrid":
+            bcfg = cfg.block_cfg(moe=False, d_ff=cfg.shared_attn_d_ff)
+            flags = self._shared_flags()
+            new_mamba, new_attn = [], []
+            app = 0
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda p: p[i], params["layers"])
+                mc = jax.tree.map(lambda c: c[i], cache["mamba"])
+                hn = apply_norm(lp["norm"], x, cfg.norm)
+                y, mc2 = m2.decode_mamba2(lp["mamba"], hn, mc, cfg.ssm)
+                x = x + y
+                new_mamba.append(mc2)
+                if bool(flags[i]):
+                    ac = jax.tree.map(lambda c: c[app], cache["attn"])
+                    x, ac2 = decode_decoder_block(params["shared"], x, ac,
+                                                  length, bcfg)
+                    new_attn.append(ac2)
+                    app += 1
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            cache2 = {"mamba": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *new_mamba),
+                      "attn": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *new_attn),
+                      "length": length + 1}
+            return self._logits(params, x), cache2
+
+        if cfg.family == "ssm":
+            new_states = []
+            for lp, kind, st in zip(params["layers"], self._xlstm_kinds(),
+                                    cache["layers"]):
+                hn = apply_norm(lp["norm"], x, cfg.norm)
+                if kind == "mlstm":
+                    y, st2 = xl.decode_mlstm(lp["block"], hn, st, cfg.xlstm)
+                else:
+                    y, st2 = xl.decode_slstm(lp["block"], hn, st, cfg.xlstm)
+                x = x + y
+                new_states.append(st2)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x),
+                    {"layers": new_states, "length": length + 1})
+
+        if cfg.family == "audio":
+            bcfg = cfg.block_cfg(moe=False)
+            pos = jnp.clip(length, 0, cfg.max_pos - 1)
+            x = x + params["embed"]["pos"][pos][:, None, :]
+
+            def body(h, xs):
+                lp, c = xs
+                h = constrain(h, ("batch", "act_seq", None))
+                h, c2 = decode_cross_block(lp, h, c, length, bcfg)
+                return h, c2
+
+            x, kv = jax.lax.scan(body, x, (params["layers"],
+                                           cache["layers"]),
+                                 unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x),
+                    {"layers": kv, "length": length + 1})
+
+        if cfg.family == "vlm":
+            bcfg = cfg.block_cfg(moe=False)
+
+            def inner(h, xs):
+                lp, c = xs
+                h = constrain(h, ("batch", "act_seq", None))
+                h, c2 = decode_decoder_block(lp, h, c, length, bcfg)
+                return h, c2
+
+            def segment(h, xs):
+                sp, sc, cc = xs
+                h, self_kv = jax.lax.scan(inner, h, (sp["self"], sc),
+                                          unroll=cfg.unroll)
+                h, _ = decode_cross_block(sp["cross"], h,
+                                          {"xk": cc["xk"], "xv": cc["xv"]},
+                                          length, bcfg, gated=True)
+                return h, self_kv
+
+            x, self_kv = jax.lax.scan(
+                segment, x, (params["segments"], cache["self"],
+                             cache["cross"]), unroll=cfg.unroll)
+            x = apply_norm(params["final_norm"], x, cfg.norm)
+            return (self._logits(params, x),
+                    {"self": self_kv, "cross": cache["cross"],
+                     "length": length + 1})
+
+        raise ValueError(cfg.family)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

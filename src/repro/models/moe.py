@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN with capacity-based gather dispatch (EP-shardable).
+
+TPU adaptation: instead of ragged all-to-all dispatch (GPU idiom), we use
+*expert-major gather*: every expert gathers its top-``capacity`` tokens
+(`lax.top_k` over the routing matrix), runs its FFN on a dense
+(experts, capacity, d) block — MXU-friendly — and scatter-adds results
+back weighted by the gate. FLOPs stay O(tokens · top_k · capacity_factor),
+and the expert dim shards cleanly over the ``model`` mesh axis (EP).
+
+Supports shared experts (Qwen2-MoE: 4 shared + 60 routed) and top-k
+renormalization (Granite). Returns an aux load-balance loss (Switch-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_ff: int            # per-expert FFN width
+    shared_ff: int = 0        # shared-expert FFN width (0 = none)
+    norm_topk: bool = False   # renormalize top-k gate weights
+    capacity_factor: float = 1.25
+    aux_coef: float = 0.01
+    #: "global"  — expert-major top-k over ALL tokens (paper-agnostic
+    #:             baseline),
+    #: "grouped" — per-sequence capacity: routing, gather and scatter
+    #:             are batched over the batch dim (shard-local token
+    #:             handling when dispatch runs under shard_map).
+    dispatch: str = "global"
+    #: pad the expert dim to this count (0 = no padding) so it divides
+    #: the model mesh axis and shards as EP — e.g. granite's 40 experts
+    #: pad to 48 (3 per chip at model=16). Padded experts are masked to
+    #: -inf in the router and receive zero tokens; their (dead) weights
+    #: cost pad/n_experts extra memory. §Perf hillclimb A3.
+    pad_to: int = 0
+
+    @property
+    def e_total(self) -> int:
+        return max(self.pad_to, self.n_experts)
+
+
+def make_moe_params(key, d_model: int, cfg: MoEConfig, dtype):
+    kr, kg, ku, kd, ks1, ks2, ks3, ksg = jax.random.split(key, 8)
+    e, f = cfg.e_total, cfg.expert_ff
+    params: Dict[str, jnp.ndarray] = {
+        "router": dense_init(kr, d_model, e, jnp.float32),
+        "gate": (jax.random.normal(kg, (e, d_model, f), jnp.float32)
+                 * d_model ** -0.5).astype(dtype),
+        "up": (jax.random.normal(ku, (e, d_model, f), jnp.float32)
+               * d_model ** -0.5).astype(dtype),
+        "down": (jax.random.normal(kd, (e, f, d_model), jnp.float32)
+                 * f ** -0.5).astype(dtype),
+    }
+    axes = {"router": ("embed", "expert"),
+            "gate": ("expert", "embed", "mlp"),
+            "up": ("expert", "embed", "mlp"),
+            "down": ("expert", "mlp", "embed")}
+    if cfg.shared_ff > 0:
+        params.update({
+            "shared_gate": dense_init(ks1, d_model, cfg.shared_ff, dtype),
+            "shared_up": dense_init(ks2, d_model, cfg.shared_ff, dtype),
+            "shared_down": dense_init(ks3, cfg.shared_ff, d_model, dtype,
+                                      scale=cfg.shared_ff ** -0.5),
+            "shared_router": dense_init(ksg, d_model, 1, dtype),
+        })
+        axes.update({"shared_gate": ("embed", "mlp"),
+                     "shared_up": ("embed", "mlp"),
+                     "shared_down": ("mlp", "embed"),
+                     "shared_router": ("embed", "null")})
+    return params, axes
+
+
+def _routing(params, xf, cfg: MoEConfig):
+    """Router softmax + top-k. xf: (..., t, d) -> routing (..., t, e)."""
+    scores = jnp.einsum("...td,de->...te", xf.astype(jnp.float32),
+                        params["router"])
+    if cfg.e_total > cfg.n_experts:          # mask padded (dead) experts
+        alive = jnp.arange(cfg.e_total) < cfg.n_experts
+        scores = jnp.where(alive, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.norm_topk:
+        top_p = top_p / (jnp.sum(top_p, axis=-1, keepdims=True) + 1e-9)
+    routing = jnp.sum(
+        jax.nn.one_hot(top_idx, cfg.e_total, dtype=jnp.float32)
+        * top_p[..., None], axis=-2)                       # (..., t, e)
+    return routing, probs, top_idx
+
+
+def _dispatch_global(params, xf, cfg: MoEConfig):
+    """Expert-major top-k over the WHOLE token set (baseline)."""
+    t, d = xf.shape
+    routing, probs, top_idx = _routing(params, xf, cfg)
+    capacity = max(int(t * cfg.top_k * cfg.capacity_factor /
+                       cfg.n_experts), 8)
+    capacity = min(capacity, t)
+    gate_ec, tok_ec = jax.lax.top_k(routing.T, capacity)          # (e, c)
+    x_ec = jnp.take(xf, tok_ec, axis=0)                           # (e, c, d)
+    h = jnp.einsum("ecd,edf->ecf", x_ec, params["gate"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x_ec, params["up"])
+    y_ec = jnp.einsum("ecf,efd->ecd", h, params["down"])
+    y_ec = y_ec * gate_ec[..., None].astype(y_ec.dtype)
+    out = jnp.zeros((t, d), y_ec.dtype).at[tok_ec.reshape(-1)].add(
+        y_ec.reshape(-1, d))
+    return out, probs, top_idx
+
+
+def _dispatch_grouped(params, x, cfg: MoEConfig):
+    """Per-sequence capacity: every op is batched over the batch dim,
+    so routing/gather/scatter never leave the device that owns the
+    sequence — zero cross-device token traffic under data parallelism
+    (the global variant all-gathers the full token set per device)."""
+    b, s, d = x.shape
+    routing, probs, top_idx = _routing(params, x, cfg)            # (b,s,e)
+    capacity = max(int(s * cfg.top_k * cfg.capacity_factor /
+                       cfg.n_experts), 4)
+    capacity = min(capacity, s)
+    # per sequence: each expert takes its top-capacity tokens
+    gate_ec, tok_ec = jax.lax.top_k(
+        routing.transpose(0, 2, 1), capacity)                     # (b,e,c)
+    # gather on the FLATTENED (e*c) index set along the sequence axis —
+    # x[:, None] broadcasting to (b, e, s, d) before the gather costs
+    # e x the token bytes (the §Perf A1 regression); this form never
+    # materializes more than (b, e*c, d).
+    flat_idx = tok_ec.reshape(b, cfg.e_total * capacity)          # (b,ec)
+    x_flat = jnp.take_along_axis(x, flat_idx[..., None], axis=1)  # (b,ec,d)
+    x_ec = x_flat.reshape(b, cfg.e_total, capacity, d)
+    h = jnp.einsum("becd,edf->becf", x_ec, params["gate"])
+    h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", x_ec, params["up"])
+    y_ec = jnp.einsum("becf,efd->becd", h, params["down"])
+    y_ec = y_ec * gate_ec[..., None].astype(y_ec.dtype)
+    out = jnp.zeros((b, s, d), y_ec.dtype)
+    out = out.at[jnp.arange(b)[:, None], flat_idx].add(
+        y_ec.reshape(b, cfg.e_total * capacity, d))
+    return out.reshape(b * s, d), probs.reshape(b * s, -1), \
+        top_idx.reshape(b * s, -1)
+
+
+def apply_moe(params: PyTree, x: jnp.ndarray, cfg: MoEConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (batch, seq, d) -> (output, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+
+    if cfg.dispatch == "grouped":
+        out, probs, top_idx = _dispatch_grouped(params, x, cfg)
+    else:
+        out, probs, top_idx = _dispatch_global(params, xf, cfg)
+
+    if cfg.shared_ff > 0:
+        g = jnp.einsum("td,df->tf", xf, params["shared_gate"])
+        u = jnp.einsum("td,df->tf", xf, params["shared_up"])
+        sh = jnp.einsum("tf,fd->td", jax.nn.silu(g) * u, params["shared_down"])
+        sgate = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xf, params["shared_router"]))
+        out = out + sgate * sh
+
+    # Switch-style load-balance auxiliary loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx, cfg.e_total, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac_tokens * frac_probs) * cfg.aux_coef
+
+    return out.reshape(b, s, d).astype(x.dtype), aux

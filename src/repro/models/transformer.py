@@ -1,0 +1,364 @@
+"""Composable transformer blocks for every assigned architecture family.
+
+A *block* is (pre-norm attn/mixer sublayer) + (pre-norm FFN sublayer)
+with residuals. Blocks expose three entry points:
+
+  * ``apply_*``    — full-sequence (training / prefill / encoder),
+  * ``decode_*``   — one-token step against a cache,
+  * ``prefill_*``  — full-sequence that also emits the populated cache.
+
+Caches are plain dict pytrees whose leaves stack cleanly over a leading
+``layers`` axis so 100-layer models decode under one ``lax.scan``.
+Sequence ``length`` is tracked once per model, not per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (_project_qkv, _sdpa_xla,
+                                    make_attention_params, sdpa)
+from repro.models.layers import (apply_mlp, apply_norm, make_mlp_params,
+                                 make_norm_params)
+from repro.models.moe import MoEConfig, apply_moe, make_moe_params
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Static geometry shared by block creators/applicators."""
+
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    d_ff: int
+    norm: str = "rmsnorm"            # rmsnorm | layernorm | nonparametric
+    mlp: str = "swiglu"              # swiglu | gelu
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: Optional[float] = 10000.0
+    moe: Optional[MoEConfig] = None
+    attn_impl: str = "xla"
+
+
+# --------------------------------------------------------------------------
+# standard decoder block (attention + MLP or MoE)
+# --------------------------------------------------------------------------
+
+def make_decoder_block(key, cfg: BlockConfig, dtype):
+    k_attn, k_mlp, k_n1, k_n2 = jax.random.split(key, 4)
+    attn_p, attn_a = make_attention_params(
+        k_attn, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim, dtype,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    n1_p, n1_a = make_norm_params(k_n1, cfg.d_model, cfg.norm, dtype)
+    n2_p, n2_a = make_norm_params(k_n2, cfg.d_model, cfg.norm, dtype)
+    params = {"attn": attn_p, "norm1": n1_p, "norm2": n2_p}
+    axes = {"attn": attn_a, "norm1": n1_a, "norm2": n2_a}
+    if cfg.moe is not None:
+        moe_p, moe_a = make_moe_params(k_mlp, cfg.d_model, cfg.moe, dtype)
+        params["moe"], axes["moe"] = moe_p, moe_a
+    else:
+        mlp_p, mlp_a = make_mlp_params(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp,
+                                       dtype)
+        params["mlp"], axes["mlp"] = mlp_p, mlp_a
+    return params, axes
+
+
+def _ffn(params: PyTree, h: jnp.ndarray, cfg: BlockConfig
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Second sublayer: MLP or MoE. Returns (out, aux_loss)."""
+    if cfg.moe is not None:
+        return apply_moe(params["moe"], h, cfg.moe)
+    return apply_mlp(params["mlp"], h, cfg.mlp), jnp.zeros((), jnp.float32)
+
+
+def apply_decoder_block(params: PyTree, x: jnp.ndarray, cfg: BlockConfig,
+                        *, causal: bool = True,
+                        positions: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    q, k, v = _project_qkv(params["attn"], h, h, cfg.n_heads, cfg.kv_heads,
+                           cfg.head_dim, positions, positions, cfg.rope_theta)
+    o = sdpa(q, k, v, causal=causal, impl=cfg.attn_impl)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    x = x + jnp.einsum("bse,ed->bsd", o, params["attn"]["wo"])
+    h = apply_norm(params["norm2"], x, cfg.norm)
+    f, aux = _ffn(params, h, cfg)
+    return x + f, aux
+
+
+# -- KV-cache paths ---------------------------------------------------------
+
+def init_block_cache(batch: int, max_len: int, cfg: BlockConfig, dtype,
+                     quantized: bool = False) -> Dict[str, jnp.ndarray]:
+    if quantized:
+        # int8 payload + per-(position, head) fp16 scales: halves the
+        # KV stream of decode (its dominant roofline term) for ~0.4 %
+        # extra bytes of scale metadata. Beyond-paper §Perf feature.
+        shape = (batch, max_len, cfg.kv_heads, cfg.head_dim)
+        sshape = (batch, max_len, cfg.kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float16),
+                "v_scale": jnp.zeros(sshape, jnp.float16)}
+    return {"k": jnp.zeros((batch, max_len, cfg.kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.kv_heads, cfg.head_dim), dtype)}
+
+
+#: logical sharding axes for a block KV cache (seq shardable — flash-decode)
+BLOCK_CACHE_AXES = {"k": ("batch", "cache_seq", None, None),
+                    "v": ("batch", "cache_seq", None, None)}
+BLOCK_CACHE_AXES_Q = dict(BLOCK_CACHE_AXES,
+                          k_scale=("batch", "cache_seq", None),
+                          v_scale=("batch", "cache_seq", None))
+
+
+def _quantize_kv(x: jnp.ndarray):
+    """x: (b, s, h, d) -> (int8, fp16 scale (b, s, h))."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def _dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray, dtype):
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def prefill_decoder_block(params: PyTree, x: jnp.ndarray, cfg: BlockConfig,
+                          max_len: int, quantized: bool = False
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """Causal full-sequence pass that also returns the populated cache."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    q, k, v = _project_qkv(params["attn"], h, h, cfg.n_heads, cfg.kv_heads,
+                           cfg.head_dim, positions, positions, cfg.rope_theta)
+    o = sdpa(q, k, v, causal=True, impl=cfg.attn_impl)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    x = x + jnp.einsum("bse,ed->bsd", o, params["attn"]["wo"])
+    hh = apply_norm(params["norm2"], x, cfg.norm)
+    f, aux = _ffn(params, hh, cfg)
+    pad = max_len - s
+    padded = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) *
+                               (t.ndim - 2))
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        cache = {"k": padded(kq), "v": padded(vq),
+                 "k_scale": padded(ks), "v_scale": padded(vs)}
+    else:
+        cache = {"k": padded(k), "v": padded(v)}
+    return x + f, aux, cache
+
+
+def decode_decoder_block(params: PyTree, x: jnp.ndarray, cache: Dict,
+                         length: jnp.ndarray, cfg: BlockConfig
+                         ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (b, 1, d); length: (b,) current cache fill."""
+    b = x.shape[0]
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    positions = length[:, None]
+    q, k_new, v_new = _project_qkv(params["attn"], h, h, cfg.n_heads,
+                                   cfg.kv_heads, cfg.head_dim, positions,
+                                   positions, cfg.rope_theta)
+    max_len = cache["k"].shape[1]
+    quantized = "k_scale" in cache
+    onehot = jax.nn.one_hot(length, max_len, dtype=x.dtype)       # (b, S)
+    if quantized:
+        kq_new, ks_new = _quantize_kv(k_new)
+        vq_new, vs_new = _quantize_kv(v_new)
+        oh8 = jax.nn.one_hot(length, max_len, dtype=jnp.int8)
+        oh16 = jax.nn.one_hot(length, max_len, dtype=jnp.float16)
+        new_cache = {
+            "k": cache["k"] + oh8[:, :, None, None] * kq_new,
+            "v": cache["v"] + oh8[:, :, None, None] * vq_new,
+            "k_scale": cache["k_scale"] + oh16[:, :, None] * ks_new,
+            "v_scale": cache["v_scale"] + oh16[:, :, None] * vs_new}
+        k = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        k = cache["k"] + onehot[:, :, None, None] * k_new         # scatter
+        v = cache["v"] + onehot[:, :, None, None] * v_new
+        new_cache = {"k": k, "v": v}
+    valid = jnp.arange(max_len)[None, :] <= length[:, None]
+    o = _sdpa_xla(q, k, v, causal=False, kv_len_mask=valid)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    x = x + jnp.einsum("bse,ed->bsd", o, params["attn"]["wo"])
+    hh = apply_norm(params["norm2"], x, cfg.norm)
+    f, _ = _ffn(params, hh, cfg)
+    return x + f, new_cache
+
+
+# --------------------------------------------------------------------------
+# cross-attention block (whisper decoder / llama-vision gated layers)
+# --------------------------------------------------------------------------
+
+def make_cross_block(key, cfg: BlockConfig, dtype, *, gated: bool = False,
+                     self_attn: bool = True):
+    """Cross-attn block. ``self_attn=True`` → whisper-style decoder layer
+    (self + cross + mlp); ``gated=True`` → llama-vision-style gated
+    cross-attn layer (cross + mlp, tanh-gated residuals, no self-attn)."""
+    ks, kc, km, k1, k2, k3 = jax.random.split(key, 6)
+    params: Dict[str, PyTree] = {}
+    axes: Dict[str, PyTree] = {}
+    if self_attn:
+        p, a = make_attention_params(ks, cfg.d_model, cfg.n_heads,
+                                     cfg.kv_heads, cfg.head_dim, dtype,
+                                     qkv_bias=cfg.qkv_bias)
+        n, na = make_norm_params(k1, cfg.d_model, cfg.norm, dtype)
+        params.update({"self_attn": p, "norm_self": n})
+        axes.update({"self_attn": a, "norm_self": na})
+    p, a = make_attention_params(kc, cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                                 cfg.head_dim, dtype, qkv_bias=cfg.qkv_bias,
+                                 qk_norm=cfg.qk_norm and gated)
+    nc, nca = make_norm_params(k2, cfg.d_model, cfg.norm, dtype)
+    mlp_p, mlp_a = make_mlp_params(km, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    nm, nma = make_norm_params(k3, cfg.d_model, cfg.norm, dtype)
+    params.update({"cross_attn": p, "norm_cross": nc, "mlp": mlp_p,
+                   "norm_mlp": nm})
+    axes.update({"cross_attn": a, "norm_cross": nca, "mlp": mlp_a,
+                 "norm_mlp": nma})
+    if gated:
+        params.update({"gate_attn": jnp.zeros((), jnp.float32),
+                       "gate_mlp": jnp.zeros((), jnp.float32)})
+        axes.update({"gate_attn": (), "gate_mlp": ()})
+    return params, axes
+
+
+def _cross_attend(params: PyTree, h: jnp.ndarray, kv: jnp.ndarray,
+                  cfg: BlockConfig) -> jnp.ndarray:
+    """h: (b, s, d) queries; kv: (b, skv, d) encoder/image states."""
+    b, s, _ = h.shape
+    pos = jnp.zeros((b, s), jnp.int32)            # no rope in cross-attn
+    q, k, v = _project_qkv(params, h, kv, cfg.n_heads, cfg.kv_heads,
+                           cfg.head_dim, pos, pos, None)
+    o = sdpa(q, k, v, causal=False, impl="xla")
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), params["wo"])
+
+
+def _cross_attend_cached(params: PyTree, h: jnp.ndarray, k: jnp.ndarray,
+                         v: jnp.ndarray, cfg: BlockConfig) -> jnp.ndarray:
+    """Decode path: K/V for the cross source are precomputed once."""
+    b, s, _ = h.shape
+    pos = jnp.zeros((b, s), jnp.int32)
+    q, _, _ = _project_qkv(params, h, h[:, :1], cfg.n_heads, cfg.kv_heads,
+                           cfg.head_dim, pos, pos[:, :1], None)
+    o = _sdpa_xla(q, k, v, causal=False)
+    return jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1), params["wo"])
+
+
+def cross_source_kv(params: PyTree, kv_x: jnp.ndarray, cfg: BlockConfig
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from the encoder/image states."""
+    b, skv, _ = kv_x.shape
+    pos = jnp.zeros((b, skv), jnp.int32)
+    _, k, v = _project_qkv(params, kv_x[:, :1], kv_x, cfg.n_heads,
+                           cfg.kv_heads, cfg.head_dim, pos[:, :1], pos, None)
+    return k, v
+
+
+def apply_cross_block(params: PyTree, x: jnp.ndarray, kv_x: jnp.ndarray,
+                      cfg: BlockConfig, *, gated: bool = False
+                      ) -> jnp.ndarray:
+    """Full-sequence cross block (training / prefill)."""
+    if "self_attn" in params:
+        h = apply_norm(params["norm_self"], x, cfg.norm)
+        b, s, _ = h.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        q, k, v = _project_qkv(params["self_attn"], h, h, cfg.n_heads,
+                               cfg.kv_heads, cfg.head_dim, positions,
+                               positions, cfg.rope_theta)
+        o = sdpa(q, k, v, causal=True, impl=cfg.attn_impl)
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, s, -1),
+                           params["self_attn"]["wo"])
+    h = apply_norm(params["norm_cross"], x, cfg.norm)
+    c = _cross_attend(params["cross_attn"], h, kv_x, cfg)
+    if gated:
+        c = jnp.tanh(params["gate_attn"]).astype(c.dtype) * c
+    x = x + c
+    h = apply_norm(params["norm_mlp"], x, cfg.norm)
+    f = apply_mlp(params["mlp"], h, cfg.mlp)
+    if gated:
+        f = jnp.tanh(params["gate_mlp"]).astype(f.dtype) * f
+    return x + f
+
+
+def decode_cross_block(params: PyTree, x: jnp.ndarray, cache: Dict,
+                       length: jnp.ndarray, cfg: BlockConfig,
+                       *, gated: bool = False) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step; ``cache`` holds self-KV + precomputed cross-KV."""
+    new_cache = dict(cache)
+    if "self_attn" in params:
+        b = x.shape[0]
+        h = apply_norm(params["norm_self"], x, cfg.norm)
+        positions = length[:, None]
+        q, k_new, v_new = _project_qkv(params["self_attn"], h, h, cfg.n_heads,
+                                       cfg.kv_heads, cfg.head_dim, positions,
+                                       positions, cfg.rope_theta)
+        max_len = cache["k"].shape[1]
+        onehot = jax.nn.one_hot(length, max_len, dtype=x.dtype)
+        k = cache["k"] + onehot[:, :, None, None] * k_new
+        v = cache["v"] + onehot[:, :, None, None] * v_new
+        valid = jnp.arange(max_len)[None, :] <= length[:, None]
+        o = _sdpa_xla(q, k, v, causal=False, kv_len_mask=valid)
+        x = x + jnp.einsum("bse,ed->bsd", o.reshape(b, 1, -1),
+                           params["self_attn"]["wo"])
+        new_cache.update({"k": k, "v": v})
+    h = apply_norm(params["norm_cross"], x, cfg.norm)
+    c = _cross_attend_cached(params["cross_attn"], h, cache["xk"],
+                             cache["xv"], cfg)
+    if gated:
+        c = jnp.tanh(params["gate_attn"]).astype(c.dtype) * c
+    x = x + c
+    h = apply_norm(params["norm_mlp"], x, cfg.norm)
+    f = apply_mlp(params["mlp"], h, cfg.mlp)
+    if gated:
+        f = jnp.tanh(params["gate_mlp"]).astype(f.dtype) * f
+    return x + f, new_cache
+
+
+# --------------------------------------------------------------------------
+# encoder block (whisper encoder: bidirectional self-attn + MLP)
+# --------------------------------------------------------------------------
+
+def apply_encoder_block(params: PyTree, x: jnp.ndarray, cfg: BlockConfig
+                        ) -> jnp.ndarray:
+    out, _ = apply_decoder_block(params, x, cfg, causal=False)
+    return out
+
+
+# --------------------------------------------------------------------------
+# parameter stacking (scan-over-layers)
+# --------------------------------------------------------------------------
+
+def is_axes_leaf(x) -> bool:
+    """Axes trees use tuples-of-strings as leaves."""
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+def prepend_axis(axes: PyTree, name: str = "layers") -> PyTree:
+    return jax.tree.map(lambda t: (name,) + t, axes, is_leaf=is_axes_leaf)
+
+
+def stack_params(key, n: int, maker):
+    """Create ``n`` independently-initialized copies of ``maker(key)``
+    stacked on a leading ``layers`` axis (vmap over the rng key)."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: maker(k)[0])(keys)
+    # axes are static python data; one direct call recovers them (free
+    # under tracing — the whole init is usually wrapped in eval_shape)
+    proto_axes = maker(keys[0])[1]
+    return params, prepend_axis(proto_axes)

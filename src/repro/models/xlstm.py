@@ -1,0 +1,365 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM
+(scalar memory, recurrent) — Beck et al., arXiv:2405.04517.
+
+TPU adaptation: the mLSTM parallel form is computed as stabilized
+gated linear attention with dense (S×S per head) matmuls (MXU-friendly
+for training lengths); decode uses the O(1) matrix-memory recurrence,
+which is what makes the 500k-context cell feasible. The sLSTM is an
+inherently sequential exponential-gating recurrence → ``lax.scan``
+over time (one fused step per token; XLA keeps the state in VMEM).
+
+Block layout follows the paper: mLSTM blocks are pre-norm residual
+up-proj(×2) → conv4+silu → q/k/v + gates → matrix memory → gated
+down-proj; sLSTM blocks are pre-norm recurrence followed by a GeLU FFN
+with projection factor 4/3 (`d_ff=0` in the arch table — the blocks
+carry their own projections).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    n_heads: int = 4
+    expand: int = 2          # mLSTM up-projection factor
+    conv_kernel: int = 4
+    slstm_every: int = 8     # every k-th block is an sLSTM block
+    ffn_factor: float = 4.0 / 3.0
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def make_mlstm_params(key, d_model: int, cfg: XLSTMConfig, dtype):
+    di = cfg.expand * d_model
+    ks = jax.random.split(key, 8)
+    params = {
+        "up": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_kernel, di), jnp.float32)
+                 * cfg.conv_kernel ** -0.5).astype(dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_if": dense_init(ks[5], di, 2 * cfg.n_heads, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,), jnp.float32),
+                                 3.0 * jnp.ones((cfg.n_heads,), jnp.float32)]),
+        "norm_w": jnp.ones((di,), dtype),
+        "down": dense_init(ks[6], di, d_model, dtype, scale=di ** -0.5),
+    }
+    axes = {"up": ("embed", "inner"), "conv": ("conv", "inner"),
+            "wq": ("inner", "inner"), "wk": ("inner", "inner"),
+            "wv": ("inner", "inner"), "w_if": ("inner", "gates"),
+            "b_if": ("gates",), "norm_w": ("inner",),
+            "down": ("inner", "embed")}
+    return params, axes
+
+
+def _causal_conv(x, w):
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilized parallel mLSTM.
+
+    q/k/v: (b, s, h, d); i_pre/f_pre: (b, s, h) pre-activations.
+    D̃[i,j] = Σ_{t=j+1..i} logσ(f_t) + i_j (j ≤ i); m_i = max_j D̃;
+    h = (q kᵀ/√d ⊙ exp(D̃ - m)) v / max(|row-sum|, exp(-m)).
+    """
+    b, s, h, d = q.shape
+    log_f = jax.nn.log_sigmoid(f_pre)                              # (b,s,h)
+    cum_f = jnp.cumsum(log_f, axis=1)
+    dmat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+            + i_pre[:, None, :, :])                                # (b,i,j,h)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                       # (b,i,1,h)
+    dexp = jnp.exp(dmat - m)                                       # (b,i,j,h)
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) * (d ** -0.5)
+    w = scores.astype(jnp.float32) * dexp
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))
+    out = jnp.einsum("bijh,bjhd->bihd", w.astype(q.dtype), v)
+    return out / norm[..., None].astype(q.dtype)
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int = 128,
+                   state0: Optional[Dict] = None):
+    """Chunkwise-parallel stabilized mLSTM (TPU adaptation of TFLA).
+
+    Three-phase structure keeps every heavy einsum *outside* the
+    sequential loop (vectorized over chunks — large MXU matmuls, and
+    XLA cost analysis sees the true FLOPs):
+
+      A (parallel)  per-chunk intra-chunk attention-style num/den with a
+                    local stabilizer, plus per-chunk state summaries;
+      scan (cheap)  carry the matrix memory (Ĉ ∈ R^{d×d}, n̂, m) across
+                    chunks — O(nc·h·d²) bandwidth, no matmuls;
+      B (parallel)  merge the incoming-state contribution with the
+                    intra part under a joint stabilizer.
+
+    Mathematically identical to :func:`_mlstm_parallel` (the oracle)
+    but O(S·chunk) memory instead of O(S²).
+
+    q/k/v: (b, s, h, d); i_pre/f_pre: (b, s, h) fp32 pre-activations.
+    Returns (out (b,s,h,d), state {C,n,m}).
+    """
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    scale = d ** -0.25                       # applied to q and k each
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32) * scale
+    vf = v.astype(jnp.float32)
+
+    def resh(x):                             # (b,s,...) -> (b,nc,chunk,...)
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    qc, kc, vc = resh(qf), resh(kf), resh(vf)
+    ic, fc = resh(i_pre), resh(f_pre)
+
+    if state0 is None:
+        state0 = {"C": jnp.zeros((b, h, d, d), jnp.float32),
+                  "n": jnp.zeros((b, h, d), jnp.float32),
+                  "m": jnp.full((b, h), -1e30, jnp.float32)}
+
+    # ---- phase A: vectorized over chunks ---------------------------------
+    log_f = jax.nn.log_sigmoid(fc)           # (b,c,q,h)
+    cum = jnp.cumsum(log_f, axis=2)          # inclusive Σ_{t<=j} log f_t
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # intra log-weights: cum_i - cum_j + i_pre_j (j <= i)
+    dmat = cum[:, :, :, None, :] - cum[:, :, None, :, :] \
+        + ic[:, :, None, :, :]               # (b,c,q,k,h)
+    dmat = jnp.where(tri[None, None, :, :, None], dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=3)          # (b,c,q,h)
+    dexp = jnp.exp(dmat - m_intra[:, :, :, None, :])
+    scores = jnp.einsum("bcqhd,bckhd->bcqkh", qc, kc) * dexp
+    num_intra = jnp.einsum("bcqkh,bckhe->bcqhe", scores, vc)
+    den_intra = scores.sum(axis=3)           # (b,c,q,h)
+
+    # per-chunk state summaries (to chunk end), local stabilizer m_g
+    cum_q = cum[:, :, -1, :]                 # (b,c,h)
+    g = cum_q[:, :, None, :] - cum + ic      # (b,c,q,h)
+    m_g = jnp.max(g, axis=2)                 # (b,c,h)
+    wj = jnp.exp(g - m_g[:, :, None, :])     # (b,c,q,h)
+    G = jnp.einsum("bcqh,bcqhd,bcqhe->bchde", wj, kc, vc)   # (b,c,h,d,d)
+    ng = jnp.einsum("bcqh,bcqhd->bchd", wj, kc)             # (b,c,h,d)
+
+    # ---- cheap scan: carry (Ĉ, n̂, m) across chunks -----------------------
+    def step(st, inp):
+        G_c, ng_c, mg_c, cq_c = inp
+        m_new = jnp.maximum(st["m"] + cq_c, mg_c)
+        w0 = jnp.exp(st["m"] + cq_c - m_new)
+        w1 = jnp.exp(mg_c - m_new)
+        C_new = st["C"] * w0[..., None, None] + G_c * w1[..., None, None]
+        n_new = st["n"] * w0[..., None] + ng_c * w1[..., None]
+        new = {"C": C_new, "n": n_new, "m": m_new}
+        return new, st                        # emit the *incoming* state
+
+    tr = lambda a: jnp.moveaxis(a, 1, 0)
+    state, prevs = jax.lax.scan(
+        step, state0, (tr(G), tr(ng), tr(m_g), tr(cum_q)))
+    C_prev = jnp.moveaxis(prevs["C"], 0, 1)   # (b,c,h,d,d)
+    n_prev = jnp.moveaxis(prevs["n"], 0, 1)   # (b,c,h,d)
+    m_prev = jnp.moveaxis(prevs["m"], 0, 1)   # (b,c,h)
+
+    # ---- phase B: merge state and intra tracks (joint stabilizer) --------
+    m_state = m_prev[:, :, None, :] + cum     # (b,c,q,h)
+    m_i = jnp.maximum(m_state, m_intra)
+    w_state = jnp.exp(m_state - m_i)
+    w_intra = jnp.exp(m_intra - m_i)
+    num = num_intra * w_intra[..., None] + \
+        jnp.einsum("bcqhd,bchde->bcqhe", qc, C_prev) * w_state[..., None]
+    den = den_intra * w_intra + \
+        jnp.einsum("bcqhd,bchd->bcqh", qc, n_prev) * w_state
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_i))
+    out = (num / den[..., None]).reshape(b, s, h, d)
+    return out.astype(q.dtype), state
+
+
+#: sequences above this use the chunkwise mLSTM path
+MLSTM_CHUNK_THRESHOLD = 512
+
+
+def apply_mlstm(params: PyTree, x: jnp.ndarray, cfg: XLSTMConfig,
+                return_state: bool = False):
+    """Full-sequence mLSTM block (residual handled by caller)."""
+    b, s, _ = x.shape
+    di = params["wq"].shape[0]
+    h = cfg.n_heads
+    d = di // h
+    up = jnp.einsum("bsd,de->bse", x, params["up"])
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xm, params["conv"]))
+    q = jnp.einsum("bse,ef->bsf", xc, params["wq"]).reshape(b, s, h, d)
+    k = jnp.einsum("bse,ef->bsf", xc, params["wk"]).reshape(b, s, h, d)
+    v = jnp.einsum("bse,ef->bsf", xm, params["wv"]).reshape(b, s, h, d)
+    gates = jnp.einsum("bse,eg->bsg", xc.astype(jnp.float32), params["w_if"])
+    gates = gates + params["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                    # (b,s,h)
+    if s > MLSTM_CHUNK_THRESHOLD or return_state:
+        y, state = _mlstm_chunked(q, k, v, i_pre, f_pre)
+        y = y.reshape(b, s, di)
+    else:
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre).reshape(b, s, di)
+        state = None
+    y = rms_norm(y, params["norm_w"])
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down"])
+    return (out, state, xm) if return_state else out
+
+
+def apply_mlstm_with_state(params: PyTree, x: jnp.ndarray, cfg: XLSTMConfig
+                           ) -> Tuple[jnp.ndarray, Dict]:
+    """Prefill entry point: full-seq output + decode-ready cache."""
+    out, state, xm = apply_mlstm(params, x, cfg, return_state=True)
+    k = cfg.conv_kernel
+    conv = xm[:, -(k - 1):, :]
+    pad = (k - 1) - conv.shape[1]
+    if pad > 0:
+        conv = jnp.pad(conv, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"C": state["C"], "n": state["n"], "m": state["m"],
+                 "conv": conv}
+
+
+def init_mlstm_cache(batch: int, d_model: int, cfg: XLSTMConfig, dtype):
+    di = cfg.expand * d_model
+    d = di // cfg.n_heads
+    return {"C": jnp.zeros((batch, cfg.n_heads, d, d), jnp.float32),
+            "n": jnp.zeros((batch, cfg.n_heads, d), jnp.float32),
+            "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, di), dtype)}
+
+
+def decode_mlstm(params: PyTree, x: jnp.ndarray, cache: Dict, cfg: XLSTMConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token mLSTM recurrence. x: (b, 1, d)."""
+    b = x.shape[0]
+    di = params["wq"].shape[0]
+    h, d = cfg.n_heads, di // cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, params["up"])[:, 0]
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([cache["conv"], xm[:, None, :]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, params["conv"]))
+    q = (xc @ params["wq"]).reshape(b, h, d)
+    k = (xc @ params["wk"]).reshape(b, h, d)
+    v = (xm @ params["wv"]).reshape(b, h, d)
+    gates = xc.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                    # (b,h)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + cache["m"], i_pre)
+    f_sc = jnp.exp(log_f + cache["m"] - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    kf = k.astype(jnp.float32) * (d ** -0.25)
+    qf = q.astype(jnp.float32) * (d ** -0.25)
+    c_new = cache["C"] * f_sc[..., None] + i_sc[..., None] * \
+        jnp.einsum("bhd,bhe->bhde", kf, v.astype(jnp.float32))
+    n_new = cache["n"] * f_sc + i_sc * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    y = (num / den).reshape(b, di).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"]) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, params["down"])[:, None, :]
+    return out, {"C": c_new, "n": n_new, "m": m_new,
+                 "conv": window[:, 1:, :]}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def make_slstm_params(key, d_model: int, cfg: XLSTMConfig, dtype):
+    h = cfg.n_heads
+    dh = d_model // h
+    d_ff = int(d_model * cfg.ffn_factor)
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_gates": dense_init(ks[0], d_model, 4 * d_model, jnp.float32),
+        "r_gates": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+                    * dh ** -0.5),
+        "b_gates": jnp.zeros((4 * d_model,), jnp.float32),
+        "norm_w": jnp.ones((d_model,), dtype),
+        "ffn_up": dense_init(ks[2], d_model, d_ff, dtype),
+        "ffn_down": dense_init(ks[3], d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+    axes = {"w_gates": ("embed", "gates"), "r_gates": ("heads", "head_dim", "gates"),
+            "b_gates": ("gates",), "norm_w": ("embed",),
+            "ffn_up": ("embed", "mlp"), "ffn_down": ("mlp", "embed")}
+    return params, axes
+
+
+def init_slstm_state(batch: int, d_model: int, cfg: XLSTMConfig):
+    h, dh = cfg.n_heads, d_model // cfg.n_heads
+    zero = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": zero, "n": zero + 1e-6, "h": zero,
+            "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+def _slstm_step(params, cfg: XLSTMConfig, state, wx_t):
+    """One sLSTM step. wx_t: (b, 4*d_model) input pre-activation."""
+    h_heads = state["h"]                                           # (b,H,dh)
+    rec = jnp.einsum("bhd,hdg->bhg", h_heads, params["r_gates"])   # (b,H,4dh)
+    b, H, _ = rec.shape
+    dh = h_heads.shape[-1]
+    wx = wx_t.reshape(b, 4, H, dh).transpose(0, 2, 1, 3).reshape(b, H, 4 * dh)
+    pre = wx + rec
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)        # (b,H,dh)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + state["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_sc * state["c"] + i_sc * z
+    n_new = f_sc * state["n"] + i_sc
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def apply_slstm(params: PyTree, x: jnp.ndarray, cfg: XLSTMConfig,
+                state: Optional[Dict] = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence sLSTM recurrence + FFN. x: (b, s, d)."""
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), params["w_gates"])
+    wx = wx + params["b_gates"]
+    if state is None:
+        state = init_slstm_state(b, d, cfg)
+
+    def step(st, wx_t):
+        st2 = _slstm_step(params, cfg, st, wx_t)
+        return st2, st2["h"]
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)  # (b,s,d)
+    y = rms_norm(y, params["norm_w"])
+    ff = jax.nn.gelu(jnp.einsum("bsd,df->bsf", y, params["ffn_up"]))
+    return jnp.einsum("bsf,fd->bsd", ff, params["ffn_down"]), state
+
+
+def decode_slstm(params: PyTree, x: jnp.ndarray, state: Dict, cfg: XLSTMConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """One-token sLSTM step. x: (b, 1, d)."""
+    b, _, d = x.shape
+    wx = jnp.einsum("bd,dg->bg", x[:, 0].astype(jnp.float32),
+                    params["w_gates"]) + params["b_gates"]
+    st = _slstm_step(params, cfg, state, wx)
+    y = st["h"].reshape(b, d).astype(x.dtype)
+    y = rms_norm(y, params["norm_w"])
+    ff = jax.nn.gelu(jnp.einsum("bd,df->bf", y, params["ffn_up"]))
+    out = jnp.einsum("bf,fd->bd", ff, params["ffn_down"])[:, None, :]
+    return out, st

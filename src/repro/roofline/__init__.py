@@ -1,0 +1,7 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware)."""
+from repro.roofline.hw import TPU_V5E, HardwareSpec
+from repro.roofline.analysis import (RooflineReport, analyze_lowered,
+                                     collective_bytes, roofline_terms)
+
+__all__ = ["TPU_V5E", "HardwareSpec", "RooflineReport", "analyze_lowered",
+           "collective_bytes", "roofline_terms"]

@@ -1,0 +1,176 @@
+"""Three-term roofline from a compiled (or lowered) XLA artifact.
+
+  compute    = HLO_FLOPs / peak_FLOP/s            (per device)
+  memory     = HLO_bytes / HBM_bw                 (per device)
+  collective = Σ per-op payload x alg_factor / link_bw
+
+``cost_analysis()`` reports the partitioned per-device module, so the
+FLOP/byte counts are already per-chip. Collective payloads are parsed
+out of the HLO text (cost_analysis does not expose them): for every
+all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we sum the *result* buffer sizes, apply a standard
+ring-algorithm factor, and charge the chip's ICI links.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) gives the useful-
+compute ratio — a remat/redundancy waste detector.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.roofline.hw import TPU_V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+#: ring-algorithm traffic factor per collective kind (payload multiples
+#: crossing a chip's links): all-reduce = reduce-scatter + all-gather.
+_ALG_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """bytes of one HLO type string, e.g. 'bf16[256,4096]{1,0}'."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Tuple[float, Dict[str, float],
+                                             Dict[str, int]]:
+    """Scan HLO text; returns (weighted_bytes, bytes_by_kind, count_by_kind).
+
+    ``-done`` ops are skipped (the ``-start`` carries the payload);
+    weighted_bytes already includes the per-kind algorithm factor.
+    """
+    by_kind_bytes: Dict[str, float] = {}
+    by_kind_count: Dict[str, int] = {}
+    weighted = 0.0
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        nbytes = _shape_bytes(type_str)
+        by_kind_bytes[kind] = by_kind_bytes.get(kind, 0.0) + nbytes
+        by_kind_count[kind] = by_kind_count.get(kind, 0) + 1
+        weighted += nbytes * _ALG_FACTOR[kind]
+    return weighted, by_kind_bytes, by_kind_count
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_weighted: float
+    collective_by_kind: Dict[str, float]
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    peak_memory_per_chip: float = 0.0
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_weighted_bytes: float,
+                   hw: HardwareSpec = TPU_V5E) -> Tuple[float, float, float]:
+    compute = flops_per_chip / hw.peak_flops_bf16
+    memory = bytes_per_chip / hw.hbm_bandwidth
+    collective = coll_weighted_bytes / (hw.ici_link_bandwidth *
+                                        hw.ici_links_per_chip)
+    return compute, memory, collective
+
+
+def analyze_lowered(lowered, *, arch: str, shape: str, mesh_desc: str,
+                    chips: int, compiled=None,
+                    model_flops: float = 0.0,
+                    hw: HardwareSpec = TPU_V5E) -> RooflineReport:
+    """Roofline terms from a lowered (and optionally compiled) step."""
+    if compiled is None:
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):          # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    weighted, by_kind, counts = collective_bytes(hlo)
+    compute_s, memory_s, collective_s = roofline_terms(
+        flops, nbytes, weighted, hw)
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    peak_mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        peak_mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                         getattr(ma, "argument_size_in_bytes", 0) +
+                         getattr(ma, "output_size_in_bytes", 0) -
+                         getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    useful = (model_flops / chips / flops) if flops else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=nbytes,
+        collective_bytes_weighted=weighted, collective_by_kind=by_kind,
+        collective_counts=counts, compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_flops=model_flops, useful_ratio=useful,
+        peak_memory_per_chip=peak_mem)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference steps.
+
+    N = active params; D = tokens processed by the step (decode: one
+    token per sequence).
+    """
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch          # one new token per sequence
+    return 2.0 * n * tokens

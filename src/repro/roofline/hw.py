@@ -1,0 +1,28 @@
+"""Target hardware constants (TPU v5e) for converting HLO counts to
+seconds. The container compiles on CPU; v5e is the *target*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bandwidth: float        # bytes/s per chip
+    ici_link_bandwidth: float   # bytes/s per link direction
+    ici_links_per_chip: int     # 2-D torus: 4 links
+    hbm_bytes: float            # capacity per chip
+    vmem_bytes: float
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    ici_links_per_chip=4,
+    hbm_bytes=16e9,
+    vmem_bytes=128e6,
+)

@@ -1,0 +1,20 @@
+"""Simulated serverless (FaaS) substrate.
+
+The paper's testbed is a 96-core Docker host; this container has no
+Docker/FaaS runtime, so functions are modelled by calibrated
+``runtime(cpu, mem)`` response surfaces with the three affinity classes
+observed in §II-A (CPU-bound, memory-bound, balanced), plus an OOM
+floor. The AARC/BO/MAFF searchers only ever see the
+:class:`repro.core.env.Environment` interface, so swapping this
+simulator for a real platform is a one-line change.
+"""
+from repro.serverless.function import FunctionSpec
+from repro.serverless.platform import (SimulatedPlatform, make_env,
+                                       make_scaled_env)
+from repro.serverless.workloads import (WORKLOADS, chatbot, ml_pipeline,
+                                        video_analysis, workload_slo)
+
+__all__ = [
+    "FunctionSpec", "SimulatedPlatform", "make_env", "make_scaled_env",
+    "WORKLOADS", "chatbot", "ml_pipeline", "video_analysis", "workload_slo",
+]

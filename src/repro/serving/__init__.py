@@ -1,0 +1,7 @@
+"""Serving substrate: slot-based continuous batching over the model's
+prefill/decode entry points with a sharded KV/state cache.
+"""
+from repro.serving.engine import GenerationResult, ServeEngine
+from repro.serving.scheduler import Request, RequestQueue
+
+__all__ = ["ServeEngine", "GenerationResult", "Request", "RequestQueue"]

@@ -1,0 +1,53 @@
+"""Request queue + slot assignment (continuous-batching-lite).
+
+The engine owns ``n_slots`` concurrent sequences (the cache batch dim).
+Each decode step advances every active slot by one token; finished
+slots (EOS or max_tokens) are immediately refilled from the queue with
+a single-sequence prefill scattered into the slot — so the batch never
+drains, the standard continuous-batching property.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_token: Optional[int] = None
+    # filled by the engine
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        if self.eos_token is not None and self.generated \
+                and self.generated[-1] == self.eos_token:
+            return True
+        return len(self.generated) >= self.max_new_tokens
+
+
+class RequestQueue:
+    def __init__(self):
+        self._q: Deque[Request] = collections.deque()
+        self._next_uid = 0
+
+    def submit(self, prompt, max_new_tokens: int = 32,
+               eos_token: Optional[int] = None) -> Request:
+        req = Request(uid=self._next_uid, prompt=np.asarray(prompt,
+                                                            np.int32),
+                      max_new_tokens=max_new_tokens, eos_token=eos_token)
+        self._next_uid += 1
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Optional[Request]:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)

@@ -1,0 +1,16 @@
+"""Training substrate: AdamW (ZeRO-sharded states), microbatched grad
+accumulation, loss-scale-free bf16 training with fp32 master moments,
+deterministic data pipeline, and atomic/elastic checkpointing.
+"""
+from repro.training.optimizer import (AdamWConfig, TrainState, adamw_init,
+                                      adamw_update, train_state_axes)
+from repro.training.train_step import make_train_step
+from repro.training.data import SyntheticDataset, batch_specs
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+
+__all__ = [
+    "AdamWConfig", "TrainState", "adamw_init", "adamw_update",
+    "train_state_axes", "make_train_step", "SyntheticDataset",
+    "batch_specs", "save_checkpoint", "restore_checkpoint", "latest_step",
+]

@@ -1,0 +1,133 @@
+"""Graph queries of Algorithm 1 (critical path / detours / windows) —
+unit cases + hypothesis property tests on random DAGs."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.dag import Node, Workflow
+from repro.core.critical_path import (find_critical_path,
+                                      find_detour_subpath, runtime_sum)
+
+
+def diamond(wa=1.0, wb=5.0, wc=2.0, wd=1.0):
+    wf = Workflow("diamond")
+    for name, w in (("a", wa), ("b", wb), ("c", wc), ("d", wd)):
+        wf.add_function(name)
+        wf.nodes[name].runtime = w
+    wf.add_edge("a", "b")
+    wf.add_edge("a", "c")
+    wf.add_edge("b", "d")
+    wf.add_edge("c", "d")
+    return wf
+
+
+def test_critical_path_picks_heavier_branch():
+    wf = diamond()
+    assert find_critical_path(wf) == ["a", "b", "d"]
+    wf2 = diamond(wb=1.0, wc=9.0)
+    assert find_critical_path(wf2) == ["a", "c", "d"]
+
+
+def test_e2e_latency_is_longest_path():
+    wf = diamond()
+    assert wf.end_to_end_latency() == pytest.approx(1 + 5 + 1)
+
+
+def test_detour_subpath_of_diamond():
+    wf = diamond()
+    cp = find_critical_path(wf)
+    subs = find_detour_subpath(wf, cp)
+    assert len(subs) == 1
+    sp = subs[0]
+    assert sp.start == "a" and sp.end == "d" and sp.interior == ["c"]
+    # sub-SLO window = time the critical path spends between the anchors
+    assert runtime_sum(wf, cp, sp.start, sp.end) == pytest.approx(5.0)
+
+
+def test_detour_from_source_to_sink():
+    wf = Workflow()
+    for n, w in (("a", 3.0), ("b", 1.0), ("x", 0.5)):
+        wf.add_function(n)
+        wf.nodes[n].runtime = w
+    wf.add_edge("a", "b")
+    wf.add_edge("x", "b")           # x is an off-CP source
+    cp = find_critical_path(wf)
+    assert cp == ["a", "b"]
+    subs = find_detour_subpath(wf, cp)
+    assert any(s.start is None and s.interior == ["x"] for s in subs)
+
+
+def test_cycle_rejected():
+    wf = Workflow()
+    wf.add_function("a")
+    wf.add_function("b")
+    wf.add_edge("a", "b")
+    with pytest.raises(ValueError):
+        wf.add_edge("b", "a")
+
+
+# -- property tests ----------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(3, 12))
+    wf = Workflow("rand")
+    names = [f"n{i}" for i in range(n)]
+    for name in names:
+        wf.add_function(name)
+        wf.nodes[name].runtime = draw(
+            st.floats(0.1, 10.0, allow_nan=False, allow_infinity=False))
+    # edges only i -> j with i < j: guaranteed acyclic
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()) and draw(st.integers(0, 2)) == 0:
+                wf.add_edge(names[i], names[j])
+    return wf
+
+
+@given(random_dag())
+@settings(max_examples=60, deadline=None)
+def test_critical_path_properties(wf):
+    cp = find_critical_path(wf)
+    assert cp, "non-empty DAG must have a critical path"
+    # path is connected
+    for a, b in zip(cp, cp[1:]):
+        assert b in wf.successors(a)
+    # its weight equals the end-to-end latency
+    assert wf.path_latency(cp) == pytest.approx(wf.end_to_end_latency())
+    # no other path is longer: compare against every simple source path
+    # via DP (end_to_end_latency is already the DP longest path)
+    assert wf.path_latency(cp) >= max(
+        wf.nodes[n].runtime for n in wf.nodes)
+
+
+@given(random_dag())
+@settings(max_examples=60, deadline=None)
+def test_detours_cover_off_cp_nodes(wf):
+    cp = find_critical_path(wf)
+    subs = find_detour_subpath(wf, cp)
+    covered = set()
+    for sp in subs:
+        covered.update(sp.interior)
+        # interior nodes are strictly off the critical path
+        assert not (set(sp.interior) & set(cp))
+        # anchors, when present, are on the critical path
+        assert sp.start is None or sp.start in cp
+        assert sp.end is None or sp.end in cp
+    # every reachable off-CP node with a connection to the DAG appears
+    # in at least one detour (detours + flags give full coverage)
+    off = set(wf.nodes) - set(cp)
+    orphan = {n for n in off
+              if not wf.predecessors(n) and not wf.successors(n)}
+    assert covered >= off - orphan
+
+
+@given(random_dag())
+@settings(max_examples=40, deadline=None)
+def test_runtime_sum_windows_are_consistent(wf):
+    cp = find_critical_path(wf)
+    total = runtime_sum(wf, cp, None, None)
+    assert total == pytest.approx(wf.path_latency(cp))
+    if len(cp) >= 2:
+        # window between consecutive anchors is empty
+        assert runtime_sum(wf, cp, cp[0], cp[1]) == pytest.approx(0.0)

@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in
+interpret mode (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import fused_rmsnorm
+from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_naive, ssd_scan_ref
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-4),
+       jnp.bfloat16: dict(atol=6e-2, rtol=6e-2)}
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d", [
+    (2, 256, 4, 2, 64),
+    (1, 512, 8, 2, 128),
+    (2, 128, 4, 4, 32),
+    (1, 256, 6, 1, 64),          # MQA extreme
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, hkv, d, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("block_q,block_kv", [(64, 64), (128, 64),
+                                              (64, 128)])
+def test_flash_attention_block_shapes(block_q, block_kv):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    out = flash_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                          interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               **TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 8, 64, 64, 128),
+    (2, 64, 2, 16, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.key(2), 5)
+    xh = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    bm = jax.random.normal(ks[1], (b, s, n), dtype)
+    cm = jax.random.normal(ks[2], (b, s, n), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    log_a = -dt * jnp.exp(jax.random.normal(ks[4], (b, s, h)) * 0.3)
+    y, hf = ssd_scan(xh, bm, cm, log_a, dt, chunk=chunk, interpret=True)
+    yr, hr = ssd_scan_ref(xh, bm, cm, log_a, dt, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr),
+                               atol=1e-3, rtol=1e-2)
+
+
+def test_ssd_chunked_ref_matches_naive_recurrence():
+    """The chunked reference itself is validated against the O(s)
+    per-token recurrence (ground-truth SSD semantics)."""
+    ks = jax.random.split(jax.random.key(3), 5)
+    b, s, h, p, n = 2, 96, 2, 16, 8
+    xh = jax.random.normal(ks[0], (b, s, h, p))
+    bm = jax.random.normal(ks[1], (b, s, n))
+    cm = jax.random.normal(ks[2], (b, s, n))
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    log_a = -dt * jnp.exp(jax.random.normal(ks[4], (b, s, h)) * 0.3)
+    yr, hr = ssd_scan_ref(xh, bm, cm, log_a, dt, chunk=32)
+    yn, hn = ssd_scan_naive(xh, bm, cm, log_a, dt)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yn),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(hn),
+                               atol=1e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 128), (4, 100, 256), (512, 384),
+                                   (1, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm_sweep(shape, dtype):
+    ks = jax.random.split(jax.random.key(4), 3)
+    x = jax.random.normal(ks[0], shape, dtype)
+    r = jax.random.normal(ks[1], shape, dtype)
+    w = jax.random.normal(ks[2], shape[-1:], dtype)
+    y, nr = fused_rmsnorm(x, r, w, interpret=True)
+    yr, nrr = fused_rmsnorm_ref(x, r, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOL[dtype])
+    np.testing.assert_allclose(np.asarray(nr, np.float32),
+                               np.asarray(nrr, np.float32), **TOL[dtype])
+
+
+def test_model_attention_paths_agree():
+    """attn_impl='pallas_interpret' equals the XLA path in the full
+    model (block-level integration of the kernel)."""
+    from repro.configs.registry import reduced_config
+    from repro.models.model import Model
+    cfg_x = reduced_config("olmo-1b")
+    cfg_p = reduced_config("olmo-1b", attn_impl="pallas_interpret")
+    mx, mp = Model(cfg_x), Model(cfg_p)
+    params = mx.init(jax.random.key(5))
+    batch = {"tokens": jax.random.randint(jax.random.key(6), (2, 64), 0,
+                                          cfg_x.vocab)}
+    lx, _ = mx.forward(params, {**batch, "labels": batch["tokens"]})
+    lp, _ = mp.forward(params, {**batch, "labels": batch["tokens"]})
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_mamba_kernel_path_in_model():
+    from repro.configs.registry import reduced_config
+    from repro.models.model import Model
+    cfg_x = reduced_config("zamba2-1.2b")
+    cfg_k = reduced_config("zamba2-1.2b", use_ssm_kernel=True,
+                           attn_impl="pallas_interpret")
+    mx, mk = Model(cfg_x), Model(cfg_k)
+    params = mx.init(jax.random.key(7))
+    batch = {"tokens": jax.random.randint(jax.random.key(8), (2, 64), 0,
+                                          cfg_x.vocab)}
+    lx, _ = mx.forward(params, {**batch, "labels": batch["tokens"]})
+    lk, _ = mk.forward(params, {**batch, "labels": batch["tokens"]})
+    np.testing.assert_allclose(np.asarray(lx), np.asarray(lk),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,111 @@
+"""Numerical equivalence of the §Perf hillclimb features: they must
+change *where bytes move*, never *what is computed*."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import MoEConfig, apply_moe, make_moe_params
+
+
+def _x(key, b=2, s=16, d=64):
+    return jax.random.normal(key, (b, s, d))
+
+
+def test_grouped_dispatch_matches_global_dropfree():
+    cfg_g = MoEConfig(n_experts=8, top_k=2, expert_ff=32, shared_ff=64,
+                      capacity_factor=8.0, dispatch="global")
+    cfg_l = dataclasses.replace(cfg_g, dispatch="grouped")
+    params, _ = make_moe_params(jax.random.key(0), 64, cfg_g, jnp.float32)
+    x = _x(jax.random.key(1))
+    yg, ag = apply_moe(params, x, cfg_g)
+    yl, al = apply_moe(params, x, cfg_l)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yl), atol=1e-6)
+    np.testing.assert_allclose(float(ag), float(al), atol=1e-6)
+
+
+def test_expert_padding_is_bit_exact():
+    """EP padding (dead experts masked to -inf) never changes outputs."""
+    cfg_p = MoEConfig(n_experts=6, top_k=2, expert_ff=32,
+                      capacity_factor=8.0, pad_to=8)
+    params_p, _ = make_moe_params(jax.random.key(0), 64, cfg_p,
+                                  jnp.float32)
+    x = _x(jax.random.key(1))
+    yp, _ = apply_moe(params_p, x, cfg_p)
+    cfg_u = dataclasses.replace(cfg_p, pad_to=0)
+    params_u = {k: (v[:, :6] if k == "router" else v[:6])
+                for k, v in params_p.items()}
+    yu, _ = apply_moe(params_u, x, cfg_u)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yu), atol=1e-6)
+
+
+def test_padded_experts_receive_no_tokens():
+    cfg = MoEConfig(n_experts=6, top_k=2, expert_ff=32,
+                    capacity_factor=8.0, pad_to=8)
+    params, _ = make_moe_params(jax.random.key(0), 64, cfg, jnp.float32)
+    from repro.models.moe import _routing
+    x = _x(jax.random.key(1))
+    routing, probs, top_idx = _routing(params, x.reshape(-1, 64), cfg)
+    assert int(top_idx.max()) < 6, "router selected a dead expert"
+    assert float(routing[:, 6:].sum()) == 0.0
+
+
+def test_gqa_expand_path_matches_grouped_path():
+    """The head-sharded (repeat) attention path == the grouped path."""
+    from repro.models import attention as A
+    ks = jax.random.split(jax.random.key(2), 3)
+    b, s, h, hkv, d = 2, 256, 8, 2, 32
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    out_expand = A._sdpa_xla(q, k, v, causal=True)  # s>=128: repeat path
+    # force the grouped path by lowering the threshold
+    old = A.GQA_EXPAND_MIN_SQ
+    A.GQA_EXPAND_MIN_SQ = 10_000
+    try:
+        out_grouped = A._sdpa_xla(q, k, v, causal=True)
+    finally:
+        A.GQA_EXPAND_MIN_SQ = old
+    np.testing.assert_allclose(np.asarray(out_expand),
+                               np.asarray(out_grouped), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_sp_rules_shard_scores_over_seq_when_heads_dont_divide():
+    """B3: with act_seq->model, 36 heads fall through to seq sharding."""
+    from repro.distributed.sharding import FSDP_RULES
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    rules = FSDP_RULES.override(act_seq="model")
+    spec = rules.spec(("batch", "heads_act", "act_seq", None),
+                      (32, 36, 4096, 4096), FakeMesh())
+    import jax as _jax
+    assert spec == _jax.sharding.PartitionSpec("data", None, "model")
+    # heads win when they divide (llama: 64)
+    spec2 = rules.spec(("batch", "heads_act", "act_seq", None),
+                       (32, 64, 4096, 4096), FakeMesh())
+    assert spec2 == _jax.sharding.PartitionSpec("data", "model")
+
+
+def test_int8_kv_cache_decode_accuracy():
+    """D1: int8 KV cache keeps decode logits within ~1% of bf16 path."""
+    from repro.configs.registry import reduced_config
+    from repro.models.model import Model
+    cfg = reduced_config("qwen1.5-32b", kv_cache_quant=True)
+    cfg_ref = reduced_config("qwen1.5-32b")
+    m, mr = Model(cfg), Model(cfg_ref)
+    params = mr.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    full, _ = mr.forward(params, {"tokens": tokens, "labels": tokens})
+    lg, cache = m.prefill(params, {"tokens": tokens[:, :12]}, max_len=20)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    errs = [float(jnp.abs(lg[:, 0] - full[:, 11]).max())]
+    for i in range(12, 16):
+        lg, cache = m.decode_step(params, cache, tokens[:, i:i + 1])
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    rel = max(errs) / float(jnp.abs(full).max())
+    assert rel < 0.05, (errs, rel)

@@ -1,0 +1,94 @@
+"""Algorithm 1 (Graph-Centric Scheduler) end-to-end on the paper's
+three workflows + the §IV-D input-aware plugin."""
+import pytest
+
+from repro.core.cost import workflow_cost
+from repro.core.input_aware import InputAwareEngine
+from repro.core.resources import BASE_CONFIG
+from repro.core.scheduler import GraphCentricScheduler
+from repro.serverless.platform import SimulatedPlatform, make_scaled_env
+from repro.serverless.workloads import WORKLOADS, workload_slo
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_schedule_meets_slo_and_cuts_cost(name):
+    wf = WORKLOADS[name]()
+    slo = workload_slo(name)
+    env = SimulatedPlatform().environment()
+
+    # base cost
+    base_wf = WORKLOADS[name]()
+    for node in base_wf:
+        node.config = BASE_CONFIG.copy()
+    base_e2e = base_wf.execute(env.oracle)
+    base_cost = workflow_cost(env.pricing, base_wf)
+    env.reset_trace()
+
+    result = GraphCentricScheduler(env).schedule(wf, slo)
+    assert result.e2e_runtime <= slo + 1e-9, "SLO violated"
+    assert result.cost < base_cost, "no cost saving over base config"
+    assert set(result.configs) == set(wf.nodes), "missing per-function config"
+    assert base_e2e <= slo, "workload calibration: base must meet SLO"
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_every_function_scheduled_once(name):
+    wf = WORKLOADS[name]()
+    env = SimulatedPlatform().environment()
+    GraphCentricScheduler(env).schedule(wf, workload_slo(name))
+    assert all(node.scheduled for node in wf)
+
+
+def test_critical_path_first_then_subpaths():
+    """Samples for the critical path appear before sub-path samples."""
+    wf = WORKLOADS["chatbot"]()
+    env = SimulatedPlatform().environment()
+    result = GraphCentricScheduler(env).schedule(wf, 120.0)
+    cp = set(result.critical_path)
+    seen_subpath = False
+    for s in env.trace.samples:
+        if not s.note.startswith("aarc:") or s.note in ("aarc:base",
+                                                        "aarc:final"):
+            continue
+        func = s.note.split(":")[1]
+        if func in cp:
+            assert not seen_subpath, "critical path configured after subpath"
+        else:
+            seen_subpath = True
+
+
+def test_infeasible_slo_raises():
+    wf = WORKLOADS["chatbot"]()
+    env = SimulatedPlatform().environment()
+    with pytest.raises(ValueError):
+        GraphCentricScheduler(env).schedule(wf, slo=1.0)
+
+
+def test_input_aware_plugin():
+    """§IV-D: per-input-class tables; heavy inputs stay within SLO."""
+    from repro.serverless.workloads import video_analysis
+    slo = 600.0
+    engine = InputAwareEngine(video_analysis, make_scaled_env, slo)
+    engine.profile()
+    assert set(engine.tables) == {"light", "middle", "heavy"}
+
+    for cls_name, scale in (("light", 0.35), ("middle", 1.0),
+                            ("heavy", 1.7)):
+        cfgs = engine.dispatch({"scale": scale})
+        wf = video_analysis()
+        wf.apply_configs(cfgs)
+        env = make_scaled_env(scale)
+        e2e = wf.execute(env.oracle)
+        assert e2e <= slo + 1e-9, f"{cls_name} violates SLO"
+
+    # light configs must be cheaper than heavy configs on light input
+    wf_l = video_analysis()
+    wf_l.apply_configs(engine.tables["light"])
+    env = make_scaled_env(0.35)
+    wf_l.execute(env.oracle)
+    light_cost = workflow_cost(env.pricing, wf_l)
+    wf_h = video_analysis()
+    wf_h.apply_configs(engine.tables["heavy"])
+    wf_h.execute(env.oracle)
+    heavy_cost = workflow_cost(env.pricing, wf_h)
+    assert light_cost < heavy_cost

@@ -1,0 +1,106 @@
+"""Serverless simulator: response-surface properties + calibration."""
+import math
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.env import ExecutionError
+from repro.core.resources import ResourceConfig, coupled_config
+from repro.serverless.function import FunctionSpec
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import (WORKLOADS, chatbot, ml_pipeline,
+                                        video_analysis, workload_slo)
+
+SPEC = FunctionSpec("f", cpu_work=20.0, parallel_frac=0.8, mem_floor=512,
+                    mem_knee=1024, mem_penalty=3.0, io_time=1.0)
+
+
+@given(st.floats(0.1, 10.0), st.floats(0.1, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_runtime_monotone_in_cpu(c1, c2):
+    lo, hi = sorted((c1, c2))
+    cfg_lo = ResourceConfig(cpu=lo, mem=2048)
+    cfg_hi = ResourceConfig(cpu=hi, mem=2048)
+    assert SPEC.runtime(cfg_hi) <= SPEC.runtime(cfg_lo) + 1e-9
+
+
+@given(st.floats(512, 10240), st.floats(512, 10240))
+@settings(max_examples=50, deadline=None)
+def test_runtime_monotone_in_mem(m1, m2):
+    lo, hi = sorted((m1, m2))
+    assert SPEC.runtime(ResourceConfig(cpu=2, mem=hi)) <= \
+        SPEC.runtime(ResourceConfig(cpu=2, mem=lo)) + 1e-9
+
+
+def test_oom_below_floor():
+    with pytest.raises(ExecutionError):
+        SPEC.runtime(ResourceConfig(cpu=2, mem=256))
+
+
+def test_memory_flat_above_knee():
+    """Fig. 2a/2b: runtime unchanged as memory varies above the knee."""
+    r1 = SPEC.runtime(ResourceConfig(cpu=2, mem=1024))
+    r2 = SPEC.runtime(ResourceConfig(cpu=2, mem=10240))
+    assert r1 == pytest.approx(r2)
+
+
+def test_input_scale_grows_work_and_floor():
+    cfg = ResourceConfig(cpu=2, mem=2048)
+    assert SPEC.runtime(cfg, input_scale=2.0) > SPEC.runtime(cfg)
+    with pytest.raises(ExecutionError):
+        SPEC.runtime(ResourceConfig(cpu=2, mem=600), input_scale=2.0)
+
+
+def test_clamped_runtime_finite_and_slower():
+    bad = ResourceConfig(cpu=2, mem=256)
+    good = ResourceConfig(cpu=2, mem=2048)
+    rc = SPEC.runtime_clamped(bad)
+    assert math.isfinite(rc) and rc > SPEC.runtime(good)
+
+
+def test_stochastic_mode_reproducible():
+    p1 = SimulatedPlatform(noise_sigma=0.025, seed=7)
+    p2 = SimulatedPlatform(noise_sigma=0.025, seed=7)
+    wf1, wf2 = chatbot(), chatbot()
+    r1 = wf1.execute(p1.oracle)
+    r2 = wf2.execute(p2.oracle)
+    assert r1 == pytest.approx(r2)
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_base_config_meets_slo(name):
+    """Calibration: the over-provisioned base config must satisfy the
+    paper's SLOs (120/120/600 s) — Algorithm 1's precondition."""
+    wf = WORKLOADS[name]()
+    env = SimulatedPlatform().environment()
+    e2e = wf.execute(env.oracle)
+    assert e2e <= workload_slo(name)
+
+
+def test_decoupling_beats_coupling_on_ml_pipeline():
+    """§II-A: the decoupled optimum for the CPU-heavy / memory-light
+    ML Pipeline is cheaper than ANY coupled configuration."""
+    from repro.core.cost import workflow_cost
+    env = SimulatedPlatform().environment()
+
+    def cost_at(cfg_fn):
+        wf = ml_pipeline()
+        for node in wf:
+            node.config = cfg_fn()
+        try:
+            e2e = wf.execute(env.oracle)
+        except ExecutionError:
+            return float("inf"), float("inf")
+        return e2e, workflow_cost(env.pricing, wf)
+
+    # decoupled point from the paper: 4 vCPU + 512 MB
+    e2e_d, cost_d = cost_at(lambda: ResourceConfig(cpu=4, mem=512))
+    assert e2e_d <= 120.0
+    best_coupled = float("inf")
+    for mem in range(512, 10241, 512):
+        e2e_c, cost_c = cost_at(lambda m=mem: coupled_config(m))
+        if e2e_c <= 120.0:
+            best_coupled = min(best_coupled, cost_c)
+    assert cost_d < best_coupled, (
+        f"decoupled {cost_d:.1f} vs best coupled {best_coupled:.1f}")
