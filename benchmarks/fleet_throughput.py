@@ -1,0 +1,85 @@
+"""Fleet engine throughput: instances/sec and engine-step wall time.
+
+Runs 100 concurrent chatbot instances (Poisson arrivals) through the
+discrete-event engine on a capacity-constrained cluster, plus a
+1k-node generated layered DAG as a single instance, and reports
+
+  * simulation wall time + simulated instances per wall-second,
+  * invocations evaluated per wall-second (vectorized batch path),
+  * queuing/latency percentiles of the constrained run.
+
+Emits ``BENCH_fleet.json`` under artifacts/bench/ so regressions in
+the engine hot path surface in CI diffs.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.engine import ClusterModel, ColdStartModel, PoissonArrivals, run_fleet
+from repro.serverless.generator import layered_workflow, suggest_slo
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import chatbot, workload_slo
+
+from benchmarks.common import emit
+
+N_INSTANCES = 100
+CLUSTER = ClusterModel(total_cpu=60.0, total_mem_mb=61440.0)
+COLD = ColdStartModel(delay_s=0.5, keep_alive_s=300.0)
+
+
+def _run_fleet_case():
+    platform = SimulatedPlatform()
+    env = platform.environment()
+    t0 = time.perf_counter()
+    report = run_fleet(env, chatbot(),
+                       PoissonArrivals(rate=0.1, n=N_INSTANCES, seed=0),
+                       cluster=CLUSTER, cold_start=COLD)
+    wall = time.perf_counter() - t0
+    return {
+        "case": "chatbot_fleet100",
+        "n_instances": N_INSTANCES,
+        "wall_s": wall,
+        "instances_per_s": N_INSTANCES / wall,
+        "invocations": platform.invocations,
+        "invocations_per_s": platform.invocations / wall,
+        "p50_s": report.p50,
+        "p99_s": report.p99,
+        "total_queue_delay_s": report.total_queue_delay,
+        "cpu_utilization": report.cpu_utilization,
+        "slo_attainment": report.slo_attainment(workload_slo("chatbot")),
+        "total_cost": report.total_cost,
+    }
+
+
+def _run_big_dag_case():
+    wf = layered_workflow(1000, n_layers=25, p_edge=0.05, seed=0)
+    slo = suggest_slo(wf)
+    platform = SimulatedPlatform()
+    env = platform.environment()
+    t0 = time.perf_counter()
+    sample = env.execute(wf, slo=slo)
+    wall = time.perf_counter() - t0
+    return {
+        "case": "layered1000_single",
+        "n_nodes": len(wf),
+        "wall_s": wall,
+        "invocations_per_s": platform.invocations / wall,
+        "e2e_s": sample.e2e_runtime,
+        "feasible": sample.feasible,
+    }
+
+
+def main(verbose: bool = True):
+    rows = [_run_fleet_case(), _run_big_dag_case()]
+    if verbose:
+        for r in rows:
+            for k, v in r.items():
+                if k == "case":
+                    continue
+                print(f"fleet,{r['case']}_{k},{v},")
+    emit(rows, "BENCH_fleet")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ import time
 def main() -> int:
     from benchmarks import (fig2_decoupling, fig3_bo, fig5_search,
                             fig67_convergence, fig8_input_aware,
-                            roofline_table, table2_optimal, tpu_autotune)
+                            fleet_throughput, roofline_table,
+                            table2_optimal, tpu_autotune)
     benches = [
         ("fig2_decoupling", fig2_decoupling.main),
         ("fig3_bo", fig3_bo.main),
@@ -22,6 +23,7 @@ def main() -> int:
         ("fig8_input_aware", fig8_input_aware.main),
         ("tpu_autotune", tpu_autotune.main),
         ("roofline_table", roofline_table.main),
+        ("fleet_throughput", fleet_throughput.main),
     ]
     failures = 0
     for name, fn in benches:

@@ -1,16 +1,43 @@
-"""Dev driver: one forward+loss / prefill / decode per reduced arch."""
+"""Dev driver: fleet-engine smoke + one forward+loss / prefill /
+decode per reduced arch. ``--engine-only`` skips the (slow) model
+sweep; positional args select architectures."""
 import sys
 import traceback
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs import ARCH_IDS
-from repro.configs.registry import reduced_config
-from repro.models.model import Model
+def smoke_fleet_engine():
+    """Exercise the discrete-event engine + generator without pytest so
+    regressions surface from a bare ``python scripts/dev_smoke.py``."""
+    from repro.core.engine import ClusterModel, PoissonArrivals, run_fleet
+    from repro.serverless.generator import layered_workflow, suggest_slo
+    from repro.serverless.platform import SimulatedPlatform
+    from repro.serverless.workloads import chatbot, workload_slo
+
+    # degenerate case must match the scalar single-workflow path
+    e2e_scalar = chatbot().execute(SimulatedPlatform().oracle)
+    env = SimulatedPlatform().environment()
+    sample = env.execute(chatbot(), slo=workload_slo("chatbot"))
+    assert sample.e2e_runtime == e2e_scalar, "fleet-of-1 parity broken"
+
+    # constrained fleet must queue
+    env = SimulatedPlatform().environment()
+    rep = run_fleet(env, chatbot(), PoissonArrivals(0.1, 32, seed=0),
+                    cluster=ClusterModel(total_cpu=40.0, total_mem_mb=40960.0))
+    assert rep.total_queue_delay > 0.0 and rep.p99 > rep.p50, \
+        "constrained fleet did not queue"
+
+    # generated workflows execute end-to-end
+    wf = layered_workflow(64, n_layers=6, seed=0)
+    env = SimulatedPlatform().environment()
+    s = env.execute(wf, slo=suggest_slo(wf))
+    assert s.feasible, "generated workflow infeasible at base config"
+    print(f"OK   fleet_engine             p50={rep.p50:.1f}s "
+          f"p99={rep.p99:.1f}s queue={rep.total_queue_delay:.0f}s")
 
 
 def batch_for(cfg, b=2, s=32):
+    import jax
+
     key = jax.random.key(0)
     batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
              "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
@@ -23,9 +50,15 @@ def batch_for(cfg, b=2, s=32):
     return batch
 
 
-def main():
-    only = sys.argv[1:] or ARCH_IDS
-    for name in only:
+def run_models(only):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCH_IDS
+    from repro.configs.registry import reduced_config
+    from repro.models.model import Model
+
+    for name in only or ARCH_IDS:
         cfg = reduced_config(name)
         model = Model(cfg)
         try:
@@ -50,6 +83,19 @@ def main():
             traceback.print_exc()
             return 1
     return 0
+
+
+def main():
+    args = sys.argv[1:]
+    try:
+        smoke_fleet_engine()
+    except Exception:
+        print("FAIL fleet_engine")
+        traceback.print_exc()
+        return 1
+    if "--engine-only" in args:
+        return 0
+    return run_models([a for a in args if not a.startswith("-")])
 
 
 if __name__ == "__main__":

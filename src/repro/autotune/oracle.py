@@ -100,6 +100,12 @@ class TPUStageOracle:
         return (spec.param_bytes + spec.act_bytes) / \
             (chips * hw.hbm_bandwidth) + 10 * self.cfg.dispatch_latency
 
+    def backend(self):
+        """This oracle as a :class:`repro.core.backend.RuntimeBackend`
+        (the roofline member of the unified backend family)."""
+        from repro.core.backend import CallableBackend
+        return CallableBackend(self, self.clamped)
+
 
 #: TPU pricing: mu0 per cpu-unit-second (25.6 chips), mu1 per "MB"
 #: budget-second — same constants as the paper so cost numbers compare.
@@ -108,5 +114,4 @@ TPU_PRICING = PricingModel(mu0=0.512, mu1=0.001, mu2=0.0)
 
 def make_tpu_env(oracle_cfg: OracleConfig = OracleConfig()) -> Environment:
     oracle = TPUStageOracle(oracle_cfg)
-    return Environment(oracle, pricing=TPU_PRICING,
-                       clamped_oracle=oracle.clamped)
+    return Environment(oracle.backend(), pricing=TPU_PRICING)

@@ -3,11 +3,24 @@
 Graph-Centric Scheduler (Algorithm 1) + Priority Configurator
 (Algorithm 2) over decoupled resource configurations, plus the BO and
 MAFF baselines and the Input-Aware plugin (§IV-D).
+
+Execution is unified behind :class:`repro.core.backend.RuntimeBackend`:
+the :class:`Environment` every searcher samples through and the
+discrete-event :class:`repro.core.engine.FleetEngine` (many concurrent
+workflow instances on a finite-capacity cluster) share one backend
+protocol — the single-workflow search path is the engine's degenerate
+case (fleet of 1, infinite capacity, zero cold start).
 """
+from repro.core.backend import (BaseBackend, CallableBackend, RuntimeBackend,
+                                as_backend)
 from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
 from repro.core.critical_path import (SubPath, find_critical_path,
                                       find_detour_subpath, runtime_sum)
 from repro.core.dag import Node, Workflow
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               FleetReport, INFINITE_CLUSTER, InstanceResult,
+                               NO_COLD_START, PoissonArrivals, TraceArrivals,
+                               arrival_times, run_fleet)
 from repro.core.env import Environment, ExecutionError, Sample, SearchTrace
 from repro.core.input_aware import InputAwareEngine, InputClass
 from repro.core.priority import Operation, priority_configuration
@@ -16,9 +29,13 @@ from repro.core.resources import (BASE_CONFIG, ResourceConfig, coupled_config,
 from repro.core.scheduler import GraphCentricScheduler, ScheduleResult, schedule
 
 __all__ = [
+    "BaseBackend", "CallableBackend", "RuntimeBackend", "as_backend",
     "DEFAULT_PRICING", "PricingModel", "workflow_cost",
     "SubPath", "find_critical_path", "find_detour_subpath", "runtime_sum",
     "Node", "Workflow",
+    "ClusterModel", "ColdStartModel", "FleetEngine", "FleetReport",
+    "INFINITE_CLUSTER", "InstanceResult", "NO_COLD_START",
+    "PoissonArrivals", "TraceArrivals", "arrival_times", "run_fleet",
     "Environment", "ExecutionError", "Sample", "SearchTrace",
     "InputAwareEngine", "InputClass",
     "Operation", "priority_configuration",

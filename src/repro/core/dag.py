@@ -13,10 +13,18 @@ config, a measured ``runtime``. The DAG supports:
 The oracle is any callable ``node -> runtime_seconds`` so the same DAG
 machinery drives the serverless simulator, a real-measurement backend,
 or the TPU roofline backend.
+
+Cycle safety: ``add_edge`` maintains a Pearce–Kelly incremental
+topological index. Edges that respect the current order are accepted in
+O(1); only order-violating edges trigger a search bounded by the
+affected region, so building a 1k-node layered DAG (generator use
+case) is linear instead of quadratic while a cycle still raises
+``ValueError`` at insertion time.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.resources import ResourceConfig
@@ -32,6 +40,8 @@ class Node:
     config: ResourceConfig = dataclasses.field(default_factory=ResourceConfig)
     runtime: float = 0.0          # seconds, measured under ``config``
     scheduled: bool = False       # Algorithm 1's "scheduled" flag
+    failed: bool = False          # last invocation under ``config`` errored
+    fail_reason: str = ""         # diagnostic from the failing backend
     payload: object = None        # backend-specific (e.g. FunctionSpec)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
@@ -46,6 +56,7 @@ class Workflow:
         self.nodes: Dict[str, Node] = {}
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
+        self._ord: Dict[str, int] = {}     # Pearce–Kelly topological index
 
     # -- construction -------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -54,6 +65,7 @@ class Workflow:
         self.nodes[node.name] = node
         self._succ[node.name] = []
         self._pred[node.name] = []
+        self._ord[node.name] = len(self._ord)
         return node
 
     def add_function(self, name: str, payload: object = None,
@@ -64,31 +76,58 @@ class Workflow:
     def add_edge(self, src: str, dst: str) -> None:
         if src not in self.nodes or dst not in self.nodes:
             raise KeyError(f"unknown edge endpoint {src!r}->{dst!r}")
+        if src == dst:
+            raise ValueError(f"edge {src}->{dst} would create a cycle")
         if dst in self._succ[src]:
             return
         self._succ[src].append(dst)
         self._pred[dst].append(src)
-        # cheap cycle guard: dst must not reach src
-        if self._reaches(dst, src):
-            self._succ[src].remove(dst)
-            self._pred[dst].remove(src)
-            raise ValueError(f"edge {src}->{dst} would create a cycle")
+        if self._ord[src] > self._ord[dst]:
+            # order violated: repair the affected region, or reject
+            try:
+                self._reorder(src, dst)
+            except ValueError:
+                self._succ[src].remove(dst)
+                self._pred[dst].remove(src)
+                raise
+
+    def _reorder(self, src: str, dst: str) -> None:
+        """Pearce–Kelly: restore the topological index after inserting
+        ``src``->``dst`` with ord[src] > ord[dst]. Only nodes whose
+        index lies in the affected window [ord[dst], ord[src]] are
+        visited; finding ``src`` forward of ``dst`` means a cycle."""
+        lo, hi = self._ord[dst], self._ord[src]
+        fwd: List[str] = []                 # reachable from dst within window
+        stack, seen = [dst], set()
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            if cur == src:
+                raise ValueError(f"edge {src}->{dst} would create a cycle")
+            fwd.append(cur)
+            stack.extend(s for s in self._succ[cur] if self._ord[s] <= hi)
+        bwd: List[str] = []                 # nodes reaching src within window
+        stack, seen = [src], set()
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            bwd.append(cur)
+            stack.extend(p for p in self._pred[cur] if self._ord[p] >= lo)
+        # reassign the affected indices: everything reaching src first
+        # (keeping relative order), then everything reachable from dst
+        slots = sorted(self._ord[n] for n in bwd + fwd)
+        bwd.sort(key=self._ord.__getitem__)
+        fwd.sort(key=self._ord.__getitem__)
+        for slot, name in zip(slots, bwd + fwd):
+            self._ord[name] = slot
 
     def chain(self, *names: str) -> None:
         for a, b in zip(names, names[1:]):
             self.add_edge(a, b)
-
-    def _reaches(self, start: str, goal: str) -> bool:
-        stack, seen = [start], set()
-        while stack:
-            cur = stack.pop()
-            if cur == goal:
-                return True
-            if cur in seen:
-                continue
-            seen.add(cur)
-            stack.extend(self._succ[cur])
-        return False
 
     # -- queries ------------------------------------------------------
     def successors(self, name: str) -> Sequence[str]:
@@ -109,25 +148,27 @@ class Workflow:
     def __len__(self) -> int:
         return len(self.nodes)
 
+    def validate(self) -> None:
+        """Full acyclicity check (Kahn). ``add_edge`` already rejects
+        cycles incrementally; this re-verifies from scratch, e.g. after
+        direct ``_succ``/``_pred`` surgery in tests or ``copy()`` — and
+        rebuilds the incremental index so later ``add_edge`` calls see
+        a consistent order even after such surgery."""
+        order = self.topological_order()
+        self._ord = {name: i for i, name in enumerate(order)}
+
     def topological_order(self) -> List[str]:
         indeg = {n: len(self._pred[n]) for n in self.nodes}
-        ready = sorted([n for n, d in indeg.items() if d == 0])
+        ready = [n for n, d in indeg.items() if d == 0]
+        heapq.heapify(ready)                # deterministic: name order
         order: List[str] = []
         while ready:
-            cur = ready.pop(0)
+            cur = heapq.heappop(ready)
             order.append(cur)
             for s in self._succ[cur]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    # keep deterministic order
-                    lo, hi = 0, len(ready)
-                    while lo < hi:
-                        mid = (lo + hi) // 2
-                        if ready[mid] < s:
-                            lo = mid + 1
-                        else:
-                            hi = mid
-                    ready.insert(lo, s)
+                    heapq.heappush(ready, s)
         if len(order) != len(self.nodes):
             raise ValueError("workflow graph has a cycle")
         return order
@@ -139,6 +180,8 @@ class Workflow:
         branches run concurrently as on a real FaaS platform)."""
         for node in self.nodes.values():
             node.runtime = float(oracle(node))
+            node.failed = False
+            node.fail_reason = ""
         return self.end_to_end_latency()
 
     def end_to_end_latency(self) -> float:
@@ -163,15 +206,19 @@ class Workflow:
     def reset_flags(self) -> None:
         for node in self.nodes.values():
             node.scheduled = False
+            node.failed = False
+            node.fail_reason = ""
 
     def copy(self) -> "Workflow":
         wf = Workflow(self.name)
         for node in self.nodes.values():
             wf.add_node(Node(name=node.name, config=node.config.copy(),
                              runtime=node.runtime, scheduled=node.scheduled,
+                             failed=node.failed, fail_reason=node.fail_reason,
                              payload=node.payload))
         for src, dsts in self._succ.items():
             for dst in dsts:
                 wf._succ[src].append(dst)
                 wf._pred[dst].append(src)
+        wf._ord = dict(self._ord)
         return wf

@@ -1,0 +1,485 @@
+"""Discrete-event fleet engine: many concurrent workflow instances on
+a finite-capacity cluster.
+
+AARC's search machinery measures one workflow at a time; the regime the
+paper targets is a FaaS platform serving many concurrent invocations
+under shared capacity. This engine executes a *fleet* of workflow
+instances against a cluster model:
+
+  * **arrivals** — Poisson or trace-driven instance arrival times,
+  * **capacity** — the cluster holds ``total_cpu`` vCPUs and
+    ``total_mem_mb`` MB; a function invocation occupies its configured
+    ``(cpu, mem)`` from start to finish. When the head of the FIFO
+    queue does not fit, it (and everything behind it) waits — queuing
+    delay is charged per invocation,
+  * **cold starts** — per function name, a finished invocation leaves a
+    warm container behind for ``keep_alive_s``; an invocation with no
+    warm container pays ``delay_s`` provisioning time (warm containers
+    hold no cluster capacity; only running invocations do),
+  * **batching** — all invocations that start at one engine step are
+    evaluated through ``backend.invoke_batch`` in a single vectorized
+    call, not per-node Python dispatch.
+
+Failure semantics mirror :meth:`Environment.execute`: a failing
+invocation (OOM) burns its clamped thrash time, the instance is marked
+failed/infeasible, and execution continues downstream so charged wall
+time matches the single-workflow clamped accounting. A backend without
+clamped estimates reports +inf — the instance dies immediately with
+infinite latency.
+
+The degenerate case — a fleet of one on an infinite cluster with zero
+cold start — reproduces ``Workflow.end_to_end_latency()`` bit-for-bit
+(same IEEE ops in the same order), which is how
+:meth:`repro.core.env.Environment.execute` now runs every search
+sample.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.backend import RuntimeBackend, as_backend
+from repro.core.cost import DEFAULT_PRICING, PricingModel
+from repro.core.dag import Workflow
+
+
+# --------------------------------------------------------------------------
+# arrival processes
+# --------------------------------------------------------------------------
+
+class PoissonArrivals:
+    """``n`` arrivals at rate ``rate`` (instances/second), seeded."""
+
+    def __init__(self, rate: float, n: int, *, seed: int = 0,
+                 start: float = 0.0):
+        if rate <= 0.0:
+            raise ValueError("arrival rate must be positive")
+        self.rate = rate
+        self.n = n
+        self.seed = seed
+        self.start = start
+
+    def times(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        gaps = rng.exponential(1.0 / self.rate, size=self.n)
+        return self.start + np.cumsum(gaps)
+
+
+class TraceArrivals:
+    """Replay arrival timestamps from a trace (any float sequence).
+
+    Order is preserved — entry ``i`` is instance ``i``'s arrival, the
+    same pairing a raw float sequence gets, so heterogeneous factory
+    fleets keep their workflow→timestamp association. The engine does
+    not require sorted arrivals."""
+
+    def __init__(self, times: Sequence[float]):
+        t = np.asarray(times, dtype=np.float64)
+        if t.ndim != 1:
+            raise ValueError("trace must be a 1-D sequence of timestamps")
+        self._times = t
+
+    def times(self) -> np.ndarray:
+        return self._times
+
+
+ArrivalLike = Union[PoissonArrivals, TraceArrivals, Sequence[float]]
+
+
+def arrival_times(arrivals: ArrivalLike) -> np.ndarray:
+    if hasattr(arrivals, "times"):
+        return np.asarray(arrivals.times(), dtype=np.float64)
+    return np.asarray(arrivals, dtype=np.float64)
+
+
+# --------------------------------------------------------------------------
+# cluster + cold-start models
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """Aggregate CPU/memory capacity shared by all running invocations."""
+
+    total_cpu: float = math.inf
+    total_mem_mb: float = math.inf
+
+    @property
+    def finite(self) -> bool:
+        return math.isfinite(self.total_cpu) or math.isfinite(self.total_mem_mb)
+
+
+#: the degenerate single-workflow setting
+INFINITE_CLUSTER = ClusterModel()
+
+
+@dataclasses.dataclass(frozen=True)
+class ColdStartModel:
+    """Provisioning delay for cold containers, warm-container lifetime."""
+
+    delay_s: float = 0.0
+    keep_alive_s: float = 600.0
+
+
+NO_COLD_START = ColdStartModel(delay_s=0.0)
+
+
+# --------------------------------------------------------------------------
+# results
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class InstanceResult:
+    uid: int
+    arrival: float
+    finish: float
+    e2e: float                  # finish - arrival (inf if the instance died)
+    queue_delay: float          # Σ (start - ready) over its invocations
+    cold_delay: float           # Σ cold-start provisioning time
+    cost: float
+    failed: bool
+
+
+@dataclasses.dataclass
+class FleetReport:
+    instances: List[InstanceResult]
+    makespan: float                      # last finish - first arrival
+    cpu_utilization: float               # ∫used_cpu dt / (total_cpu·makespan)
+    mem_utilization: float
+    #: Σ queue delay keyed by "<workflow template>/<function name>"
+    queue_delay_by_function: Dict[str, float]
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.asarray([r.e2e for r in self.instances], dtype=np.float64)
+
+    def percentile(self, q: float) -> float:
+        """Linear-interpolated percentile that stays inf-safe: dead
+        instances (inf latency) make the crossed tail inf, never nan
+        (naive interpolation between finite and inf is inf - inf)."""
+        lat = np.sort(self.latencies)
+        if not lat.size:
+            return float("nan")
+        rank = q / 100.0 * (lat.size - 1)
+        lo = int(math.floor(rank))
+        hi = int(math.ceil(rank))
+        if math.isinf(lat[hi]):
+            return float(lat[lo]) if rank == lo else math.inf
+        return float(lat[lo] + (lat[hi] - lat[lo]) * (rank - lo))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50.0)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99.0)
+
+    def slo_attainment(self, slo: float) -> float:
+        """Fraction of instances that finished within ``slo`` seconds."""
+        if not self.instances:
+            return float("nan")
+        ok = sum(1 for r in self.instances if not r.failed and r.e2e <= slo)
+        return ok / len(self.instances)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(r.cost for r in self.instances)
+
+    @property
+    def total_queue_delay(self) -> float:
+        return sum(r.queue_delay for r in self.instances)
+
+    @property
+    def throughput(self) -> float:
+        """Completed instances per second of makespan."""
+        done = sum(1 for r in self.instances if math.isfinite(r.e2e))
+        if self.makespan > 0:
+            return done / self.makespan
+        return float("inf") if done else 0.0
+
+
+# --------------------------------------------------------------------------
+# engine internals
+# --------------------------------------------------------------------------
+
+_ARRIVAL, _FINISH = 0, 1
+
+
+@dataclasses.dataclass
+class _Instance:
+    uid: int
+    wf: Workflow
+    arrival: float
+    remaining: Dict[str, int]            # unfinished-predecessor counts
+    finish: float = 0.0
+    queue_delay: float = 0.0
+    cold_delay: float = 0.0
+    cost: float = 0.0
+    failed: bool = False
+    dead: bool = False                   # unrecoverable (inf runtime)
+
+
+class FleetEngine:
+    """Runs fleets of workflow instances through a runtime backend."""
+
+    def __init__(self, backend: RuntimeBackend, *,
+                 pricing: PricingModel = DEFAULT_PRICING,
+                 cluster: ClusterModel = INFINITE_CLUSTER,
+                 cold_start: ColdStartModel = NO_COLD_START):
+        self.backend = as_backend(backend)
+        self.pricing = pricing
+        self.cluster = cluster
+        self.cold_start = cold_start
+
+    # -- public API ----------------------------------------------------
+    def run(self, workflows: Sequence[Workflow],
+            arrivals: ArrivalLike) -> FleetReport:
+        """Execute one instance per workflow object; ``arrivals[i]`` is
+        instance ``i``'s submission time. Node runtimes/failed flags are
+        written onto the given workflows as invocations complete."""
+        times = arrival_times(arrivals)
+        if len(times) != len(workflows):
+            raise ValueError(
+                f"{len(workflows)} workflows but {len(times)} arrival times")
+        for wf in workflows:
+            self._check_placeable(wf)
+
+        if (len(workflows) == 1 and not self.cluster.finite
+                and self.cold_start.delay_s == 0.0):
+            # degenerate case (every Environment.execute sample): no
+            # contention => runtimes are schedule-independent, so skip
+            # the event machinery — ONE batch call + longest path
+            return self._run_degenerate(workflows[0], float(times[0]))
+
+        instances = [
+            _Instance(uid=i, wf=wf, arrival=float(t),
+                      remaining={n: len(wf.predecessors(n)) for n in wf.nodes})
+            for i, (wf, t) in enumerate(zip(workflows, times))
+        ]
+
+        seq = itertools.count()
+        events: List[Tuple[float, int, int, int, Optional[str]]] = [
+            (inst.arrival, next(seq), _ARRIVAL, inst.uid, None)
+            for inst in instances
+        ]
+        heapq.heapify(events)
+        pending: collections.deque = collections.deque()
+        warm: Dict[tuple, List[List[float]]] = collections.defaultdict(list)
+        used_cpu = used_mem = 0.0
+        t0 = float(times.min()) if len(times) else 0.0
+        t_last, cpu_area, mem_area = t0, 0.0, 0.0
+        per_fn_queue: Dict[str, float] = collections.defaultdict(float)
+
+        while events:
+            t = events[0][0]
+            cpu_area += used_cpu * (t - t_last)
+            mem_area += used_mem * (t - t_last)
+            t_last = t
+            while events and events[0][0] == t:
+                _, _, kind, uid, name = heapq.heappop(events)
+                inst = instances[uid]
+                if kind == _ARRIVAL:
+                    for src in inst.wf.sources():
+                        pending.append((t, uid, src))
+                    if not len(inst.wf):          # empty workflow: trivial
+                        inst.finish = t
+                else:
+                    node = inst.wf.nodes[name]
+                    used_cpu -= node.config.cpu
+                    used_mem -= node.config.mem
+                    # an OOM-killed invocation leaves no reusable
+                    # container behind; containers are per *function*
+                    # (workflow template name + node name), shared
+                    # across instances but never across unrelated
+                    # functions that happen to repeat a node name
+                    if self.cold_start.delay_s > 0.0 and not node.failed:
+                        warm[(inst.wf.name, name)].append(
+                            [t, t + self.cold_start.keep_alive_s])
+                    inst.finish = max(inst.finish, t)
+                    if inst.dead:
+                        continue
+                    for succ in inst.wf.successors(name):
+                        inst.remaining[succ] -= 1
+                        if inst.remaining[succ] == 0:
+                            pending.append((t, uid, succ))
+            used_cpu, used_mem = self._start_pending(
+                t, pending, instances, warm, used_cpu, used_mem,
+                events, seq, per_fn_queue)
+
+        stranded = {uid for _, uid, _ in pending if not instances[uid].dead}
+        if stranded:  # engine invariant: only dead instances leave work behind
+            raise RuntimeError(
+                f"scheduler stranded work for instances {sorted(stranded)}")
+        return self._report(instances, t0, t_last, cpu_area, mem_area,
+                            dict(per_fn_queue))
+
+    # -- internals -----------------------------------------------------
+    def _run_degenerate(self, wf: Workflow, arrival: float) -> FleetReport:
+        """Fleet of 1 / infinite capacity / zero cold start: equivalent
+        to the event loop (verified by tests) at scalar-path speed."""
+        nodes = list(wf)
+        runtimes, failed = self.backend.invoke_batch(nodes)
+        cost = 0.0
+        for node, rt, bad in zip(nodes, runtimes, failed):
+            node.runtime = float(rt)
+            node.failed = bool(bad)
+            if not node.failed:
+                node.fail_reason = ""
+            if math.isfinite(node.runtime):
+                cost += self.pricing.function_cost(node.runtime, node.config)
+        e2e = wf.end_to_end_latency()
+        result = InstanceResult(
+            uid=0, arrival=arrival, finish=arrival + e2e, e2e=e2e,
+            queue_delay=0.0, cold_delay=0.0, cost=cost,
+            failed=bool(failed.any()))
+        return FleetReport(instances=[result],
+                           makespan=e2e if math.isfinite(e2e) else 0.0,
+                           cpu_utilization=0.0, mem_utilization=0.0,
+                           queue_delay_by_function={})
+
+    def _check_placeable(self, wf: Workflow) -> None:
+        for node in wf:
+            if (node.config.cpu > self.cluster.total_cpu
+                    or node.config.mem > self.cluster.total_mem_mb):
+                raise ValueError(
+                    f"{wf.name}/{node.name} config {node.config} exceeds "
+                    f"cluster capacity ({self.cluster.total_cpu} vCPU, "
+                    f"{self.cluster.total_mem_mb} MB) — can never be placed")
+
+    def _take_warm(self, key, t: float,
+                   warm: Dict[tuple, List[List[float]]]) -> bool:
+        """Claim a live warm container for function ``key`` at ``t``."""
+        pool = warm.get(key)
+        if not pool:
+            return False
+        live = [c for c in pool if c[1] >= t]
+        warm[key] = live
+        for i, c in enumerate(live):
+            if c[0] <= t:
+                live.pop(i)
+                return True
+        return False
+
+    def _start_pending(self, t, pending, instances, warm, used_cpu, used_mem,
+                       events, seq, per_fn_queue):
+        """FIFO admission: start every queued invocation that fits, stop
+        at the first that doesn't (no overtaking => no starvation). All
+        admitted invocations are evaluated in ONE backend batch call.
+        If an invocation dies on the spot (infinite runtime, no clamped
+        estimate) its freed capacity triggers another admission round at
+        the same instant — otherwise work queued behind it could strand
+        with no future event to wake the scheduler."""
+        while True:
+            startable: List[Tuple[float, int, str]] = []
+            while pending:
+                ready_t, uid, name = pending[0]
+                inst = instances[uid]
+                if inst.dead:
+                    pending.popleft()
+                    continue
+                cfg = inst.wf.nodes[name].config
+                if (used_cpu + cfg.cpu > self.cluster.total_cpu
+                        or used_mem + cfg.mem > self.cluster.total_mem_mb):
+                    break
+                pending.popleft()
+                used_cpu += cfg.cpu
+                used_mem += cfg.mem
+                startable.append((ready_t, uid, name))
+            if not startable:
+                return used_cpu, used_mem
+
+            nodes = [instances[uid].wf.nodes[name]
+                     for _, uid, name in startable]
+            runtimes, failed = self.backend.invoke_batch(nodes)
+
+            released = False
+            for (ready_t, uid, name), node, rt, bad in zip(
+                    startable, nodes, runtimes, failed):
+                inst = instances[uid]
+                rt = float(rt)
+                node.runtime = rt
+                node.failed = bool(bad)
+                if not node.failed:
+                    node.fail_reason = ""
+                wait = t - ready_t
+                inst.queue_delay += wait
+                # same scoping as warm containers: heterogeneous fleets
+                # must not merge unrelated functions sharing a node name
+                per_fn_queue[f"{inst.wf.name}/{name}"] += wait
+                if bad:
+                    inst.failed = True
+                if not math.isfinite(rt):
+                    # unbounded failure (no clamped estimate): the
+                    # instance can never finish; release its slot
+                    cfg = node.config
+                    used_cpu -= cfg.cpu
+                    used_mem -= cfg.mem
+                    inst.dead = True
+                    released = True
+                    continue
+                delay = 0.0
+                if self.cold_start.delay_s > 0.0 and \
+                        not self._take_warm((inst.wf.name, name), t, warm):
+                    delay = self.cold_start.delay_s
+                inst.cold_delay += delay
+                inst.cost += self.pricing.function_cost(rt, node.config)
+                heapq.heappush(events,
+                               (t + delay + rt, next(seq), _FINISH, uid,
+                                name))
+            if not released:
+                return used_cpu, used_mem
+
+    def _report(self, instances, t0, t_end, cpu_area, mem_area,
+                per_fn_queue) -> FleetReport:
+        results = [
+            InstanceResult(
+                uid=inst.uid, arrival=inst.arrival,
+                finish=math.inf if inst.dead else inst.finish,
+                e2e=math.inf if inst.dead else inst.finish - inst.arrival,
+                queue_delay=inst.queue_delay, cold_delay=inst.cold_delay,
+                cost=inst.cost, failed=inst.failed or inst.dead)
+            for inst in instances
+        ]
+        makespan = max(t_end - t0, 0.0)
+        denom = self.cluster.total_cpu * makespan
+        cpu_util = cpu_area / denom if denom > 0 and math.isfinite(denom) \
+            else 0.0
+        denom = self.cluster.total_mem_mb * makespan
+        mem_util = mem_area / denom if denom > 0 and math.isfinite(denom) \
+            else 0.0
+        return FleetReport(instances=results, makespan=makespan,
+                           cpu_utilization=cpu_util,
+                           mem_utilization=mem_util,
+                           queue_delay_by_function=per_fn_queue)
+
+
+def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],
+              arrivals: ArrivalLike, *,
+              cluster: ClusterModel = INFINITE_CLUSTER,
+              cold_start: ColdStartModel = NO_COLD_START,
+              copy: bool = True) -> FleetReport:
+    """Run a fleet of instances of ``workflow`` through ``env``'s
+    backend and pricing (the same ``Environment`` every searcher uses).
+
+    ``workflow`` is either a template :class:`Workflow` (copied per
+    instance when ``copy=True``) or a factory ``index -> Workflow`` for
+    heterogeneous fleets.
+    """
+    times = arrival_times(arrivals)
+    if callable(workflow) and not isinstance(workflow, Workflow):
+        instances = [workflow(i) for i in range(len(times))]
+    elif copy:
+        instances = [workflow.copy() for _ in range(len(times))]
+    else:
+        if len(times) != 1:
+            raise ValueError("copy=False only makes sense for a fleet of 1")
+        instances = [workflow]
+    engine = FleetEngine(env.backend, pricing=env.pricing, cluster=cluster,
+                         cold_start=cold_start)
+    return engine.run(instances, times)

@@ -2,24 +2,33 @@
 
 Every configuration search (AARC, BO, MAFF) measures candidate configs
 by *executing the workflow* through an :class:`Environment`. The
-environment supplies the runtime oracle (simulator, real platform, or
-TPU roofline model) and the pricing model; the :class:`SearchTrace`
-records one row per sample so the benchmarks can reproduce the paper's
-Fig. 3/5/6/7 directly from any searcher.
+environment wraps a :class:`repro.core.backend.RuntimeBackend`
+(analytic / stochastic serverless surface, live JAX measurement, TPU
+roofline) plus the pricing model; the :class:`SearchTrace` records one
+row per sample so the benchmarks can reproduce the paper's Fig. 3/5/6/7
+directly from any searcher.
+
+Since the fleet refactor, :meth:`Environment.execute` runs every sample
+through the discrete-event :class:`repro.core.engine.FleetEngine` as
+the degenerate case — a fleet of one instance on an infinite cluster
+with zero cold start — so the search path and the multi-tenant fleet
+path share one execution semantics (and the degenerate case reproduces
+the old ``Workflow.execute`` latencies bit-for-bit).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Union
 
+from repro.core.backend import RuntimeBackend, as_backend
 from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
 from repro.core.dag import Node, Workflow
 from repro.core.resources import ResourceConfig
 
 
 class ExecutionError(RuntimeError):
-    """Raised by an oracle when a function fails under its config (OOM)."""
+    """Raised by a backend when a function fails under its config (OOM)."""
 
 
 @dataclasses.dataclass
@@ -72,19 +81,20 @@ class SearchTrace:
 
 
 class Environment:
-    """Wraps a runtime oracle; executes workflows and logs samples.
+    """Wraps a runtime backend; executes workflows and logs samples.
 
-    ``clamped_oracle`` (optional) estimates the wall time a *failing*
+    Accepts either a :class:`RuntimeBackend` or, for backward
+    compatibility, a bare ``node -> seconds`` oracle callable plus an
+    optional ``clamped_oracle`` estimating the wall time a *failing*
     execution burns before the platform kills it (a real OOM'd
-    invocation still consumes search time and money). Without it,
-    failures are recorded with infinite runtime.
+    invocation still consumes search time and money). Without a clamped
+    estimate, failures are recorded with infinite runtime.
     """
 
-    def __init__(self, oracle: Callable[[Node], float],
+    def __init__(self, backend: Union[RuntimeBackend, Callable[[Node], float]],
                  pricing: PricingModel = DEFAULT_PRICING,
                  clamped_oracle: Optional[Callable[[Node], float]] = None):
-        self._oracle = oracle
-        self._clamped = clamped_oracle
+        self.backend = as_backend(backend, clamped_oracle)
         self.pricing = pricing
         self.trace = SearchTrace()
 
@@ -92,29 +102,38 @@ class Environment:
         self.trace = SearchTrace()
 
     def oracle(self, node: Node) -> float:
-        return self._oracle(node)
+        """Single-invocation oracle view of the backend (may raise
+        :class:`ExecutionError`), kept for direct callers/tests."""
+        return self.backend.invoke(node)
 
     def execute(self, wf: Workflow, slo: float, note: str = "") -> Sample:
         """Execute the whole workflow under current configs, log a sample.
 
+        Runs as a fleet-of-1 on an infinite cluster through the
+        discrete-event engine — the degenerate case of the fleet path.
         A function-level failure (e.g. OOM below the working set) makes
         the sample infeasible; the failed attempt is charged the
         thrash-until-killed wall time so search budgets stay honest.
         """
-        try:
-            e2e = wf.execute(self.oracle)
-        except ExecutionError as exc:
-            if self._clamped is not None:
-                e2e = wf.execute(self._clamped)
-                cost = workflow_cost(self.pricing, wf)
-            else:
-                e2e = math.inf
+        from repro.core.engine import FleetEngine
+
+        engine = FleetEngine(self.backend, pricing=self.pricing)
+        report = engine.run([wf], [0.0])
+        res = report.instances[0]
+        # the degenerate path sums per-function costs in node order, so
+        # res.cost == workflow_cost(...) bit-for-bit — no recompute
+        if res.failed:
+            bad = "; ".join(n.fail_reason or n.name for n in wf if n.failed)
+            if not self.backend.has_clamped:
+                # unbounded failure: charge the per-second rate only
                 cost = sum(self.pricing.rate(n.config) for n in wf)
-            return self.trace.record(e2e, cost, wf, feasible=False,
-                                     error=True, note=f"error:{exc}")
-        cost = workflow_cost(self.pricing, wf)
-        feasible = e2e <= slo
-        return self.trace.record(e2e, cost, wf, feasible=feasible, note=note)
+                return self.trace.record(math.inf, cost, wf, feasible=False,
+                                         error=True, note=f"error:{bad}")
+            return self.trace.record(res.e2e, res.cost, wf, feasible=False,
+                                     error=True, note=f"error:{bad}")
+        feasible = res.e2e <= slo
+        return self.trace.record(res.e2e, res.cost, wf, feasible=feasible,
+                                 note=note)
 
     def execute_function(self, wf: Workflow, node: Node, slo: float,
                          note: str = "") -> Sample:
@@ -124,14 +143,23 @@ class Environment:
         invocation's wall time — the heart of AARC's search-time win:
         one AARC trial costs one function run, one BO/MAFF trial costs a
         full workflow execution.
+
+        A failing trial is recorded *against the node*: ``node.failed``
+        is set and its runtime becomes the clamped thrash time (or +inf
+        without a clamped estimate), so a later ``end_to_end_latency()``
+        reflects the failure instead of silently reusing the runtime of
+        a config that was never measured.
         """
         try:
-            rt = self.oracle(node)
+            rt = self.backend.invoke(node)
             error = False
-        except ExecutionError:
-            rt = self._clamped(node) if self._clamped is not None else math.inf
+            node.fail_reason = ""
+        except ExecutionError as exc:
+            rt = self.backend.invoke_clamped(node)
             error = True
-        node.runtime = rt if math.isfinite(rt) else node.runtime
+            node.fail_reason = str(exc)
+        node.runtime = rt
+        node.failed = error
         e2e = wf.end_to_end_latency()
         cost = workflow_cost(self.pricing, wf)
         feasible = (not error) and e2e <= slo

@@ -115,7 +115,8 @@ def priority_configuration(
             continue
         count += 1
 
-        old_runtime = node.runtime
+        old_runtime, old_failed = node.runtime, node.failed
+        old_reason = node.fail_reason
         node.config = new_cfg                       # deallocate(op)
         # AARC re-invokes only the re-configured function; the rest of
         # the path keeps its cached (deterministic) runtimes.
@@ -131,7 +132,8 @@ def priority_configuration(
 
         if violated:
             node.config = old_cfg                   # revert (allocate(op))
-            node.runtime = old_runtime
+            node.runtime, node.failed = old_runtime, old_failed
+            node.fail_reason = old_reason
             op.trail -= 1
             op.step *= 0.5                          # exponential backoff
             if op.trail > 0:                        # Alg 2 line 16-18

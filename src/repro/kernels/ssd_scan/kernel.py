@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 
 def _intra_kernel(xh_ref, bm_ref, cm_ref, cum_ref, dt_ref,
                   y_ref, s_ref, dec_ref):
@@ -100,7 +102,7 @@ def ssd_intra(xh, bm, cm, cum, dt, *, interpret: bool = False):
             jax.ShapeDtypeStruct((b, c, h, n, p), jnp.float32),
             jax.ShapeDtypeStruct((b, c, h), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xh, bm, cm, cum, dt)
@@ -124,7 +126,7 @@ def ssd_inter(cm, cum, h_prevs, y_intra, out_dtype, *,
         out_specs=pl.BlockSpec((1, 1, q, h, p),
                                lambda ib, ic: (ib, ic, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, c, q, h, p), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(cm, cum, h_prevs, y_intra)

@@ -4,17 +4,46 @@ The paper's testbed is a 96-core Docker host; this container has no
 Docker/FaaS runtime, so functions are modelled by calibrated
 ``runtime(cpu, mem)`` response surfaces with the three affinity classes
 observed in §II-A (CPU-bound, memory-bound, balanced), plus an OOM
-floor. The AARC/BO/MAFF searchers only ever see the
-:class:`repro.core.env.Environment` interface, so swapping this
-simulator for a real platform is a one-line change.
+floor.
+
+Everything executes through the :class:`repro.core.backend.RuntimeBackend`
+protocol (``invoke`` / ``invoke_clamped`` / vectorized ``invoke_batch``):
+
+* :class:`AnalyticBackend` — deterministic response surface; its
+  ``invoke_batch`` evaluates a whole batch of pending invocations in
+  one numpy expression (the fleet engine's hot path),
+* :class:`StochasticBackend` — the same surface with log-normal
+  invocation noise for Table-II style validation runs,
+* :class:`JaxMeasuredOracle` — live JAX measurement, wrapped via
+  :func:`repro.core.backend.as_backend`,
+* the TPU roofline model (:mod:`repro.autotune.oracle`) implements the
+  same protocol for step-graph autotuning.
+
+The AARC/BO/MAFF searchers and the discrete-event fleet engine only
+ever see the :class:`repro.core.env.Environment` interface, so swapping
+this simulator for a real platform is a one-line change. The
+:mod:`repro.serverless.generator` module grows scenarios beyond the
+paper's three workflows: seeded random chains, fan-out/fan-in,
+diamonds, and layered DAGs with per-class affinity profiles.
 """
 from repro.serverless.function import FunctionSpec
-from repro.serverless.platform import (SimulatedPlatform, make_env,
-                                       make_scaled_env)
+from repro.serverless.generator import (AFFINITY_PROFILES, GENERATORS,
+                                        chain_workflow, diamond_workflow,
+                                        fan_workflow, generate,
+                                        layered_workflow, random_spec,
+                                        suggest_slo)
+from repro.serverless.platform import (AnalyticBackend, JaxMeasuredOracle,
+                                       SimulatedPlatform, StochasticBackend,
+                                       make_env, make_scaled_env)
 from repro.serverless.workloads import (WORKLOADS, chatbot, ml_pipeline,
                                         video_analysis, workload_slo)
 
 __all__ = [
-    "FunctionSpec", "SimulatedPlatform", "make_env", "make_scaled_env",
+    "FunctionSpec",
+    "AFFINITY_PROFILES", "GENERATORS", "chain_workflow", "diamond_workflow",
+    "fan_workflow", "generate", "layered_workflow", "random_spec",
+    "suggest_slo",
+    "AnalyticBackend", "JaxMeasuredOracle", "SimulatedPlatform",
+    "StochasticBackend", "make_env", "make_scaled_env",
     "WORKLOADS", "chatbot", "ml_pipeline", "video_analysis", "workload_slo",
 ]

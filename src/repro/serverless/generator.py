@@ -1,0 +1,233 @@
+"""Parameterized random-workflow generator.
+
+The paper evaluates three hand-built workflows; fleet-scale evaluation
+needs unbounded scenarios. This module generates seed-reproducible
+workflows of four topology families —
+
+  * ``chain``     — f0 -> f1 -> ... -> f(n-1),
+  * ``fan``       — source -> {n-2 parallel branches} -> sink
+                    (scatter/broadcast, the chatbot/video shape),
+  * ``diamond``   — repeated source -> {left, right} -> join blocks,
+  * ``layered``   — random layered DAG: every node has >= 1 predecessor
+                    in an earlier layer and >= 1 successor in a later
+                    one, extra inter-layer edges with probability
+                    ``p_edge``;
+
+— populated with :class:`FunctionSpec` response surfaces drawn from
+seeded *affinity profiles* (§II-A's three classes plus io-bound), so
+generated functions exhibit the same CPU/memory affinity structure the
+AARC scheduler exploits. Edges are always added from earlier to later
+construction order, which the DAG's incremental topological index
+accepts in O(1) — a 1k-node layered DAG builds in linear time.
+
+Every generated workflow is acyclic by construction, every node lies on
+a source -> sink path, and the same ``seed`` reproduces the same graph
+and the same response surfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dag import Workflow
+from repro.serverless.function import FunctionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class AffinityProfile:
+    """Uniform sampling ranges for one affinity class of functions."""
+
+    name: str
+    cpu_work: Tuple[float, float]
+    parallel_frac: Tuple[float, float]
+    mem_floor: Tuple[float, float]        # MB
+    knee_ratio: Tuple[float, float]       # knee = floor * ratio
+    mem_penalty: Tuple[float, float]
+    io_time: Tuple[float, float]
+
+    def sample(self, name: str, rng: np.random.Generator) -> FunctionSpec:
+        u = rng.uniform
+        floor = u(*self.mem_floor)
+        return FunctionSpec(
+            name=name,
+            cpu_work=float(u(*self.cpu_work)),
+            parallel_frac=float(u(*self.parallel_frac)),
+            mem_floor=float(floor),
+            mem_knee=float(floor * u(*self.knee_ratio)),
+            mem_penalty=float(u(*self.mem_penalty)),
+            io_time=float(u(*self.io_time)),
+        )
+
+
+#: §II-A affinity classes (+ io-bound glue functions)
+AFFINITY_PROFILES: Dict[str, AffinityProfile] = {
+    "cpu_bound": AffinityProfile(
+        "cpu_bound", cpu_work=(40.0, 160.0), parallel_frac=(0.8, 0.95),
+        mem_floor=(256.0, 512.0), knee_ratio=(1.2, 1.6),
+        mem_penalty=(2.0, 4.0), io_time=(0.3, 1.5)),
+    "mem_bound": AffinityProfile(
+        "mem_bound", cpu_work=(15.0, 60.0), parallel_frac=(0.3, 0.6),
+        mem_floor=(2048.0, 5120.0), knee_ratio=(1.1, 1.4),
+        mem_penalty=(3.0, 6.0), io_time=(1.0, 3.0)),
+    "balanced": AffinityProfile(
+        "balanced", cpu_work=(5.0, 40.0), parallel_frac=(0.4, 0.75),
+        mem_floor=(256.0, 1024.0), knee_ratio=(1.2, 1.5),
+        mem_penalty=(1.5, 3.0), io_time=(0.5, 2.0)),
+    "io_bound": AffinityProfile(
+        "io_bound", cpu_work=(0.5, 4.0), parallel_frac=(0.1, 0.4),
+        mem_floor=(128.0, 384.0), knee_ratio=(1.2, 1.5),
+        mem_penalty=(1.0, 2.0), io_time=(2.0, 6.0)),
+}
+
+#: default mix of affinity classes when none is pinned
+_PROFILE_MIX: Sequence[Tuple[str, float]] = (
+    ("cpu_bound", 0.35), ("balanced", 0.35), ("mem_bound", 0.15),
+    ("io_bound", 0.15))
+
+
+def random_spec(name: str, rng: np.random.Generator,
+                profile: Optional[str] = None) -> FunctionSpec:
+    """One random FunctionSpec; ``profile`` pins the affinity class."""
+    if profile is None:
+        names = [p for p, _ in _PROFILE_MIX]
+        weights = np.asarray([w for _, w in _PROFILE_MIX])
+        profile = str(rng.choice(names, p=weights / weights.sum()))
+    return AFFINITY_PROFILES[profile].sample(name, rng)
+
+
+def _new_workflow(kind: str, seed: int) -> Tuple[Workflow, np.random.Generator]:
+    return Workflow(f"{kind}-{seed}"), np.random.default_rng(seed)
+
+
+def _add(wf: Workflow, name: str, rng: np.random.Generator,
+         profile: Optional[str]) -> str:
+    wf.add_function(name, payload=random_spec(name, rng, profile))
+    return name
+
+
+def chain_workflow(n: int = 6, *, seed: int = 0,
+                   profile: Optional[str] = None) -> Workflow:
+    """A sequential pipeline of ``n`` functions."""
+    if n < 1:
+        raise ValueError("chain needs n >= 1")
+    wf, rng = _new_workflow("chain", seed)
+    names = [_add(wf, f"f{i:03d}", rng, profile) for i in range(n)]
+    wf.chain(*names)
+    return wf
+
+
+def fan_workflow(width: int = 4, *, seed: int = 0,
+                 profile: Optional[str] = None) -> Workflow:
+    """Scatter/gather: source -> ``width`` parallel branches -> sink."""
+    if width < 1:
+        raise ValueError("fan needs width >= 1")
+    wf, rng = _new_workflow("fan", seed)
+    src = _add(wf, "scatter", rng, "io_bound" if profile is None else profile)
+    branches = [_add(wf, f"branch{i:03d}", rng, profile)
+                for i in range(width)]
+    sink = _add(wf, "gather", rng, "io_bound" if profile is None else profile)
+    for b in branches:
+        wf.add_edge(src, b)
+        wf.add_edge(b, sink)
+    return wf
+
+
+def diamond_workflow(n_diamonds: int = 2, *, seed: int = 0,
+                     profile: Optional[str] = None) -> Workflow:
+    """``n_diamonds`` chained a -> {b, c} -> d blocks."""
+    if n_diamonds < 1:
+        raise ValueError("diamond needs n_diamonds >= 1")
+    wf, rng = _new_workflow("diamond", seed)
+    prev_join: Optional[str] = None
+    for d in range(n_diamonds):
+        top = _add(wf, f"d{d}_open", rng, profile)
+        left = _add(wf, f"d{d}_left", rng, profile)
+        right = _add(wf, f"d{d}_right", rng, profile)
+        join = _add(wf, f"d{d}_join", rng, profile)
+        for mid in (left, right):
+            wf.add_edge(top, mid)
+            wf.add_edge(mid, join)
+        if prev_join is not None:
+            wf.add_edge(prev_join, top)
+        prev_join = join
+    return wf
+
+
+def layered_workflow(n_nodes: int = 16, *, n_layers: int = 4,
+                     p_edge: float = 0.3, seed: int = 0,
+                     profile: Optional[str] = None) -> Workflow:
+    """Random layered DAG. Nodes are split across ``n_layers`` layers
+    (each layer non-empty); consecutive-layer edges appear with
+    probability ``p_edge``, then every node is guaranteed >= 1
+    predecessor in the previous layer and >= 1 successor in the next,
+    so the graph is connected source -> sink."""
+    if n_nodes < 2:
+        raise ValueError("layered needs n_nodes >= 2")
+    n_layers = max(1, min(n_layers, n_nodes))
+    wf, rng = _new_workflow("layered", seed)
+    # non-empty layer sizes summing to n_nodes
+    cuts = np.sort(rng.choice(np.arange(1, n_nodes), size=n_layers - 1,
+                              replace=False)) if n_layers > 1 else np.array([], int)
+    bounds = [0, *cuts.tolist(), n_nodes]
+    layers: List[List[str]] = []
+    idx = 0
+    for li in range(n_layers):
+        layer = []
+        for _ in range(bounds[li + 1] - bounds[li]):
+            layer.append(_add(wf, f"f{idx:04d}", rng, profile))
+            idx += 1
+        layers.append(layer)
+    for li in range(n_layers - 1):
+        upper, lower = layers[li], layers[li + 1]
+        mask = rng.random((len(upper), len(lower))) < p_edge
+        for i, u in enumerate(upper):
+            for j, v in enumerate(lower):
+                if mask[i, j]:
+                    wf.add_edge(u, v)
+        # connectivity guarantees (deterministic given the rng state)
+        for i, u in enumerate(upper):
+            if not mask[i].any():
+                wf.add_edge(u, lower[int(rng.integers(len(lower)))])
+        for j, v in enumerate(lower):
+            if not wf.predecessors(v):
+                wf.add_edge(upper[int(rng.integers(len(upper)))], v)
+    return wf
+
+
+GENERATORS: Dict[str, Callable[..., Workflow]] = {
+    "chain": chain_workflow,
+    "fan": fan_workflow,
+    "diamond": diamond_workflow,
+    "layered": layered_workflow,
+}
+
+
+def generate(kind: str = "layered", **kw) -> Workflow:
+    """Dispatch by topology family: ``generate("layered", n_nodes=64,
+    seed=3)``. See :data:`GENERATORS` for the families."""
+    try:
+        builder = GENERATORS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown workflow kind {kind!r}; choose from {sorted(GENERATORS)}")
+    return builder(**kw)
+
+
+def suggest_slo(wf: Workflow, *, slack: float = 1.5,
+                input_scale: float = 1.0) -> float:
+    """An achievable SLO for a generated workflow: ``slack`` x the
+    end-to-end latency at the over-provisioned base config (every node
+    keeps its default ``ResourceConfig``, which is the base config).
+    Evaluates on a copy — the caller's measured runtimes are untouched."""
+    from repro.serverless.platform import AnalyticBackend
+
+    probe = wf.copy()
+    backend = AnalyticBackend(input_scale=input_scale)
+    runtimes, failed = backend.invoke_batch(list(probe))
+    if failed.any():
+        raise ValueError("workflow OOMs even at the base config")
+    for node, rt in zip(probe, runtimes):
+        node.runtime = float(rt)
+    return slack * probe.end_to_end_latency()

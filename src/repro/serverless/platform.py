@@ -1,60 +1,171 @@
-"""Simulated FaaS platform: turns FunctionSpecs into a runtime oracle.
+"""Simulated FaaS platform: response surfaces as runtime backends.
 
-Two oracle modes:
+Backend modes (all implement :class:`repro.core.backend.RuntimeBackend`):
 
-* **analytic** (default) — deterministic response-surface evaluation;
-  used by every configuration search (deterministic => reproducible
-  search traces).
-* **stochastic** — multiplies each invocation by log-normal noise
-  (default sigma 2.5 %), used by the Table-II style "execute the final
-  configuration 100 times" validation runs.
-
-A third, *measured*, oracle executes a real (tiny) JAX workload scaled
-by the configured resources, demonstrating that the searchers are
-oracle-agnostic (see ``JaxMeasuredOracle``).
+* **analytic** (:class:`AnalyticBackend`, default) — deterministic
+  response-surface evaluation; used by every configuration search
+  (deterministic => reproducible search traces). ``invoke_batch``
+  evaluates a whole batch of pending invocations in ONE vectorized
+  numpy expression — the fleet engine's hot path — and matches the
+  scalar :meth:`FunctionSpec.runtime` bit-for-bit.
+* **stochastic** (:class:`StochasticBackend`) — multiplies each
+  invocation by log-normal noise (default sigma 2.5 %), used by the
+  Table-II style "execute the final configuration 100 times"
+  validation runs.
+* **measured** (:class:`JaxMeasuredOracle`) — executes a real (tiny)
+  JAX workload scaled by the configured resources, demonstrating that
+  the searchers are backend-agnostic (wrapped via
+  :func:`repro.core.backend.as_backend`).
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.backend import BaseBackend
 from repro.core.cost import DEFAULT_PRICING, PricingModel
 from repro.core.dag import Node, Workflow
 from repro.core.env import Environment
 from repro.serverless.function import FunctionSpec
 
 
+class AnalyticBackend(BaseBackend):
+    """Deterministic response-surface backend with vectorized batches."""
+
+    def __init__(self, *, input_scale: float = 1.0):
+        self.input_scale = input_scale
+        self.invocations = 0
+
+    has_clamped = True
+
+    def _spec(self, node: Node) -> FunctionSpec:
+        spec = node.payload
+        if not isinstance(spec, FunctionSpec):
+            raise TypeError(f"node {node.name} has no FunctionSpec payload")
+        return spec
+
+    # -- scalar path (search trials, legacy oracle callers) -----------
+    def invoke(self, node: Node) -> float:
+        spec = self._spec(node)
+        self.invocations += 1
+        rt = spec.runtime(node.config, input_scale=self.input_scale)
+        return self._noise_one(rt)
+
+    def invoke_clamped(self, node: Node) -> float:
+        """Thrash-until-killed runtime for failing configs (see env.py)."""
+        spec = self._spec(node)
+        return spec.runtime_clamped(node.config, input_scale=self.input_scale)
+
+    def _noise_one(self, rt: float) -> float:
+        return rt
+
+    def _noise_batch(self, rt: np.ndarray, ok: np.ndarray) -> np.ndarray:
+        return rt
+
+    # -- vectorized path (one engine step == one numpy evaluation) -----
+    def invoke_batch(self, nodes: Sequence[Node]) -> Tuple[np.ndarray, np.ndarray]:
+        n = len(nodes)
+        self.invocations += n
+        cpu = np.empty(n)
+        mem = np.empty(n)
+        cpu_work = np.empty(n)
+        pfrac = np.empty(n)
+        mem_floor = np.empty(n)
+        mem_knee = np.empty(n)
+        penalty = np.empty(n)
+        io = np.empty(n)
+        scale_mem = np.empty(n, dtype=bool)
+        for i, node in enumerate(nodes):
+            spec = self._spec(node)
+            cpu[i] = node.config.cpu
+            mem[i] = node.config.mem
+            cpu_work[i] = spec.cpu_work
+            pfrac[i] = spec.parallel_frac
+            mem_floor[i] = spec.mem_floor
+            mem_knee[i] = spec.mem_knee
+            penalty[i] = spec.mem_penalty
+            io[i] = spec.io_time
+            scale_mem[i] = spec.scale_mem
+
+        s = self.input_scale
+        eff = np.where(scale_mem, s, 1.0)
+        floor = mem_floor * eff
+        knee = mem_knee * eff
+        failed = mem < floor                            # OOM-killed
+        if failed.any():                # keep the common all-ok path hot
+            for i in np.flatnonzero(failed):
+                nodes[i].fail_reason = (
+                    f"{nodes[i].name}: OOM ({mem[i]:.0f} MB < working set "
+                    f"{floor[i]:.0f} MB)")
+        flat = (mem >= knee) | (knee <= floor)          # above the knee
+        safe_div = np.where(knee > floor, knee - floor, 1.0)
+        frac = np.where(flat | failed, 0.0, (knee - mem) / safe_div)
+        mem_factor = 1.0 + penalty * frac
+        # failing invocations thrash at the working-set floor
+        mem_factor = np.where(failed, 1.0 + penalty, mem_factor)
+        amdahl = (1.0 - pfrac) + pfrac / np.maximum(cpu, 1e-6)
+        work = cpu_work * s
+        runtimes = io + work * amdahl * mem_factor
+        runtimes = self._noise_batch(runtimes, ~failed)
+        return runtimes, failed
+
+
+class StochasticBackend(AnalyticBackend):
+    """Analytic surface x log-normal invocation noise (§IV validation)."""
+
+    def __init__(self, *, noise_sigma: float = 0.025, seed: int = 0,
+                 input_scale: float = 1.0):
+        super().__init__(input_scale=input_scale)
+        self.noise_sigma = noise_sigma
+        self.rng = np.random.default_rng(seed)
+
+    def _noise_one(self, rt: float) -> float:
+        if self.noise_sigma <= 0.0:
+            return rt
+        return rt * float(np.exp(self.rng.normal(0.0, self.noise_sigma)))
+
+    def _noise_batch(self, rt: np.ndarray, ok: np.ndarray) -> np.ndarray:
+        if self.noise_sigma <= 0.0:
+            return rt
+        noise = np.exp(self.rng.normal(0.0, self.noise_sigma, size=rt.shape))
+        # failing invocations are charged the deterministic thrash time
+        return np.where(ok, rt * noise, rt)
+
+
 class SimulatedPlatform:
-    """Executes functions against their response surfaces."""
+    """Convenience wrapper bundling a backend with pricing.
+
+    Kept as the historical entry point (``SimulatedPlatform().environment()``
+    appears throughout the tests and benchmarks); the actual execution
+    semantics live in the backend it builds.
+    """
 
     def __init__(self, *, input_scale: float = 1.0, noise_sigma: float = 0.0,
                  seed: int = 0, pricing: PricingModel = DEFAULT_PRICING):
         self.input_scale = input_scale
         self.noise_sigma = noise_sigma
-        self.rng = np.random.default_rng(seed)
         self.pricing = pricing
-        self.invocations = 0
+        if noise_sigma > 0.0:
+            self.backend: AnalyticBackend = StochasticBackend(
+                noise_sigma=noise_sigma, seed=seed, input_scale=input_scale)
+        else:
+            self.backend = AnalyticBackend(input_scale=input_scale)
+
+    @property
+    def invocations(self) -> int:
+        return self.backend.invocations
 
     def oracle(self, node: Node) -> float:
-        spec = node.payload
-        if not isinstance(spec, FunctionSpec):
-            raise TypeError(f"node {node.name} has no FunctionSpec payload")
-        self.invocations += 1
-        rt = spec.runtime(node.config, input_scale=self.input_scale)
-        if self.noise_sigma > 0.0:
-            rt *= float(np.exp(self.rng.normal(0.0, self.noise_sigma)))
-        return rt
+        return self.backend.invoke(node)
 
     def clamped_oracle(self, node: Node) -> float:
         """Thrash-until-killed runtime for failing configs (see env.py)."""
-        spec: FunctionSpec = node.payload
-        return spec.runtime_clamped(node.config, input_scale=self.input_scale)
+        return self.backend.invoke_clamped(node)
 
     def environment(self) -> Environment:
-        return Environment(self.oracle, pricing=self.pricing,
-                           clamped_oracle=self.clamped_oracle)
+        return Environment(self.backend, pricing=self.pricing)
 
 
 def make_env(*, input_scale: float = 1.0, noise_sigma: float = 0.0,

@@ -86,22 +86,46 @@ class ServeEngine:
         return int(self.rng.choice(len(p), p=p))
 
     def run(self, queue: RequestQueue, *, extra_inputs=None,
-            max_steps: int = 10_000) -> List[GenerationResult]:
-        """Drain the queue; returns per-request generated tokens."""
+            max_steps: int = 10_000,
+            step_duration_s: Optional[float] = None) -> List[GenerationResult]:
+        """Drain the queue; returns per-request generated tokens.
+
+        With ``step_duration_s`` set, decode steps define a logical
+        clock (``now = steps * step_duration_s``) and requests stamped
+        with arrival times (``RequestQueue.submit_process`` + the fleet
+        engine's arrival processes) are only admitted once they have
+        arrived; the engine idles forward to the next arrival when the
+        batch drains early."""
+        if step_duration_s is not None and step_duration_s <= 0.0:
+            raise ValueError("step_duration_s must be positive")
         extra_inputs = extra_inputs or {}
         results: List[GenerationResult] = []
         steps = 0
+        clock = 0.0
         while steps < max_steps:
+            now = None if step_duration_s is None else clock
             # admit into free slots
             for slot in range(self.n_slots):
                 if self.slots[slot] is None and len(queue):
-                    self._admit(queue.pop(), slot, extra_inputs)
+                    req = queue.pop(now=now)
+                    if req is None:       # next request hasn't arrived yet
+                        break
+                    self._admit(req, slot, extra_inputs)
             if all(s is None for s in self.slots):
+                nxt = queue.next_arrival()
+                if nxt is not None and step_duration_s is not None:
+                    # batch drained before the next arrival: idle the
+                    # clock forward — idling is not decode work, so it
+                    # does not consume the max_steps budget
+                    clock = max(clock, nxt)
+                    continue
                 break
             # one decode step for the whole batch
             logits, self.cache = self._decode(self.params, self.cache,
                                               self.last_tokens)
             steps += 1
+            if step_duration_s is not None:
+                clock += step_duration_s
             lg = np.asarray(logits)[:, 0]
             new_tokens = np.zeros((self.n_slots, 1), np.int32)
             for slot, req in enumerate(self.slots):

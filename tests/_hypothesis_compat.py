@@ -1,0 +1,97 @@
+"""Real hypothesis when installed, else a tiny deterministic fallback.
+
+The property-test modules import ``given``/``settings``/``st`` from
+here. With hypothesis present (see requirements-dev.txt) they run as
+genuine property tests; without it (this container doesn't ship it)
+each ``@given`` test runs against a fixed number of seeded-random
+samples instead of failing collection. The fallback implements only
+the strategy surface these tests use: ``floats``, ``integers``,
+``booleans``, ``sampled_from``, ``composite``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    _MAX_EXAMPLES = 25          # cap: the shim is a smoke net, not a fuzzer
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng):
+            return self._sample_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kw):
+                def sample(rng):
+                    return fn(lambda strat: strat.sample(rng), *args, **kw)
+                return _Strategy(sample)
+            return build
+
+    st = _Strategies()
+
+    def settings(max_examples=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            n = getattr(fn, "_shim_max_examples", None) or _MAX_EXAMPLES
+            n = min(n, _MAX_EXAMPLES)
+            # deterministic per-test seed, independent of hash salting
+            seed = zlib.crc32(fn.__qualname__.encode())
+
+            # NB: no functools.wraps — pytest must see a zero-arg
+            # signature, not the strategy parameters (they'd be
+            # misread as fixtures)
+            def wrapper():
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    vals = [s.sample(rng) for s in strategies]
+                    kvals = {k: s.sample(rng)
+                             for k, s in kw_strategies.items()}
+                    fn(*vals, **kvals)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,8 +1,7 @@
 """Graph queries of Algorithm 1 (critical path / detours / windows) —
 unit cases + hypothesis property tests on random DAGs."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dag import Node, Workflow
 from repro.core.critical_path import (find_critical_path,

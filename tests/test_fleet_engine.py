@@ -1,0 +1,299 @@
+"""Discrete-event fleet engine: degenerate-case parity, queuing,
+cold starts, failure accounting."""
+import math
+
+import pytest
+
+from repro.core.backend import CallableBackend
+from repro.core.dag import Workflow
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               INFINITE_CLUSTER, PoissonArrivals,
+                               TraceArrivals, run_fleet)
+from repro.core.env import Environment, ExecutionError
+from repro.core.resources import ResourceConfig
+from repro.serverless.platform import SimulatedPlatform
+from repro.serverless.workloads import WORKLOADS, chatbot, workload_slo
+
+CLUSTER = ClusterModel(total_cpu=40.0, total_mem_mb=40960.0)
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_fleet_of_one_matches_single_workflow_exactly(name):
+    """Infinite capacity + zero cold start + fleet of 1 must reproduce
+    the scalar-oracle end-to-end latency bit-for-bit."""
+    wf_scalar = WORKLOADS[name]()
+    e2e_scalar = wf_scalar.execute(SimulatedPlatform().oracle)
+
+    wf_fleet = WORKLOADS[name]()
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, wf_fleet, [0.0], copy=False)
+    res = report.instances[0]
+    assert res.e2e == e2e_scalar                 # exact, not approx
+    assert res.queue_delay == 0.0 and res.cold_delay == 0.0
+    for node in wf_scalar:
+        assert wf_fleet.nodes[node.name].runtime == node.runtime
+
+
+@pytest.mark.parametrize("name", list(WORKLOADS))
+def test_env_execute_routes_through_engine(name):
+    """Environment.execute (used by AARC/BO/MAFF) is the degenerate
+    fleet path and must agree with the scalar execution exactly."""
+    e2e_scalar = WORKLOADS[name]().execute(SimulatedPlatform().oracle)
+    env = SimulatedPlatform().environment()
+    sample = env.execute(WORKLOADS[name](), slo=workload_slo(name))
+    assert sample.e2e_runtime == e2e_scalar
+    assert sample.feasible
+
+
+def test_degenerate_fast_path_matches_event_loop():
+    """The fleet-of-1 fast path must agree bit-for-bit with the full
+    discrete-event loop (forced here via a finite-but-ample cluster)."""
+    for mk in WORKLOADS.values():
+        wf_fast, wf_event = mk(), mk()
+        env = SimulatedPlatform().environment()
+        fast = run_fleet(env, wf_fast, [0.0], copy=False)
+        env = SimulatedPlatform().environment()
+        event = run_fleet(env, wf_event, [0.0], copy=False,
+                          cluster=ClusterModel(total_cpu=1e9,
+                                               total_mem_mb=1e12))
+        assert fast.instances[0].e2e == event.instances[0].e2e
+        assert fast.instances[0].cost == pytest.approx(
+            event.instances[0].cost)
+        for node in wf_fast:
+            assert node.runtime == wf_event.nodes[node.name].runtime
+
+
+def test_percentiles_with_dead_instances_are_not_nan():
+    """Dead instances (inf latency) must surface as inf in the tail,
+    never as nan from interpolating between finite and inf."""
+    def oracle(node):
+        if node.payload == "bad":
+            raise ExecutionError("dies")
+        return 1.0
+
+    def make(bad):
+        wf = Workflow("bad" if bad else "ok")
+        wf.add_function("f", payload="bad" if bad else None)
+        return wf
+
+    engine = FleetEngine(CallableBackend(oracle))     # no clamped => inf
+    rep = engine.run([make(False), make(False), make(True)],
+                     [0.0, 0.0, 0.0])
+    assert rep.p50 == 1.0                 # median rank lands on a survivor
+    assert math.isinf(rep.p99)            # tail crosses into the dead region
+    assert not math.isnan(rep.p50) and not math.isnan(rep.p99)
+
+
+def test_capacity_constrained_fleet_queues():
+    """Acceptance scenario: 100 Poisson-arriving chatbot instances on a
+    cluster smaller than aggregate demand => queuing delay > 0 and
+    p99 > p50, while every instance still meets its work."""
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, chatbot(), PoissonArrivals(0.05, 100, seed=1),
+                       cluster=CLUSTER)
+    assert report.total_queue_delay > 0.0
+    assert report.p99 > report.p50
+    assert all(math.isfinite(r.e2e) for r in report.instances)
+    assert 0.0 < report.cpu_utilization <= 1.0
+    # per-function queue breakdown covers the queued functions
+    assert sum(report.queue_delay_by_function.values()) == \
+        pytest.approx(report.total_queue_delay)
+
+
+def test_p99_monotone_in_arrival_rate():
+    """Heavier traffic on the same cluster can only increase tail
+    latency (same seeded service demands, compressed arrivals)."""
+    p99s = []
+    for rate in (0.02, 0.1, 0.5):
+        env = SimulatedPlatform().environment()
+        report = run_fleet(env, chatbot(), PoissonArrivals(rate, 60, seed=3),
+                           cluster=CLUSTER)
+        p99s.append(report.p99)
+    assert p99s[0] <= p99s[1] <= p99s[2]
+    assert p99s[2] > p99s[0]            # the effect is actually visible
+
+
+def test_infinite_capacity_has_no_queuing():
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, chatbot(), PoissonArrivals(0.5, 40, seed=5))
+    assert report.total_queue_delay == 0.0
+    base = chatbot().execute(SimulatedPlatform().oracle)
+    for r in report.instances:
+        # (arrival + latency) - arrival re-rounds: exact equality is
+        # only guaranteed for the arrival-at-0 degenerate path
+        assert r.e2e == pytest.approx(base, rel=1e-12)
+
+
+def test_cold_starts_add_latency_and_warm_reuse_removes_it():
+    cold = ColdStartModel(delay_s=2.0, keep_alive_s=10_000.0)
+    env = SimulatedPlatform().environment()
+    # second instance arrives long after the first finished: all its
+    # functions find warm containers
+    report = run_fleet(env, chatbot(), TraceArrivals([0.0, 1000.0]),
+                       cold_start=cold)
+    first, second = report.instances
+    assert first.cold_delay == pytest.approx(2.0 * len(chatbot()))
+    assert second.cold_delay == 0.0
+    assert first.e2e > second.e2e
+
+
+def test_warm_containers_not_shared_across_unrelated_functions():
+    """Heterogeneous fleets: a warm container belongs to (workflow
+    template, function) — an unrelated function that happens to reuse
+    a node name must still pay its own cold start."""
+    from repro.serverless.generator import chain_workflow
+
+    cold = ColdStartModel(delay_s=2.0, keep_alive_s=1e6)
+    env = SimulatedPlatform().environment()
+    # same node names (f000..), different templates (distinct specs)
+    wfs = [chain_workflow(3, seed=1), chain_workflow(3, seed=2)]
+    engine = FleetEngine(env.backend, pricing=env.pricing, cold_start=cold)
+    report = engine.run(wfs, [0.0, 500.0])
+    assert all(r.cold_delay == pytest.approx(6.0) for r in report.instances)
+    # same template: the second instance DOES reuse warm containers
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, chain_workflow(3, seed=1),
+                       TraceArrivals([0.0, 500.0]), cold_start=cold)
+    assert report.instances[1].cold_delay == 0.0
+
+
+def test_dead_release_unblocks_queued_work():
+    """An invocation dying on the spot (inf runtime, full cluster) must
+    free its capacity AND re-admit queued work at the same instant —
+    the blocked instance runs instead of being reported as an instant
+    no-op success."""
+    def oracle(node):
+        if node.payload == "bad":
+            raise ExecutionError("dies")
+        return 3.0
+
+    wf_bad = Workflow("bad")
+    wf_bad.add_function("f", payload="bad",
+                        config=ResourceConfig(cpu=10.0, mem=10240.0))
+    wf_ok = Workflow("ok")
+    wf_ok.add_function("f", config=ResourceConfig(cpu=10.0, mem=10240.0))
+    engine = FleetEngine(CallableBackend(oracle),     # no clamped => inf
+                         cluster=ClusterModel(total_cpu=10.0,
+                                              total_mem_mb=10240.0))
+    report = engine.run([wf_bad, wf_ok], [0.0, 0.0])
+    bad, ok = report.instances
+    assert bad.failed and math.isinf(bad.e2e)
+    assert not ok.failed and ok.e2e == 3.0            # actually executed
+    assert wf_ok.nodes["f"].runtime == 3.0
+
+
+def test_throughput_zero_for_dead_fleet():
+    def oracle(node):
+        raise ExecutionError("dies")
+
+    wf = Workflow("w")
+    wf.add_function("f")
+    rep = FleetEngine(CallableBackend(oracle)).run([wf], [0.0])
+    assert rep.throughput == 0.0
+
+
+def test_expired_containers_are_cold_again():
+    cold = ColdStartModel(delay_s=2.0, keep_alive_s=1.0)
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, chatbot(), TraceArrivals([0.0, 1000.0]),
+                       cold_start=cold)
+    assert report.instances[1].cold_delay == \
+        pytest.approx(2.0 * len(chatbot()))
+
+
+def test_failing_config_marks_instance_infeasible():
+    wf = chatbot()
+    wf.nodes["preprocess"].config = ResourceConfig(cpu=2.0, mem=128.0)  # OOM
+    env = SimulatedPlatform().environment()
+    report = run_fleet(env, wf, [0.0], copy=False)
+    res = report.instances[0]
+    assert res.failed
+    assert math.isfinite(res.e2e)       # charged the clamped thrash time
+    assert wf.nodes["preprocess"].failed
+    assert "OOM" in wf.nodes["preprocess"].fail_reason
+    assert report.slo_attainment(workload_slo("chatbot")) == 0.0
+    # the diagnostic also reaches the search trace note
+    sample = env.execute(wf, slo=workload_slo("chatbot"))
+    assert sample.error and "OOM" in sample.note
+
+
+def test_trace_arrivals_preserve_instance_pairing():
+    """TraceArrivals must pair entry i with instance i, exactly like a
+    raw float sequence (no silent re-sorting)."""
+    from repro.core.engine import arrival_times
+
+    assert arrival_times(TraceArrivals([5.0, 1.0])).tolist() == [5.0, 1.0]
+    env = SimulatedPlatform().environment()
+    rep = run_fleet(env, chatbot(), TraceArrivals([5.0, 1.0]))
+    assert [r.arrival for r in rep.instances] == [5.0, 1.0]
+
+
+def test_unplaceable_config_rejected():
+    env = SimulatedPlatform().environment()
+    with pytest.raises(ValueError, match="never be placed"):
+        run_fleet(env, chatbot(), [0.0],
+                  cluster=ClusterModel(total_cpu=1.0, total_mem_mb=1024.0))
+
+
+def test_fifo_no_overtaking():
+    """A later arrival must not start before an earlier one that is
+    still waiting for capacity (strict FIFO admission)."""
+    wf = chatbot()
+    env = SimulatedPlatform().environment()
+    # cluster fits exactly one base-config function at a time
+    report = run_fleet(env, wf, TraceArrivals([0.0, 0.1, 0.2]),
+                       cluster=ClusterModel(total_cpu=10.0,
+                                            total_mem_mb=10240.0))
+    by_arrival = sorted(report.instances, key=lambda r: r.arrival)
+    finishes = [r.finish for r in by_arrival]
+    assert finishes == sorted(finishes)
+
+
+def test_engine_batches_invocations():
+    """One engine step evaluates all simultaneously-started invocations
+    in a single backend batch call."""
+    calls = []
+    platform = SimulatedPlatform()
+    real = platform.backend.invoke_batch
+
+    def spy(nodes):
+        calls.append(len(nodes))
+        return real(nodes)
+
+    platform.backend.invoke_batch = spy
+    engine = FleetEngine(platform.backend, pricing=platform.pricing)
+    wfs = [chatbot() for _ in range(8)]
+    engine.run(wfs, [0.0] * 8)
+    # all 8 instances arrive at t=0: their sources start as ONE batch
+    assert calls[0] == 8
+
+
+# -- Environment.execute_function failure recording (env satellite) ----
+
+def test_execute_function_failure_recorded_on_node():
+    wf = chatbot()
+    env = SimulatedPlatform().environment()
+    env.execute(wf, slo=workload_slo("chatbot"))
+    node = wf.nodes["preprocess"]
+    good_runtime = node.runtime
+    node.config = ResourceConfig(cpu=2.0, mem=128.0)          # below floor
+    sample = env.execute_function(wf, node, slo=workload_slo("chatbot"))
+    assert sample.error and not sample.feasible
+    assert node.failed
+    assert node.runtime != good_runtime       # stale runtime NOT kept
+    assert node.runtime > 0 and math.isfinite(node.runtime)   # clamped
+
+
+def test_execute_function_failure_without_clamped_is_infinite():
+    def oracle(node):
+        raise ExecutionError("always fails")
+
+    wf = Workflow("w")
+    node = wf.add_function("f")
+    node.runtime = 1.23                       # stale value from earlier
+    env = Environment(CallableBackend(oracle))
+    sample = env.execute_function(wf, node, slo=10.0)
+    assert sample.error
+    assert node.failed
+    assert math.isinf(node.runtime)           # failure visible in e2e
+    assert math.isinf(wf.end_to_end_latency())

@@ -1,0 +1,156 @@
+"""Random-workflow generator: acyclicity, connectivity, seed
+reproducibility, affinity profiles — plus the DAG's incremental
+cycle-detection under adversarial edge orders."""
+import time
+
+import pytest
+
+from repro.core.dag import Workflow
+from repro.serverless.function import FunctionSpec
+from repro.serverless.generator import (AFFINITY_PROFILES, GENERATORS,
+                                        chain_workflow, diamond_workflow,
+                                        fan_workflow, generate,
+                                        layered_workflow, suggest_slo)
+from repro.serverless.platform import SimulatedPlatform
+
+KINDS = {
+    "chain": dict(n=8),
+    "fan": dict(width=5),
+    "diamond": dict(n_diamonds=3),
+    "layered": dict(n_nodes=24, n_layers=5, p_edge=0.3),
+}
+
+
+def _edges(wf: Workflow):
+    return sorted((u, v) for u in wf.nodes for v in wf.successors(u))
+
+
+def _on_source_sink_path(wf: Workflow):
+    """Every node reachable from a source AND reaching a sink."""
+    order = wf.topological_order()
+    from_src = {n for n in wf.nodes if not wf.predecessors(n)}
+    for n in order:
+        if any(p in from_src for p in wf.predecessors(n)):
+            from_src.add(n)
+    to_sink = {n for n in wf.nodes if not wf.successors(n)}
+    for n in reversed(order):
+        if any(s in to_sink for s in wf.successors(n)):
+            to_sink.add(n)
+    return from_src & to_sink
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+def test_generated_workflows_are_valid_dags(kind):
+    wf = generate(kind, seed=7, **KINDS[kind])
+    order = wf.topological_order()          # raises on a cycle
+    assert len(order) == len(wf)
+    assert _on_source_sink_path(wf) == set(wf.nodes)
+    for node in wf:
+        assert isinstance(node.payload, FunctionSpec)
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+def test_generator_seed_reproducible(kind):
+    a = generate(kind, seed=11, **KINDS[kind])
+    b = generate(kind, seed=11, **KINDS[kind])
+    c = generate(kind, seed=12, **KINDS[kind])
+    assert list(a.nodes) == list(b.nodes)
+    assert _edges(a) == _edges(b)
+    for name in a.nodes:
+        assert a.nodes[name].payload == b.nodes[name].payload
+    # a different seed changes the response surfaces (and usually the
+    # topology too)
+    assert any(a.nodes[n].payload != c.nodes[n].payload
+               for n in a.nodes if n in c.nodes) or _edges(a) != _edges(c)
+
+
+def test_topology_shapes():
+    assert len(chain_workflow(5)) == 5
+    fan = fan_workflow(width=6)
+    assert len(fan) == 8
+    assert fan.sources() == ["scatter"] and fan.sinks() == ["gather"]
+    dia = diamond_workflow(n_diamonds=2)
+    assert len(dia) == 8
+    assert len(dia.sources()) == 1 and len(dia.sinks()) == 1
+
+
+def test_affinity_profile_pinning():
+    wf = layered_workflow(12, n_layers=3, seed=4, profile="cpu_bound")
+    lo, hi = AFFINITY_PROFILES["cpu_bound"].parallel_frac
+    for node in wf:
+        assert lo <= node.payload.parallel_frac <= hi
+
+
+def test_large_layered_dag_builds_fast():
+    """1k-node DAGs must build in linear-ish time (the add_edge cycle
+    check is incremental, not a per-edge DFS)."""
+    t0 = time.perf_counter()
+    wf = layered_workflow(1000, n_layers=25, p_edge=0.08, seed=2)
+    elapsed = time.perf_counter() - t0
+    assert len(wf) == 1000
+    assert elapsed < 5.0
+    wf.validate()
+
+
+def test_generated_workflow_runs_end_to_end():
+    wf = layered_workflow(10, n_layers=4, seed=9)
+    slo = suggest_slo(wf)
+    env = SimulatedPlatform().environment()
+    sample = env.execute(wf, slo=slo)
+    assert sample.feasible
+    assert sample.e2e_runtime <= slo
+
+
+def test_generated_workflow_is_schedulable():
+    """AARC's Graph-Centric Scheduler works on generated workflows
+    through the same Environment API as the hand-built ones."""
+    from repro.core.scheduler import GraphCentricScheduler
+
+    wf = layered_workflow(8, n_layers=3, seed=21)
+    slo = suggest_slo(wf, slack=2.0)
+    env = SimulatedPlatform().environment()
+    result = GraphCentricScheduler(env).schedule(wf, slo)
+    assert result.e2e_runtime <= slo
+    base_cost = env.trace.samples[0].cost
+    assert result.cost < base_cost
+
+
+# -- incremental cycle detection under adversarial edge orders ---------
+
+def test_backward_edge_insertion_reorders_not_rejects():
+    """Edges against the insertion order are legal as long as the graph
+    stays acyclic (the Pearce–Kelly index reorders instead of failing)."""
+    wf = Workflow("w")
+    for name in "abcd":
+        wf.add_function(name)
+    wf.add_edge("d", "c")
+    wf.add_edge("c", "b")
+    wf.add_edge("b", "a")
+    assert wf.topological_order() == ["d", "c", "b", "a"]
+    with pytest.raises(ValueError, match="cycle"):
+        wf.add_edge("a", "d")
+    # the rejected edge must leave the graph untouched
+    assert wf.successors("a") == ()
+    assert wf.topological_order() == ["d", "c", "b", "a"]
+
+
+def test_cycle_detected_through_long_path():
+    wf = Workflow("w")
+    names = [f"n{i}" for i in range(50)]
+    for n in names:
+        wf.add_function(n)
+    wf.chain(*names)
+    with pytest.raises(ValueError, match="cycle"):
+        wf.add_edge(names[-1], names[0])
+    with pytest.raises(ValueError, match="cycle"):
+        wf.add_edge(names[10], names[10])
+    wf.validate()
+
+
+def test_copy_preserves_incremental_index():
+    wf = diamond_workflow(n_diamonds=2, seed=1)
+    cp = wf.copy()
+    cp.validate()
+    assert _edges(cp) == _edges(wf)
+    with pytest.raises(ValueError, match="cycle"):
+        cp.add_edge("d1_join", "d0_open")

@@ -1,9 +1,8 @@
 """Algorithm 2 (Priority Configuration) invariants."""
 import math
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.dag import Workflow
 from repro.core.priority import priority_configuration

@@ -1,9 +1,8 @@
 """Serverless simulator: response-surface properties + calibration."""
 import math
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.env import ExecutionError
 from repro.core.resources import ResourceConfig, coupled_config

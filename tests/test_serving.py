@@ -81,6 +81,58 @@ def test_engine_continuous_batching_refills_slots():
     assert sorted(r.uid for r in results) == [r.uid for r in reqs]
 
 
+def test_engine_honors_timed_arrivals():
+    """With a step clock, requests stamped by an arrival process are
+    only admitted once they have arrived (shared fleet-engine traffic
+    models drive LLM serving too)."""
+    cfg = reduced_config("olmo-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, n_slots=2, max_len=48)
+    q = RequestQueue()
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=6) for _ in range(3)]
+    # arrivals at t=0 and far beyond the first request's decode window
+    reqs = q.submit_process([0.0, 50.0, 50.0], prompts, max_new_tokens=4)
+    results = eng.run(q, step_duration_s=1.0)
+    assert sorted(r.uid for r in results) == sorted(r.uid for r in reqs)
+    assert all(len(r.tokens) == 4 for r in results)
+    # ignoring the clock admits everything immediately and still drains
+    q2 = RequestQueue()
+    q2.submit_process([0.0, 50.0], prompts[:2], max_new_tokens=4)
+    eng2 = ServeEngine(model, params, n_slots=2, max_len=48)
+    assert len(eng2.run(q2)) == 2
+
+
+def test_queue_orders_out_of_order_arrivals():
+    """An already-arrived request must not be blocked behind a
+    later-arriving one submitted first."""
+    q = RequestQueue()
+    late = q.submit(np.asarray([1, 2], np.int32), arrival=100.0)
+    early = q.submit(np.asarray([3, 4], np.int32), arrival=0.0)
+    assert q.next_arrival() == 0.0
+    assert q.pop(now=0.0).uid == early.uid
+    assert q.pop(now=0.0) is None          # late one hasn't arrived
+    assert q.pop(now=100.0).uid == late.uid
+    # equal arrivals keep FIFO order
+    q2 = RequestQueue()
+    a = q2.submit(np.asarray([1], np.int32), arrival=5.0)
+    b = q2.submit(np.asarray([2], np.int32), arrival=5.0)
+    assert q2.pop(now=5.0).uid == a.uid
+    assert q2.pop(now=5.0).uid == b.uid
+
+
+def test_engine_rejects_nonpositive_step_duration():
+    cfg = reduced_config("olmo-1b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = ServeEngine(model, params, n_slots=1, max_len=16)
+    q = RequestQueue()
+    q.submit(np.asarray([1, 2], np.int32), arrival=1.0)
+    with pytest.raises(ValueError, match="step_duration_s"):
+        eng.run(q, step_duration_s=0.0)
+
+
 def test_engine_greedy_matches_manual_decode():
     """Engine slot path reproduces a manual prefill+argmax loop."""
     cfg = reduced_config("qwen3-0.6b")

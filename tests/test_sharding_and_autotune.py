@@ -1,7 +1,6 @@
 """Sharding-rule derivation + the AARC-on-TPU autotuner."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import SHAPES, get_config
 from repro.autotune import build_stage_graph, make_tpu_env, plan
