@@ -5,9 +5,7 @@ import json
 import os
 from typing import Dict, List
 
-from repro.core.baselines.bo import bo_search
-from repro.core.baselines.maff import maff_search
-from repro.core.scheduler import GraphCentricScheduler
+from repro.core.search import make_searcher
 from repro.serverless.platform import SimulatedPlatform
 from repro.serverless.workloads import WORKLOADS, workload_slo
 
@@ -23,18 +21,12 @@ def emit(rows: List[Dict], name: str) -> None:
 
 def run_method(method: str, workload: str, *, bo_rounds: int = 100,
                seed: int = 0):
-    """Run one searcher; returns (env with trace, best/Schedule result)."""
+    """Run one searcher through the unified Searcher protocol; returns
+    ``(env with trace, cost, configs)`` — every figure benchmark reads
+    the trace, so searcher selection is just a registry lookup."""
     wf = WORKLOADS[workload]()
     slo = workload_slo(workload)
     env = SimulatedPlatform().environment()
-    if method == "aarc":
-        res = GraphCentricScheduler(env).schedule(wf, slo)
-        return env, res.cost, res.configs
-    if method == "maff":
-        best = maff_search(wf, slo, env)
-        return env, best.cost, best.configs
-    if method == "bo":
-        best = bo_search(wf, slo, env, n_rounds=bo_rounds, seed=seed)
-        return env, (best.cost if best else float("inf")), \
-            (best.configs if best else {})
-    raise ValueError(method)
+    kwargs = {"bo": {"n_rounds": bo_rounds, "seed": seed}}.get(method, {})
+    result = make_searcher(method, env, **kwargs).search(wf, slo)
+    return env, result.cost, result.configs

@@ -1,6 +1,8 @@
-"""Dev driver: fleet-engine smoke + one forward+loss / prefill /
-decode per reduced arch. ``--engine-only`` skips the (slow) model
-sweep; positional args select architectures."""
+"""Dev driver: fleet-engine + campaign-search smoke + one
+forward+loss / prefill / decode per reduced arch. ``--engine-only``
+runs just the engine smoke, ``--campaign-only`` just the search-layer
+smoke (both skip the slow model sweep); positional args select
+architectures."""
 import sys
 import traceback
 
@@ -33,6 +35,56 @@ def smoke_fleet_engine():
     assert s.feasible, "generated workflow infeasible at base config"
     print(f"OK   fleet_engine             p50={rep.p50:.1f}s "
           f"p99={rep.p99:.1f}s queue={rep.total_queue_delay:.0f}s")
+
+
+def smoke_campaign():
+    """Exercise the Searcher protocol, batched candidate evaluation and
+    the portfolio campaign pipeline without pytest."""
+    from repro.core.campaign import (CampaignSpec, PortfolioSpec, ReplaySpec,
+                                     run_campaign)
+    from repro.core.resources import ResourceConfig
+    from repro.core.search import SEARCHERS, Searcher, make_searcher
+    from repro.serverless.generator import layered_workflow, suggest_slo
+    from repro.serverless.platform import make_env
+    from repro.serverless.workloads import chatbot, workload_slo
+
+    # every registered searcher satisfies the protocol and solves chatbot
+    for name in SEARCHERS:
+        searcher = make_searcher(
+            name, make_env, **({"n_rounds": 25} if name == "bo" else {}))
+        assert isinstance(searcher, Searcher)
+        res = searcher.search(chatbot(), workload_slo("chatbot"))
+        assert res.feasible, f"{name} infeasible on chatbot"
+        assert res.searcher == name and res.n_samples == res.trace.n_samples
+
+    # batched candidate evaluation agrees with the scalar path
+    wf = layered_workflow(12, n_layers=3, seed=0)
+    slo = suggest_slo(wf)
+    cands = [{n.name: ResourceConfig(cpu=2.0 + i, mem=2048.0) for n in wf}
+             for i in range(4)]
+    batched = make_env().execute_candidates(wf, cands, slo)
+    env = make_env()
+    scalar = []
+    for cand in cands:
+        probe = wf.copy()
+        probe.apply_configs(cand)
+        scalar.append(env.execute(probe, slo))
+    assert [s.e2e_runtime for s in batched] == [s.e2e_runtime for s in scalar], \
+        "batched candidate evaluation diverged from scalar path"
+
+    # a small end-to-end campaign: generator -> searchers -> fleet replay
+    report = run_campaign(CampaignSpec(
+        portfolio=PortfolioSpec(n_workflows=4, size=6),
+        replay=ReplaySpec(n_instances=8, rate=0.5),
+        searchers=("aarc", "maff"), seed=0))
+    summary = report.summary()
+    assert set(summary) == {"aarc", "maff"}
+    for agg in summary.values():
+        assert agg["n_tasks"] == 4 and agg["feasible_rate"] > 0.0
+    print(f"OK   campaign                 "
+          f"aarc={summary['aarc']['mean_slo_attainment']:.2f} att "
+          f"maff={summary['maff']['mean_slo_attainment']:.2f} att "
+          f"wall={report.wall_time_s:.2f}s")
 
 
 def batch_for(cfg, b=2, s=32):
@@ -87,13 +139,22 @@ def run_models(only):
 
 def main():
     args = sys.argv[1:]
+    if "--campaign-only" not in args:
+        try:
+            smoke_fleet_engine()
+        except Exception:
+            print("FAIL fleet_engine")
+            traceback.print_exc()
+            return 1
+    if "--engine-only" in args:
+        return 0
     try:
-        smoke_fleet_engine()
+        smoke_campaign()
     except Exception:
-        print("FAIL fleet_engine")
+        print("FAIL campaign")
         traceback.print_exc()
         return 1
-    if "--engine-only" in args:
+    if "--campaign-only" in args:
         return 0
     return run_models([a for a in args if not a.startswith("-")])
 

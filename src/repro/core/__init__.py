@@ -13,6 +13,9 @@ case (fleet of 1, infinite capacity, zero cold start).
 """
 from repro.core.backend import (BaseBackend, CallableBackend, RuntimeBackend,
                                 as_backend)
+from repro.core.campaign import (Campaign, CampaignReport, CampaignSpec,
+                                 CampaignTask, PortfolioSpec, ReplayMetrics,
+                                 ReplaySpec, TaskResult, run_campaign)
 from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
 from repro.core.critical_path import (SubPath, find_critical_path,
                                       find_detour_subpath, runtime_sum)
@@ -27,6 +30,9 @@ from repro.core.priority import Operation, priority_configuration
 from repro.core.resources import (BASE_CONFIG, ResourceConfig, coupled_config,
                                   quantize_cpu, quantize_mem)
 from repro.core.scheduler import GraphCentricScheduler, ScheduleResult, schedule
+from repro.core.search import (AARCSearcher, BOSearcher, MAFFSearcher,
+                               SEARCHERS, SearchResult, Searcher,
+                               make_searcher)
 
 __all__ = [
     "BaseBackend", "CallableBackend", "RuntimeBackend", "as_backend",
@@ -42,4 +48,9 @@ __all__ = [
     "BASE_CONFIG", "ResourceConfig", "coupled_config",
     "quantize_cpu", "quantize_mem",
     "GraphCentricScheduler", "ScheduleResult", "schedule",
+    "AARCSearcher", "BOSearcher", "MAFFSearcher", "SEARCHERS",
+    "SearchResult", "Searcher", "make_searcher",
+    "Campaign", "CampaignReport", "CampaignSpec", "CampaignTask",
+    "PortfolioSpec", "ReplayMetrics", "ReplaySpec", "TaskResult",
+    "run_campaign",
 ]

@@ -7,6 +7,13 @@ whole workflow is optimized jointly, so the input dimension is
 kernel; the acquisition is expected improvement over an SLO-penalized
 cost objective, optimized by candidate sampling. Self-contained numpy —
 no external optimizer dependency.
+
+``batch_size`` enables *batch BO*: each round scores the candidate
+pool once and evaluates the top-``q`` acquisition points through
+:meth:`repro.core.env.Environment.execute_candidates` — one vectorized
+backend call per round instead of point-by-point execution. The GP is
+refit with all q results before the next round. ``batch_size=1`` is
+the original sequential loop, bit-for-bit.
 """
 from __future__ import annotations
 
@@ -41,8 +48,9 @@ class BayesianOptimizer:
     def __init__(self, wf: Workflow, slo: float, env: Environment, *,
                  seed: int = 0, n_init: int = 8, n_candidates: int = 512,
                  lengthscale: float = 0.25, noise: float = 1e-4,
-                 slo_penalty: float = 10.0):
+                 slo_penalty: float = 10.0, batch_size: int = 1):
         self.wf = wf
+        self.batch_size = max(1, batch_size)
         self.slo = slo
         self.env = env
         self.rng = np.random.default_rng(seed)
@@ -88,6 +96,22 @@ class BayesianOptimizer:
         self.y.append(val)
         return val
 
+    def _config_map(self, x: np.ndarray) -> dict:
+        return {name: ResourceConfig(cpu=quantize_cpu(float(x[2 * i])),
+                                     mem=quantize_mem(float(x[2 * i + 1])))
+                for i, name in enumerate(self.names)}
+
+    def _evaluate_batch(self, xs: np.ndarray) -> None:
+        """Evaluate a whole acquisition batch in ONE backend call."""
+        candidates = [self._config_map(x) for x in xs]
+        samples = self.env.execute_candidates(self.wf, candidates, self.slo,
+                                              note="bo")
+        for x, sample in zip(xs, samples):
+            # objective depends on the y-history, so append in order
+            val = self._objective(sample)
+            self.X.append(np.asarray(x, dtype=np.float64).copy())
+            self.y.append(val)
+
     # -- GP posterior ----------------------------------------------------
     def _posterior(self, cand: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         X = _to_unit(np.stack(self.X))
@@ -114,17 +138,37 @@ class BayesianOptimizer:
 
     # -- main loop ---------------------------------------------------------
     def run(self, n_rounds: int = 100) -> Optional[Sample]:
+        if not self.env.trace.capture_configs:
+            raise ValueError(
+                "BO reads the winning configuration back from the trace "
+                "(best_feasible().configs); capture_configs=False would "
+                "silently return empty configs")
         # the over-provisioned platform default is always in the initial
         # design (practitioners start from the known-safe config)
         base = np.empty(self.dim)
         base[0::2], base[1::2] = CPU_MAX, MEM_MAX_MB
-        self._evaluate(base)
-        for _ in range(min(self.n_init, n_rounds) - 1):
-            self._evaluate(self._random_x(1)[0])
-        while len(self.y) < n_rounds:
-            cand = self._random_x(self.n_candidates)
-            ei = self._expected_improvement(cand)
-            self._evaluate(cand[int(np.argmax(ei))])
+        if self.batch_size == 1:
+            self._evaluate(base)
+            for _ in range(min(self.n_init, n_rounds) - 1):
+                self._evaluate(self._random_x(1)[0])
+            while len(self.y) < n_rounds:
+                cand = self._random_x(self.n_candidates)
+                ei = self._expected_improvement(cand)
+                self._evaluate(cand[int(np.argmax(ei))])
+        else:
+            # batch BO: same design points, evaluated q at a time
+            n_init = min(self.n_init, n_rounds)
+            init = np.concatenate([base[None, :],
+                                   self._random_x(n_init - 1)]) \
+                if n_init > 1 else base[None, :]
+            for lo in range(0, len(init), self.batch_size):
+                self._evaluate_batch(init[lo:lo + self.batch_size])
+            while len(self.y) < n_rounds:
+                cand = self._random_x(self.n_candidates)
+                ei = self._expected_improvement(cand)
+                q = min(self.batch_size, n_rounds - len(self.y))
+                top = np.argsort(ei)[::-1][:q]       # best-EI first
+                self._evaluate_batch(cand[top])
         best = self.env.trace.best_feasible()
         if best is not None:
             self.wf.apply_configs(best.configs)

@@ -33,6 +33,11 @@ def maff_search(wf: Workflow, slo: float, env: Environment, *,
     ``min_rel_step`` — MAFF's per-function gradient descent with step
     decay. Returns the best feasible sample.
     """
+    if not env.trace.capture_configs:
+        raise ValueError(
+            "MAFF reads the winning configuration back from the trace "
+            "(best_feasible().configs); capture_configs=False would "
+            "silently return empty configs")
     # start from the coupled base configuration
     for node in wf:
         node.config = coupled_config(MEM_MAX_MB)

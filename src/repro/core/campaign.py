@@ -1,0 +1,286 @@
+"""Portfolio campaigns: generator → searchers → fleet replay.
+
+A *campaign* evaluates searchers at fleet scale instead of one
+hand-built workflow per script:
+
+  1. **portfolio** — generate N seed-reproducible workflows
+     (:mod:`repro.serverless.generator` topology families, affinity
+     profiles) from one master seed,
+  2. **SLO grid** — each workflow is searched against a grid of SLOs
+     derived from its base-config latency (slack factors),
+  3. **search** — every registered :class:`repro.core.search.Searcher`
+     configures every (workflow, SLO) task; traces capture modeled
+     search time / cost / sample counts,
+  4. **fleet replay** — each found configuration is replayed through
+     the discrete-event :class:`repro.core.engine.FleetEngine` under
+     Poisson load on a (optionally finite) cluster, reporting realized
+     SLO attainment, latency percentiles, and fleet cost.
+
+The result is one table: per searcher, how much search time bought how
+much SLO attainment at what cost — the paper's Fig. 5 comparison, but
+over hundreds of generated scenarios instead of three workflows.
+
+All randomness (workflow structure, response surfaces, SLO grid,
+arrival processes) derives from ``CampaignSpec.seed``, so campaigns
+are exactly reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dag import Workflow
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               INFINITE_CLUSTER, NO_COLD_START,
+                               PoissonArrivals)
+from repro.core.env import Environment
+from repro.core.search import SearchResult, Searcher, make_searcher
+
+
+@dataclasses.dataclass(frozen=True)
+class PortfolioSpec:
+    """What workflows a campaign sweeps."""
+
+    n_workflows: int = 16
+    kinds: Sequence[str] = ("chain", "fan", "diamond", "layered")
+    #: approximate node count per generated workflow
+    size: int = 8
+    #: SLO grid: each slack × the workflow's base-config latency
+    slo_slacks: Sequence[float] = (1.5,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplaySpec:
+    """How each found configuration is replayed through the fleet."""
+
+    n_instances: int = 32
+    rate: float = 0.2                    # Poisson arrivals / second
+    cluster: ClusterModel = INFINITE_CLUSTER
+    cold_start: ColdStartModel = NO_COLD_START
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignSpec:
+    portfolio: PortfolioSpec = PortfolioSpec()
+    replay: ReplaySpec = ReplaySpec()
+    searchers: Sequence[str] = ("aarc", "bo", "maff")
+    #: per-searcher constructor kwargs, keyed by registry name
+    searcher_kwargs: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignTask:
+    """One (generated workflow, SLO) cell of the sweep."""
+
+    index: int
+    kind: str
+    wf_seed: int
+    slo: float
+    slack: float
+    n_nodes: int
+    template: Workflow               # pristine template; copied per searcher
+
+
+@dataclasses.dataclass
+class ReplayMetrics:
+    slo_attainment: float
+    p50_s: float
+    p99_s: float
+    total_cost: float
+    total_queue_delay_s: float
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TaskResult:
+    task: CampaignTask
+    search: SearchResult
+    replay: Optional[ReplayMetrics]
+
+    def row(self) -> Dict[str, object]:
+        out = {"task": self.task.index, "kind": self.task.kind,
+               "wf_seed": self.task.wf_seed, "n_nodes": self.task.n_nodes,
+               "slack": self.task.slack}
+        out.update(self.search.summary())
+        if self.replay is not None:
+            out.update({f"replay_{k}": v for k, v in self.replay.row().items()})
+        return out
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    spec: CampaignSpec
+    results: List[TaskResult]
+    wall_time_s: float
+
+    def by_searcher(self) -> Dict[str, List[TaskResult]]:
+        out: Dict[str, List[TaskResult]] = {}
+        for r in self.results:
+            out.setdefault(r.search.searcher, []).append(r)
+        return out
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-searcher aggregates over the whole campaign, including
+        search-time deltas relative to the slowest searcher."""
+        per: Dict[str, Dict[str, float]] = {}
+        for name, rows in self.by_searcher().items():
+            n = len(rows)
+            feas = [r for r in rows if r.search.feasible]
+            att = [r.replay.slo_attainment for r in rows
+                   if r.replay is not None]
+            cost = [r.replay.total_cost for r in rows if r.replay is not None]
+            per[name] = {
+                "n_tasks": n,
+                "feasible_rate": len(feas) / n if n else float("nan"),
+                "total_search_time_s": sum(r.search.search_time for r in rows),
+                "total_search_cost": sum(r.search.search_cost for r in rows),
+                "total_samples": sum(r.search.n_samples for r in rows),
+                "total_wall_s": sum(r.search.wall_time_s for r in rows),
+                "mean_slo_attainment": (sum(att) / len(att)) if att
+                else float("nan"),
+                "mean_replay_cost": (sum(cost) / len(cost)) if cost
+                else float("nan"),
+                "workflows_per_s": (n / sum(r.search.wall_time_s
+                                            for r in rows))
+                if rows else float("nan"),
+            }
+        # search-time reduction vs the slowest searcher (the paper's
+        # headline metric, generalized across the portfolio)
+        finite = {k: v["total_search_time_s"] for k, v in per.items()
+                  if math.isfinite(v["total_search_time_s"])}
+        if finite:
+            worst = max(finite.values())
+            for name, agg in per.items():
+                t = agg["total_search_time_s"]
+                agg["search_time_reduction_vs_worst"] = (
+                    1.0 - t / worst if worst > 0 else 0.0)
+        return per
+
+    def to_rows(self) -> List[Dict[str, object]]:
+        return [r.row() for r in self.results]
+
+
+def _build_workflow(kind: str, size: int, seed: int) -> Workflow:
+    """Map (family, size) onto the generator's per-family parameters."""
+    from repro.serverless import generator as gen
+
+    if kind == "chain":
+        return gen.chain_workflow(max(1, size), seed=seed)
+    if kind == "fan":
+        return gen.fan_workflow(max(1, size - 2), seed=seed)
+    if kind == "diamond":
+        return gen.diamond_workflow(max(1, size // 4), seed=seed)
+    if kind == "layered":
+        return gen.layered_workflow(max(2, size),
+                                    n_layers=max(2, size // 3), seed=seed)
+    raise ValueError(f"unknown workflow kind {kind!r}")
+
+
+def _default_env_factory() -> Environment:
+    from repro.serverless.platform import make_env
+
+    return make_env()
+
+
+class Campaign:
+    """Runs a :class:`CampaignSpec` end to end.
+
+    ``env_factory`` builds the :class:`Environment` each search samples
+    through (default: a fresh analytic simulated platform); replay uses
+    the same backend/pricing so searched and replayed latencies agree.
+    """
+
+    def __init__(self, spec: CampaignSpec = CampaignSpec(), *,
+                 env_factory: Optional[Callable[[], Environment]] = None):
+        self.spec = spec
+        self.env_factory = env_factory or _default_env_factory
+
+    # -- portfolio -----------------------------------------------------
+    def tasks(self) -> List[CampaignTask]:
+        """The (workflow × SLO) grid, reproducible from the master seed."""
+        from repro.serverless.generator import suggest_slo
+
+        p = self.spec.portfolio
+        rng = np.random.default_rng(self.spec.seed)
+        wf_seeds = rng.integers(0, 2**31 - 1, size=p.n_workflows)
+        tasks: List[CampaignTask] = []
+        idx = 0
+        for i in range(p.n_workflows):
+            kind = p.kinds[i % len(p.kinds)]
+            wf = _build_workflow(kind, p.size, int(wf_seeds[i]))
+            for slack in p.slo_slacks:
+                tasks.append(CampaignTask(
+                    index=idx, kind=kind, wf_seed=int(wf_seeds[i]),
+                    slo=suggest_slo(wf, slack=slack), slack=slack,
+                    n_nodes=len(wf), template=wf))
+                idx += 1
+        return tasks
+
+    def searchers(self) -> List[Searcher]:
+        return [make_searcher(name, self.env_factory,
+                              **self.spec.searcher_kwargs.get(name, {}))
+                for name in self.spec.searchers]
+
+    # -- replay --------------------------------------------------------
+    def replay(self, task: CampaignTask, result: SearchResult,
+               arrival_seed: int) -> ReplayMetrics:
+        """Replay one found configuration through the fleet engine under
+        Poisson load; infeasible searches fall back to the searcher's
+        reported (safe, over-provisioned) configuration."""
+        r = self.spec.replay
+        env = self.env_factory()
+        engine = FleetEngine(env.backend, pricing=env.pricing,
+                             cluster=r.cluster, cold_start=r.cold_start)
+        instances = []
+        for _ in range(r.n_instances):
+            wf = task.template.copy()
+            wf.apply_configs(result.configs)
+            instances.append(wf)
+        arrivals = PoissonArrivals(r.rate, r.n_instances, seed=arrival_seed)
+        report = engine.run(instances, arrivals.times())
+        return ReplayMetrics(
+            slo_attainment=report.slo_attainment(task.slo),
+            p50_s=report.p50, p99_s=report.p99,
+            total_cost=report.total_cost,
+            total_queue_delay_s=report.total_queue_delay)
+
+    # -- the pipeline --------------------------------------------------
+    def run(self, *, with_replay: bool = True,
+            progress: Optional[Callable[[str], None]] = None
+            ) -> CampaignReport:
+        t0 = time.perf_counter()
+        tasks = self.tasks()
+        searchers = self.searchers()
+        # arrival seeds are independent of workflow seeds but derived
+        # from the same master seed (shared seeded RNG)
+        arrival_rng = np.random.default_rng(self.spec.seed + 1)
+        arrival_seeds = arrival_rng.integers(0, 2**31 - 1, size=len(tasks))
+        results: List[TaskResult] = []
+        for task in tasks:
+            for searcher in searchers:
+                wf = task.template.copy()
+                res = searcher.search(wf, task.slo)
+                replay = (self.replay(task, res, int(arrival_seeds[task.index]))
+                          if with_replay else None)
+                results.append(TaskResult(task=task, search=res,
+                                          replay=replay))
+                if progress is not None:
+                    progress(f"{searcher.name} {task.kind}#{task.index} "
+                             f"feasible={res.feasible} "
+                             f"samples={res.n_samples}")
+        return CampaignReport(spec=self.spec, results=results,
+                              wall_time_s=time.perf_counter() - t0)
+
+
+def run_campaign(spec: CampaignSpec = CampaignSpec(), *,
+                 env_factory: Optional[Callable[[], Environment]] = None,
+                 with_replay: bool = True) -> CampaignReport:
+    """Functional entry point: ``run_campaign(CampaignSpec(...))``."""
+    return Campaign(spec, env_factory=env_factory).run(with_replay=with_replay)

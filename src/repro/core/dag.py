@@ -57,6 +57,7 @@ class Workflow:
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
         self._ord: Dict[str, int] = {}     # Pearce–Kelly topological index
+        self._topo: Optional[List[str]] = None   # cached topological order
 
     # -- construction -------------------------------------------------
     def add_node(self, node: Node) -> Node:
@@ -66,6 +67,7 @@ class Workflow:
         self._succ[node.name] = []
         self._pred[node.name] = []
         self._ord[node.name] = len(self._ord)
+        self._topo = None
         return node
 
     def add_function(self, name: str, payload: object = None,
@@ -80,6 +82,7 @@ class Workflow:
             raise ValueError(f"edge {src}->{dst} would create a cycle")
         if dst in self._succ[src]:
             return
+        self._topo = None
         self._succ[src].append(dst)
         self._pred[dst].append(src)
         if self._ord[src] > self._ord[dst]:
@@ -154,10 +157,21 @@ class Workflow:
         direct ``_succ``/``_pred`` surgery in tests or ``copy()`` — and
         rebuilds the incremental index so later ``add_edge`` calls see
         a consistent order even after such surgery."""
+        self._topo = None
         order = self.topological_order()
         self._ord = {name: i for i, name in enumerate(order)}
 
     def topological_order(self) -> List[str]:
+        """Deterministic (name-tie-broken) topological order. The order
+        only depends on graph *structure*, so it is cached between
+        structural mutations — ``end_to_end_latency`` is called once per
+        search sample and dominates trace bookkeeping otherwise."""
+        if self._topo is not None:
+            return list(self._topo)
+        self._topo = self._compute_topo()
+        return list(self._topo)
+
+    def _compute_topo(self) -> List[str]:
         indeg = {n: len(self._pred[n]) for n in self.nodes}
         ready = [n for n, d in indeg.items() if d == 0]
         heapq.heapify(ready)                # deterministic: name order
@@ -221,4 +235,5 @@ class Workflow:
                 wf._succ[src].append(dst)
                 wf._pred[dst].append(src)
         wf._ord = dict(self._ord)
+        wf._topo = list(self._topo) if self._topo is not None else None
         return wf

@@ -13,6 +13,16 @@ sequentially-executed functions under a latency SLO:
   * on success the op re-enters keyed by the realized cost reduction,
   * the loop ends when the queue is empty or ``MAX_TRAIL`` samples have
     been consumed.
+
+Batched probing (``batch_size > 1``): a function's runtime depends only
+on its *own* config, so ops at the same priority that touch **distinct
+functions** can be measured together — one
+:meth:`repro.core.env.Environment.probe_function_batch` call (a single
+``invoke_batch`` numpy evaluation) per round — and then committed or
+reverted one at a time in pop order, preserving revert-per-op
+semantics: each trial's accept/reject sees every earlier decision of
+the same round, exactly as the scalar loop would. ``batch_size=1``
+takes the original scalar path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -20,10 +30,10 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cost import workflow_cost
-from repro.core.dag import Workflow
+from repro.core.dag import Node, Workflow
 from repro.core.env import Environment
 from repro.core.resources import ResourceConfig, quantize_cpu, quantize_mem
 
@@ -67,6 +77,9 @@ class _MaxPQ:
     def pop(self) -> Operation:
         return heapq.heappop(self._heap)[2]
 
+    def peek_priority(self) -> float:
+        return -self._heap[0][0]
+
     def __len__(self) -> int:
         return len(self._heap)
 
@@ -81,6 +94,7 @@ def priority_configuration(
     max_trail: int = MAX_TRAIL,
     func_trial: int = FUNC_TRIAL,
     initial_step: float = INITIAL_STEP,
+    batch_size: int = 1,
 ) -> Dict[str, ResourceConfig]:
     """Configure the functions along ``path`` so that the path latency
     stays within ``slo`` at minimum cost. Returns the per-function
@@ -88,7 +102,9 @@ def priority_configuration(
 
     ``global_slo`` is the end-to-end SLO used for sample bookkeeping
     (it differs from ``slo`` when configuring a detour sub-path against
-    its sub-SLO).
+    its sub-SLO). ``batch_size`` ops on distinct functions at equal
+    priority are probed per backend call (see module docstring);
+    ``batch_size=1`` is the scalar loop unchanged.
     """
     if global_slo is None:
         global_slo = slo
@@ -103,26 +119,12 @@ def priority_configuration(
                               trail=func_trial), priority=math.inf)
 
     prev_cost = workflow_cost(env.pricing, wf)      # last *accepted* cost
-    count = 0
-    while len(pq) > 0 and count < max_trail:        # Alg 2 line 11
-        op = pq.pop()
-        node = wf.nodes[op.func]
-        old_cfg = node.config
-        new_cfg = _deallocated(old_cfg, op)
-        if new_cfg.as_tuple() == old_cfg.as_tuple():
-            # quantizes to no change (resource at floor / step too small):
-            # the op is exhausted and consumes no sample budget.
-            continue
-        count += 1
 
-        old_runtime, old_failed = node.runtime, node.failed
-        old_reason = node.fail_reason
-        node.config = new_cfg                       # deallocate(op)
-        # AARC re-invokes only the re-configured function; the rest of
-        # the path keeps its cached (deterministic) runtimes.
-        sample = env.execute_function(
-            wf, node, slo=global_slo,
-            note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
+    def decide(op: Operation, node: Node, sample,
+               saved: Tuple[ResourceConfig, float, bool, str]) -> float:
+        """Alg 2 lines 14-21 acceptance: revert-or-keep one trial.
+        Returns the updated last-accepted cost."""
+        nonlocal prev_cost
         path_latency = wf.path_latency(path)
         violated = (sample.error                    # invocation failed (OOM)
                     or not math.isfinite(sample.e2e_runtime)
@@ -131,9 +133,9 @@ def priority_configuration(
                     or sample.cost >= prev_cost)    # Alg 2 line 14
 
         if violated:
-            node.config = old_cfg                   # revert (allocate(op))
-            node.runtime, node.failed = old_runtime, old_failed
-            node.fail_reason = old_reason
+            node.config = saved[0]                  # revert (allocate(op))
+            node.runtime, node.failed = saved[1], saved[2]
+            node.fail_reason = saved[3]
             op.trail -= 1
             op.step *= 0.5                          # exponential backoff
             if op.trail > 0:                        # Alg 2 line 16-18
@@ -142,6 +144,78 @@ def priority_configuration(
             reduced = prev_cost - sample.cost       # Alg 2 line 20-21
             prev_cost = sample.cost
             pq.push(op, priority=reduced)
+        return prev_cost
+
+    count = 0
+    if batch_size <= 1:
+        while len(pq) > 0 and count < max_trail:    # Alg 2 line 11
+            op = pq.pop()
+            node = wf.nodes[op.func]
+            old_cfg = node.config
+            new_cfg = _deallocated(old_cfg, op)
+            if new_cfg.as_tuple() == old_cfg.as_tuple():
+                # quantizes to no change (resource at floor / step too
+                # small): the op is exhausted, consumes no sample budget.
+                continue
+            count += 1
+
+            saved = (old_cfg, node.runtime, node.failed, node.fail_reason)
+            node.config = new_cfg                   # deallocate(op)
+            # AARC re-invokes only the re-configured function; the rest
+            # of the path keeps its cached (deterministic) runtimes.
+            sample = env.execute_function(
+                wf, node, slo=global_slo,
+                note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
+            decide(op, node, sample, saved)
+    else:
+        while len(pq) > 0 and count < max_trail:
+            # drain one round: equal-priority ops on distinct functions
+            prio = pq.peek_priority()
+            round_ops: List[Tuple[Operation, Node, ResourceConfig,
+                                  Tuple[ResourceConfig, float, bool, str]]] = []
+            deferred: List[Operation] = []          # same-func duplicates
+            touched = set()
+            while (len(pq) > 0 and len(round_ops) < batch_size
+                   and count < max_trail
+                   and pq.peek_priority() == prio):
+                op = pq.pop()
+                if op.func in touched:
+                    deferred.append(op)
+                    continue
+                node = wf.nodes[op.func]
+                old_cfg = node.config
+                new_cfg = _deallocated(old_cfg, op)
+                if new_cfg.as_tuple() == old_cfg.as_tuple():
+                    continue                        # exhausted, no budget
+                count += 1
+                touched.add(op.func)
+                saved = (old_cfg, node.runtime, node.failed, node.fail_reason)
+                round_ops.append((op, node, new_cfg, saved))
+            for op in deferred:
+                pq.push(op, priority=prio)
+            if not round_ops:
+                continue
+
+            # ONE vectorized probe for the whole round. Configs are
+            # applied only for the probe and restored right after: a
+            # trial's sample must price every *other* function at its
+            # last-accepted config, exactly as the scalar loop does.
+            for _, node, new_cfg, _ in round_ops:
+                node.config = new_cfg
+            runtimes, failed = env.probe_function_batch(
+                [node for _, node, _, _ in round_ops])
+            for _, node, _, saved in round_ops:
+                node.config = saved[0]
+
+            # sequential commit-or-revert in pop order (revert-per-op):
+            # trial i sees every earlier decision of the same round
+            for (op, node, new_cfg, saved), rt, bad in zip(round_ops,
+                                                           runtimes, failed):
+                node.config = new_cfg               # deallocate(op)
+                sample = env.apply_function_trial(
+                    wf, node, float(rt), bool(bad), slo=global_slo,
+                    note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
+                decide(op, node, sample, saved)
 
     for name in path:
         wf.nodes[name].scheduled = True

@@ -40,12 +40,14 @@ class GraphCentricScheduler:
     def __init__(self, env: Environment, *, max_trail: int = MAX_TRAIL,
                  func_trial: int = FUNC_TRIAL,
                  initial_step: float = INITIAL_STEP,
-                 base_config: ResourceConfig = BASE_CONFIG):
+                 base_config: ResourceConfig = BASE_CONFIG,
+                 batch_size: int = 1):
         self.env = env
         self.max_trail = max_trail
         self.func_trial = func_trial
         self.initial_step = initial_step
         self.base_config = base_config
+        self.batch_size = batch_size
 
     def schedule(self, wf: Workflow, slo: float) -> ScheduleResult:
         env = self.env
@@ -68,7 +70,7 @@ class GraphCentricScheduler:
         configs = priority_configuration(
             wf, critical_path, slo, env, global_slo=slo,
             max_trail=self.max_trail, func_trial=self.func_trial,
-            initial_step=self.initial_step)
+            initial_step=self.initial_step, batch_size=self.batch_size)
         g_configs.update(configs)
 
         # -- compute configs for subpaths (Alg 1 line 10-21)
@@ -87,7 +89,7 @@ class GraphCentricScheduler:
             configs = priority_configuration(
                 wf, pending, sub_slo, env, global_slo=slo,
                 max_trail=self.max_trail, func_trial=self.func_trial,
-                initial_step=self.initial_step)
+                initial_step=self.initial_step, batch_size=self.batch_size)
             g_configs.update(configs)
 
         # any node untouched by every path keeps the base config

@@ -1,0 +1,227 @@
+"""Unified Searcher protocol over the configuration-search stack.
+
+AARC's Graph-Centric Scheduler, the Bayesian-Optimization baseline and
+the MAFF baseline were three bespoke entry points with three different
+result shapes. This module puts them behind one interface:
+
+  * :class:`Searcher` — ``search(wf, slo) -> SearchResult`` plus a
+    ``name``; any object satisfying it plugs into the campaign runner,
+    the benchmarks, and the tests unchanged,
+  * :class:`SearchResult` — per-search record: the found configuration,
+    its end-to-end latency / cost / feasibility, and the shared
+    trace-derived bookkeeping (modeled search time = Σ trial wall time,
+    search cost = Σ sampled execution cost, sample count, actual
+    wall-clock) every searcher reports identically,
+  * :data:`SEARCHERS` / :func:`make_searcher` — a registry so campaign
+    specs and CLIs can name searchers as strings.
+
+Adding a new searcher: implement ``search`` (measure candidates
+through the :class:`repro.core.env.Environment` you are given so the
+trace bookkeeping stays comparable), set a ``name``, and register the
+class in :data:`SEARCHERS`.
+
+Each concrete searcher takes an *environment factory* — a zero-arg
+callable returning a fresh :class:`Environment` — so one searcher
+instance can sweep many workflows with isolated traces (an
+:class:`Environment` instance is also accepted and reused with its
+trace reset per search). With ``batch_size=1`` every searcher's trace
+is bit-for-bit the trace of its legacy entry point; larger batches
+route candidate evaluation through the vectorized paths
+(:meth:`Environment.execute_candidates`, Algorithm 2's batched probe
+rounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import (Callable, Dict, Optional, Protocol, Type, Union,
+                    runtime_checkable)
+
+from repro.core.baselines.bo import BayesianOptimizer
+from repro.core.baselines.maff import maff_search
+from repro.core.dag import Workflow
+from repro.core.env import Environment, Sample, SearchTrace
+from repro.core.priority import FUNC_TRIAL, INITIAL_STEP, MAX_TRAIL
+from repro.core.resources import BASE_CONFIG, ResourceConfig
+from repro.core.scheduler import GraphCentricScheduler
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """What one configuration search produced, searcher-agnostic."""
+
+    searcher: str                        # registry name of the searcher
+    workflow: str                        # wf.name
+    slo: float
+    configs: Dict[str, ResourceConfig]   # found per-function configuration
+    e2e_runtime: float                   # latency under ``configs``
+    cost: float                          # one-execution cost under ``configs``
+    feasible: bool                       # SLO met by ``configs``
+    n_samples: int
+    search_time: float                   # modeled Σ trial wall time (Fig. 5a)
+    search_cost: float                   # Σ sampled execution cost (Fig. 5b)
+    wall_time_s: float                   # actual wall-clock spent searching
+    trace: SearchTrace
+    best: Optional[Sample] = None        # cheapest feasible trace sample
+    note: str = ""                       # e.g. infeasibility diagnostics
+
+    def summary(self) -> Dict[str, object]:
+        """Flat row for benchmark JSON emission."""
+        return {
+            "searcher": self.searcher, "workflow": self.workflow,
+            "slo_s": self.slo, "feasible": self.feasible,
+            "e2e_s": self.e2e_runtime, "cost": self.cost,
+            "n_samples": self.n_samples, "search_time_s": self.search_time,
+            "search_cost": self.search_cost, "wall_time_s": self.wall_time_s,
+        }
+
+
+@runtime_checkable
+class Searcher(Protocol):
+    """Anything that can configure a workflow against an SLO."""
+
+    name: str
+
+    def search(self, wf: Workflow, slo: float) -> SearchResult:
+        """Find a per-function configuration for ``wf`` under ``slo``."""
+        ...
+
+
+EnvLike = Union[Environment, Callable[[], Environment]]
+
+
+class _EnvSearcher:
+    """Shared env-factory handling + SearchResult assembly."""
+
+    name = "base"
+
+    def __init__(self, env: EnvLike):
+        self._env_source = env
+
+    def _fresh_env(self) -> Environment:
+        if isinstance(self._env_source, Environment):
+            self._env_source.reset_trace()
+            return self._env_source
+        return self._env_source()
+
+    def _result(self, env: Environment, wf: Workflow, slo: float,
+                configs: Dict[str, ResourceConfig], e2e: float, cost: float,
+                feasible: bool, wall: float, note: str = "") -> SearchResult:
+        return SearchResult(
+            searcher=self.name, workflow=wf.name, slo=slo, configs=configs,
+            e2e_runtime=e2e, cost=cost, feasible=feasible,
+            n_samples=env.trace.n_samples,
+            search_time=env.trace.total_search_runtime,
+            search_cost=env.trace.total_search_cost,
+            wall_time_s=wall, trace=env.trace,
+            best=env.trace.best_feasible(), note=note)
+
+
+def _base_configs(wf: Workflow) -> Dict[str, ResourceConfig]:
+    """Safe over-provisioned fallback when a search finds nothing."""
+    return {name: BASE_CONFIG.copy() for name in wf.nodes}
+
+
+class AARCSearcher(_EnvSearcher):
+    """Algorithm 1 + 2 behind the Searcher protocol."""
+
+    name = "aarc"
+
+    def __init__(self, env: EnvLike, *, max_trail: int = MAX_TRAIL,
+                 func_trial: int = FUNC_TRIAL,
+                 initial_step: float = INITIAL_STEP, batch_size: int = 1):
+        super().__init__(env)
+        self.max_trail = max_trail
+        self.func_trial = func_trial
+        self.initial_step = initial_step
+        self.batch_size = batch_size
+
+    def search(self, wf: Workflow, slo: float) -> SearchResult:
+        env = self._fresh_env()
+        t0 = time.perf_counter()
+        try:
+            res = GraphCentricScheduler(
+                env, max_trail=self.max_trail, func_trial=self.func_trial,
+                initial_step=self.initial_step,
+                batch_size=self.batch_size).schedule(wf, slo)
+        except ValueError as exc:       # SLO infeasible even at base config
+            return self._result(env, wf, slo, _base_configs(wf),
+                                math.inf, math.inf, False,
+                                time.perf_counter() - t0, note=str(exc))
+        return self._result(env, wf, slo, res.configs, res.e2e_runtime,
+                            res.cost, res.e2e_runtime <= slo + 1e-9,
+                            time.perf_counter() - t0)
+
+
+class BOSearcher(_EnvSearcher):
+    """Joint-space GP/EI baseline behind the Searcher protocol."""
+
+    name = "bo"
+
+    def __init__(self, env: EnvLike, *, n_rounds: int = 100, seed: int = 0,
+                 batch_size: int = 1, **bo_kwargs):
+        super().__init__(env)
+        self.n_rounds = n_rounds
+        self.seed = seed
+        self.batch_size = batch_size
+        self.bo_kwargs = bo_kwargs
+
+    def search(self, wf: Workflow, slo: float) -> SearchResult:
+        env = self._fresh_env()
+        t0 = time.perf_counter()
+        best = BayesianOptimizer(wf, slo, env, seed=self.seed,
+                                 batch_size=self.batch_size,
+                                 **self.bo_kwargs).run(self.n_rounds)
+        wall = time.perf_counter() - t0
+        if best is None:
+            return self._result(env, wf, slo, _base_configs(wf), math.inf,
+                                math.inf, False, wall,
+                                note="no feasible sample")
+        return self._result(env, wf, slo, best.configs, best.e2e_runtime,
+                            best.cost, True, wall)
+
+
+class MAFFSearcher(_EnvSearcher):
+    """Coupled memory-descent baseline behind the Searcher protocol."""
+
+    name = "maff"
+
+    def __init__(self, env: EnvLike, *, shrink: float = 0.4,
+                 min_rel_step: float = 0.02, max_samples: int = 200):
+        super().__init__(env)
+        self.shrink = shrink
+        self.min_rel_step = min_rel_step
+        self.max_samples = max_samples
+
+    def search(self, wf: Workflow, slo: float) -> SearchResult:
+        env = self._fresh_env()
+        t0 = time.perf_counter()
+        best = maff_search(wf, slo, env, shrink=self.shrink,
+                           min_rel_step=self.min_rel_step,
+                           max_samples=self.max_samples)
+        wall = time.perf_counter() - t0
+        if best is None:
+            return self._result(env, wf, slo, _base_configs(wf), math.inf,
+                                math.inf, False, wall,
+                                note="infeasible at coupled base config")
+        return self._result(env, wf, slo, best.configs, best.e2e_runtime,
+                            best.cost, True, wall)
+
+
+#: registry: campaign specs / CLIs name searchers as strings
+SEARCHERS: Dict[str, Type] = {
+    AARCSearcher.name: AARCSearcher,
+    BOSearcher.name: BOSearcher,
+    MAFFSearcher.name: MAFFSearcher,
+}
+
+
+def make_searcher(name: str, env: EnvLike, **kwargs) -> Searcher:
+    """Instantiate a registered searcher by name."""
+    try:
+        cls = SEARCHERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown searcher {name!r}; choose from {sorted(SEARCHERS)}")
+    return cls(env, **kwargs)

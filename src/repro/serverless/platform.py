@@ -64,12 +64,9 @@ class AnalyticBackend(BaseBackend):
     def _noise_batch(self, rt: np.ndarray, ok: np.ndarray) -> np.ndarray:
         return rt
 
-    # -- vectorized path (one engine step == one numpy evaluation) -----
-    def invoke_batch(self, nodes: Sequence[Node]) -> Tuple[np.ndarray, np.ndarray]:
+    def _spec_arrays(self, nodes: Sequence[Node]) -> Tuple[np.ndarray, ...]:
+        """Gather the response-surface constants of ``nodes`` (shape (n,))."""
         n = len(nodes)
-        self.invocations += n
-        cpu = np.empty(n)
-        mem = np.empty(n)
         cpu_work = np.empty(n)
         pfrac = np.empty(n)
         mem_floor = np.empty(n)
@@ -79,8 +76,6 @@ class AnalyticBackend(BaseBackend):
         scale_mem = np.empty(n, dtype=bool)
         for i, node in enumerate(nodes):
             spec = self._spec(node)
-            cpu[i] = node.config.cpu
-            mem[i] = node.config.mem
             cpu_work[i] = spec.cpu_work
             pfrac[i] = spec.parallel_frac
             mem_floor[i] = spec.mem_floor
@@ -88,17 +83,21 @@ class AnalyticBackend(BaseBackend):
             penalty[i] = spec.mem_penalty
             io[i] = spec.io_time
             scale_mem[i] = spec.scale_mem
+        return cpu_work, pfrac, mem_floor, mem_knee, penalty, io, scale_mem
 
+    def _surface(self, cpu: np.ndarray, mem: np.ndarray,
+                 spec_arrays: Tuple[np.ndarray, ...]
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Evaluate the response surface for any broadcastable config
+        arrays (``(n,)`` for one invocation batch, ``(C, n)`` for C
+        candidate configurations of the same n functions)."""
+        cpu_work, pfrac, mem_floor, mem_knee, penalty, io, scale_mem = \
+            spec_arrays
         s = self.input_scale
         eff = np.where(scale_mem, s, 1.0)
         floor = mem_floor * eff
         knee = mem_knee * eff
         failed = mem < floor                            # OOM-killed
-        if failed.any():                # keep the common all-ok path hot
-            for i in np.flatnonzero(failed):
-                nodes[i].fail_reason = (
-                    f"{nodes[i].name}: OOM ({mem[i]:.0f} MB < working set "
-                    f"{floor[i]:.0f} MB)")
         flat = (mem >= knee) | (knee <= floor)          # above the knee
         safe_div = np.where(knee > floor, knee - floor, 1.0)
         frac = np.where(flat | failed, 0.0, (knee - mem) / safe_div)
@@ -110,6 +109,41 @@ class AnalyticBackend(BaseBackend):
         runtimes = io + work * amdahl * mem_factor
         runtimes = self._noise_batch(runtimes, ~failed)
         return runtimes, failed
+
+    # -- vectorized path (one engine step == one numpy evaluation) -----
+    def invoke_batch(self, nodes: Sequence[Node]) -> Tuple[np.ndarray, np.ndarray]:
+        n = len(nodes)
+        self.invocations += n
+        cpu = np.empty(n)
+        mem = np.empty(n)
+        for i, node in enumerate(nodes):
+            cpu[i] = node.config.cpu
+            mem[i] = node.config.mem
+        spec_arrays = self._spec_arrays(nodes)
+        runtimes, failed = self._surface(cpu, mem, spec_arrays)
+        if failed.any():                # keep the common all-ok path hot
+            eff = np.where(spec_arrays[6], self.input_scale, 1.0)
+            floor = spec_arrays[2] * eff
+            for i in np.flatnonzero(failed):
+                nodes[i].fail_reason = (
+                    f"{nodes[i].name}: OOM ({mem[i]:.0f} MB < working set "
+                    f"{floor[i]:.0f} MB)")
+        return runtimes, failed
+
+    def invoke_config_batch(self, nodes: Sequence[Node], cpu: np.ndarray,
+                            mem: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """C candidate configurations × n functions in ONE numpy call.
+
+        ``cpu``/``mem`` have shape ``(C, n)`` aligned to ``nodes``; the
+        response-surface constants are gathered once and broadcast, so
+        the per-node Python cost is amortized over all C candidates
+        (the campaign-scale hot path; see
+        :meth:`repro.core.env.Environment.execute_candidates`).
+        """
+        self.invocations += int(np.size(cpu))
+        return self._surface(np.asarray(cpu, dtype=np.float64),
+                             np.asarray(mem, dtype=np.float64),
+                             self._spec_arrays(nodes))
 
 
 class StochasticBackend(AnalyticBackend):

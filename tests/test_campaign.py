@@ -1,0 +1,105 @@
+"""Portfolio-campaign pipeline: generator → searchers → fleet replay."""
+import math
+
+import pytest
+
+from repro.core.campaign import (Campaign, CampaignSpec, PortfolioSpec,
+                                 ReplaySpec, run_campaign)
+from repro.core.engine import ClusterModel
+
+
+SMALL = CampaignSpec(
+    portfolio=PortfolioSpec(n_workflows=4, size=6, slo_slacks=(1.5, 2.5)),
+    replay=ReplaySpec(n_instances=8, rate=0.5),
+    searchers=("aarc", "maff"),
+    searcher_kwargs={"aarc": {"batch_size": 4}},
+    seed=11)
+
+
+@pytest.fixture(scope="module")
+def report():
+    return run_campaign(SMALL)
+
+
+def test_campaign_covers_the_full_grid(report):
+    # 4 workflows x 2 SLO slacks x 2 searchers
+    assert len(report.results) == 16
+    by = report.by_searcher()
+    assert set(by) == {"aarc", "maff"}
+    assert all(len(rows) == 8 for rows in by.values())
+    kinds = {r.task.kind for r in report.results}
+    assert kinds == {"chain", "fan", "diamond", "layered"}
+
+
+def test_tasks_are_seed_reproducible():
+    t1 = Campaign(SMALL).tasks()
+    t2 = Campaign(SMALL).tasks()
+    assert [(t.kind, t.wf_seed, t.slo) for t in t1] == \
+        [(t.kind, t.wf_seed, t.slo) for t in t2]
+    t3 = Campaign(CampaignSpec(portfolio=SMALL.portfolio,
+                               replay=SMALL.replay,
+                               searchers=SMALL.searchers, seed=12)).tasks()
+    assert [t.wf_seed for t in t1] != [t.wf_seed for t in t3]
+
+
+def test_campaign_is_deterministic(report):
+    again = run_campaign(SMALL)
+    assert [r.search.cost for r in report.results] == \
+        [r.search.cost for r in again.results]
+    assert [r.replay.slo_attainment for r in report.results] == \
+        [r.replay.slo_attainment for r in again.results]
+
+
+def test_replay_metrics_are_sane(report):
+    for r in report.results:
+        assert r.replay is not None
+        assert 0.0 <= r.replay.slo_attainment <= 1.0
+        assert r.replay.total_cost > 0.0
+        assert r.replay.p99_s >= r.replay.p50_s
+        if r.search.feasible:
+            # infinite cluster, no cold start: every instance realizes
+            # the searched latency, so attainment is total
+            assert r.replay.slo_attainment == 1.0
+
+
+def test_summary_reports_search_time_deltas(report):
+    summary = report.summary()
+    for agg in summary.values():
+        assert agg["n_tasks"] == 8
+        assert 0.0 <= agg["feasible_rate"] <= 1.0
+        assert math.isfinite(agg["total_search_time_s"])
+        assert "search_time_reduction_vs_worst" in agg
+    # AARC's single-function trials must beat MAFF's full-workflow
+    # samples on modeled search time (the paper's headline claim,
+    # generalized to the generated portfolio)
+    assert summary["aarc"]["total_search_time_s"] < \
+        summary["maff"]["total_search_time_s"]
+
+
+def test_rows_flatten_for_emission(report):
+    rows = report.to_rows()
+    assert len(rows) == len(report.results)
+    for row in rows:
+        assert {"searcher", "kind", "slo_s", "feasible", "n_samples",
+                "replay_slo_attainment"} <= set(row)
+
+
+def test_constrained_cluster_replay_queues():
+    spec = CampaignSpec(
+        portfolio=PortfolioSpec(n_workflows=2, size=6, kinds=("fan",),
+                                slo_slacks=(2.0,)),
+        replay=ReplaySpec(n_instances=16, rate=2.0,
+                          cluster=ClusterModel(total_cpu=20.0,
+                                               total_mem_mb=20480.0)),
+        searchers=("aarc",), seed=3)
+    report = run_campaign(spec)
+    assert any(r.replay.total_queue_delay_s > 0.0 for r in report.results)
+
+
+def test_campaign_without_replay():
+    report = run_campaign(CampaignSpec(
+        portfolio=PortfolioSpec(n_workflows=2, size=5, slo_slacks=(2.0,)),
+        searchers=("maff",), seed=5), with_replay=False)
+    assert all(r.replay is None for r in report.results)
+    agg = report.summary()["maff"]
+    assert math.isnan(agg["mean_slo_attainment"])

@@ -1,0 +1,287 @@
+"""Searcher-protocol conformance + batched-evaluation parity.
+
+Pins the campaign-scale refactor's two invariants:
+
+  * all three searchers satisfy :class:`repro.core.search.Searcher`
+    and, at ``batch_size=1``, produce traces identical to their legacy
+    entry points on the paper's three hand-built workloads,
+  * batched candidate evaluation (``execute_batch`` /
+    ``execute_candidates``) and batched Algorithm 2 agree with the
+    scalar path on generated DAGs.
+"""
+import math
+
+import pytest
+
+from repro.core.baselines.bo import bo_search
+from repro.core.baselines.maff import maff_search
+from repro.core.cost import workflow_cost
+from repro.core.priority import priority_configuration
+from repro.core.resources import BASE_CONFIG, ResourceConfig
+from repro.core.scheduler import GraphCentricScheduler
+from repro.core.search import (SEARCHERS, Searcher, SearchResult,
+                               make_searcher)
+from repro.serverless.generator import layered_workflow, suggest_slo
+from repro.serverless.platform import SimulatedPlatform, make_env
+from repro.serverless.workloads import WORKLOADS, workload_slo
+
+
+def _trace_rows(trace):
+    return [(s.index, s.e2e_runtime, s.cost, s.feasible, s.error,
+             s.trial_time, s.note, s.config_items)
+            for s in trace.samples]
+
+
+def _legacy_trace(method, name):
+    wf = WORKLOADS[name]()
+    slo = workload_slo(name)
+    env = SimulatedPlatform().environment()
+    if method == "aarc":
+        GraphCentricScheduler(env).schedule(wf, slo)
+    elif method == "maff":
+        maff_search(wf, slo, env)
+    else:
+        bo_search(wf, slo, env, n_rounds=30, seed=0)
+    return env.trace
+
+
+# -- protocol conformance ----------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SEARCHERS))
+def test_registered_searchers_satisfy_protocol(name):
+    searcher = make_searcher(name, make_env)
+    assert isinstance(searcher, Searcher)
+    assert searcher.name == name
+
+
+def test_unknown_searcher_rejected():
+    with pytest.raises(ValueError, match="unknown searcher"):
+        make_searcher("simulated-annealing", make_env)
+
+
+def test_duck_typed_searcher_satisfies_protocol():
+    class Constant:
+        name = "constant"
+
+        def search(self, wf, slo):
+            raise NotImplementedError
+
+    assert isinstance(Constant(), Searcher)
+
+
+@pytest.mark.parametrize("method", ["aarc", "bo", "maff"])
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_search_result_is_consistent(method, workload):
+    kwargs = {"bo": {"n_rounds": 30, "seed": 0}}.get(method, {})
+    res = make_searcher(method, make_env, **kwargs).search(
+        WORKLOADS[workload](), workload_slo(workload))
+    assert isinstance(res, SearchResult)
+    assert res.searcher == method and res.workflow == workload
+    assert res.feasible and res.e2e_runtime <= res.slo + 1e-9
+    assert res.n_samples == res.trace.n_samples
+    assert res.search_time == res.trace.total_search_runtime
+    assert set(res.configs) == set(WORKLOADS[workload]().nodes)
+    assert res.best is not None and res.best.cost <= res.cost + 1e-9
+
+
+# -- trace parity vs the legacy entry points ---------------------------
+
+@pytest.mark.parametrize("method", ["aarc", "bo", "maff"])
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_protocol_trace_identical_to_legacy(method, workload):
+    """The Searcher wrappers add bookkeeping, not samples: traces are
+    bit-for-bit the legacy entry points' traces at batch_size=1."""
+    kwargs = {"bo": {"n_rounds": 30, "seed": 0}}.get(method, {})
+    res = make_searcher(method, make_env, **kwargs).search(
+        WORKLOADS[workload](), workload_slo(workload))
+    assert _trace_rows(res.trace) == _trace_rows(_legacy_trace(method,
+                                                               workload))
+
+
+# -- batched candidate evaluation --------------------------------------
+
+def _random_candidates(wf, n, seed):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return [
+        {node.name: ResourceConfig(cpu=float(rng.uniform(0.5, 10.0)),
+                                   mem=float(rng.uniform(256.0, 10240.0)))
+         for node in wf}
+        for _ in range(n)]
+
+
+def test_execute_candidates_matches_scalar_execute():
+    wf = layered_workflow(16, n_layers=4, seed=2)
+    slo = suggest_slo(wf)
+    cands = _random_candidates(wf, 12, seed=0)
+    batched = make_env().execute_candidates(wf, cands, slo)
+    env = make_env()
+    for got, cand in zip(batched, cands):
+        probe = wf.copy()
+        probe.apply_configs(cand)
+        want = env.execute(probe, slo)
+        assert got.e2e_runtime == want.e2e_runtime
+        assert got.cost == pytest.approx(want.cost, rel=1e-12)
+        assert (got.feasible, got.error) == (want.feasible, want.error)
+    # pure evaluation: the template workflow's configs are untouched
+    assert all(n.config.as_tuple() == BASE_CONFIG.as_tuple() for n in wf)
+
+
+def test_execute_batch_matches_scalar_execute():
+    wfs = [layered_workflow(10, n_layers=3, seed=s) for s in range(4)]
+    slos = [suggest_slo(w) for w in wfs]
+    env_b = make_env()
+    batched = env_b.execute_batch([w.copy() for w in wfs], slos)
+    env_s = make_env()
+    for wf, slo, got in zip(wfs, slos, batched):
+        want = env_s.execute(wf.copy(), slo)
+        assert got.e2e_runtime == want.e2e_runtime
+        assert got.cost == want.cost
+        assert got.feasible == want.feasible
+
+
+def test_execute_batch_length_mismatch_rejected():
+    env = make_env()
+    with pytest.raises(ValueError, match="mismatch"):
+        env.execute_batch([layered_workflow(4, seed=0)], [1.0, 2.0])
+
+
+def test_execute_function_batch_commits_sequentially():
+    """Sample i reflects trials 0..i applied (commit-all, no revert)."""
+    def prepared():
+        wf = layered_workflow(8, n_layers=2, seed=5)
+        slo = suggest_slo(wf)
+        env = make_env()
+        env.execute(wf, slo)                 # populate runtimes
+        nodes = [wf.nodes[n] for n in wf.topological_order()[:3]]
+        for node in nodes:
+            node.config = ResourceConfig(cpu=2.0, mem=4096.0)
+        return wf, nodes, slo, env
+
+    wf_b, nodes_b, slo, env_b = prepared()
+    batched = env_b.execute_function_batch(wf_b, nodes_b, slo)
+    wf_s, nodes_s, slo, env_s = prepared()
+    scalar = [env_s.execute_function(wf_s, node, slo) for node in nodes_s]
+    assert [s.e2e_runtime for s in batched] == [s.e2e_runtime for s in scalar]
+    assert [s.cost for s in batched] == [s.cost for s in scalar]
+    assert [s.trial_time for s in batched] == [s.trial_time for s in scalar]
+
+
+def test_bo_and_maff_reject_capture_opt_out():
+    """BO/MAFF read the winning configs back from the trace, so the
+    compact-capture opt-out must fail loudly instead of returning
+    empty configurations."""
+    from repro.core.env import Environment
+    from repro.serverless.platform import AnalyticBackend
+
+    wf = WORKLOADS["chatbot"]()
+    env = Environment(AnalyticBackend(), capture_configs=False)
+    with pytest.raises(ValueError, match="capture_configs"):
+        bo_search(wf, workload_slo("chatbot"), env, n_rounds=5)
+    with pytest.raises(ValueError, match="capture_configs"):
+        maff_search(wf, workload_slo("chatbot"), env)
+    # AARC takes configs from the scheduler, not the trace — safe
+    env = Environment(AnalyticBackend(), capture_configs=False)
+    res = GraphCentricScheduler(env).schedule(wf, workload_slo("chatbot"))
+    assert set(res.configs) == set(wf.nodes)
+
+
+def test_bo_batched_rounds_consume_same_budget():
+    wf = WORKLOADS["chatbot"]()
+    res = make_searcher("bo", make_env, n_rounds=30, seed=0,
+                        batch_size=8).search(wf, workload_slo("chatbot"))
+    assert res.n_samples == 30
+    assert res.feasible
+
+
+# -- Algorithm 2: batched vs scalar parity on generated DAGs -----------
+
+def _prepare(seed):
+    """Base-configured layered DAG + its critical path (the path Alg 1
+    actually feeds to Alg 2 — its latency equals the e2e latency, so
+    the SLO leaves real slack and trials get accepted)."""
+    from repro.core.critical_path import find_critical_path
+
+    wf = layered_workflow(20, n_layers=4, seed=seed)
+    env = SimulatedPlatform().environment()
+    for node in wf:
+        node.config = BASE_CONFIG.copy()
+    base_e2e = wf.execute(env.oracle)
+    return wf, env, find_critical_path(wf), base_e2e
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_priority_batch_size_one_is_scalar_path(seed):
+    """batch_size=1 must be the untouched scalar loop, bit-for-bit."""
+    wf_a, env_a, path_a, e2e_a = _prepare(seed)
+    priority_configuration(wf_a, path_a, 1.5 * e2e_a, env_a, batch_size=1)
+    wf_b, env_b, path_b, e2e_b = _prepare(seed)
+    priority_configuration(wf_b, path_b, 1.5 * e2e_b, env_b)  # default path
+    assert _trace_rows(env_a.trace) == _trace_rows(env_b.trace)
+    accepted = [s for s in env_a.trace.samples if s.feasible]
+    assert accepted, "no trial accepted — the comparison would be vacuous"
+    assert workflow_cost(env_a.pricing, wf_a) == \
+        workflow_cost(env_b.pricing, wf_b)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("batch_size", [4, 8])
+def test_priority_batched_keeps_invariants(seed, batch_size):
+    """Batched rounds keep Alg 2's guarantees: SLO respected, cost
+    strictly reduced from base, budget respected, revert-safe."""
+    wf, env, path, base_e2e = _prepare(seed)
+    base_cost = workflow_cost(env.pricing, wf)
+    slo = 1.5 * base_e2e
+    priority_configuration(wf, path, slo, env, batch_size=batch_size)
+    assert wf.end_to_end_latency() <= slo + 1e-9
+    assert wf.path_latency(path) <= slo + 1e-9
+    assert workflow_cost(env.pricing, wf) < base_cost, \
+        "no deallocation accepted — batched search did nothing"
+    assert env.trace.n_samples <= 64        # MAX_TRAIL
+    for node in wf:
+        assert not node.failed
+
+
+@pytest.mark.parametrize("batch_size", [1, 4])
+def test_scheduler_batched_meets_slo_on_paper_workloads(batch_size):
+    for name in WORKLOADS:
+        wf = WORKLOADS[name]()
+        env = SimulatedPlatform().environment()
+        res = GraphCentricScheduler(env, batch_size=batch_size).schedule(
+            wf, workload_slo(name))
+        assert res.e2e_runtime <= workload_slo(name) + 1e-9
+
+
+# -- trace storage (compact capture) -----------------------------------
+
+def test_sample_configs_reconstructed_from_compact_items():
+    env = make_env()
+    wf = WORKLOADS["chatbot"]()
+    sample = env.execute(wf, slo=workload_slo("chatbot"))
+    assert isinstance(sample.config_items, tuple)
+    assert sample.configs == wf.configs()
+    # reconstruction is on demand — items stay primitive tuples
+    assert all(isinstance(item, tuple) and len(item) == 3
+               for item in sample.config_items)
+
+
+def test_trace_capture_opt_out():
+    from repro.core.env import Environment
+    from repro.serverless.platform import AnalyticBackend
+
+    env = Environment(AnalyticBackend(), capture_configs=False)
+    wf = WORKLOADS["chatbot"]()
+    sample = env.execute(wf, slo=workload_slo("chatbot"))
+    assert sample.config_items == () and sample.configs == {}
+    env.reset_trace()
+    assert env.trace.capture_configs is False
+
+
+def test_environment_reuses_engine():
+    env = make_env()
+    wf = WORKLOADS["chatbot"]()
+    env.execute(wf, slo=120.0)
+    engine = env.engine
+    env.execute(wf, slo=120.0)
+    assert env.engine is engine
