@@ -10,8 +10,9 @@ import time
 
 
 def main() -> int:
-    from benchmarks import (campaign_scale, fig2_decoupling, fig3_bo,
-                            fig5_search, fig67_convergence, fig8_input_aware,
+    from benchmarks import (adaptive_campaign, campaign_scale,
+                            fig2_decoupling, fig3_bo, fig5_search,
+                            fig67_convergence, fig8_input_aware,
                             fleet_throughput, roofline_table,
                             table2_optimal, tpu_autotune)
     benches = [
@@ -25,6 +26,7 @@ def main() -> int:
         ("roofline_table", roofline_table.main),
         ("fleet_throughput", fleet_throughput.main),
         ("campaign_scale", campaign_scale.main),
+        ("adaptive_campaign", adaptive_campaign.bench_main),
     ]
     failures = 0
     for name, fn in benches:

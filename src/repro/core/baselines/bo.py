@@ -14,12 +14,29 @@ pool once and evaluates the top-``q`` acquisition points through
 backend call per round instead of point-by-point execution. The GP is
 refit with all q results before the next round. ``batch_size=1`` is
 the original sequential loop, bit-for-bit.
+
+Cross-run knowledge transfer (the adaptive-campaign layer):
+
+  * ``warm_start`` — trace :class:`repro.core.env.Sample` rows from a
+    *prior* search over the same workflow/environment (e.g. AARC's
+    accepted trials) become GP training data for free: their objective
+    values are recomputed from the recorded latency/cost, so no budget
+    is spent re-measuring them. A warm-started run skips the random
+    initial design entirely. An *empty* ``warm_start`` is exactly the
+    cold optimizer, bit-for-bit.
+  * ``init_points`` — per-function configuration maps (e.g. the best
+    configuration of a structurally identical workflow) evaluated as
+    the first design points in place of random ones.
+  * :meth:`run` is *resumable*: the sample budget counts evaluated
+    points only, and calling ``run`` again with a larger budget
+    continues the search from the existing GP state instead of
+    restarting (``Searcher.resume`` uses this).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,7 +65,10 @@ class BayesianOptimizer:
     def __init__(self, wf: Workflow, slo: float, env: Environment, *,
                  seed: int = 0, n_init: int = 8, n_candidates: int = 512,
                  lengthscale: float = 0.25, noise: float = 1e-4,
-                 slo_penalty: float = 10.0, batch_size: int = 1):
+                 slo_penalty: float = 10.0, batch_size: int = 1,
+                 warm_start: Optional[Sequence[Sample]] = None,
+                 init_points: Optional[Sequence[Dict[str,
+                                                     ResourceConfig]]] = None):
         self.wf = wf
         self.batch_size = max(1, batch_size)
         self.slo = slo
@@ -63,6 +83,29 @@ class BayesianOptimizer:
         self.slo_penalty = slo_penalty
         self.X: List[np.ndarray] = []
         self.y: List[float] = []
+        self.init_points = list(init_points or ())
+        self._n_warm = 0
+        self._initialized = False
+        self._inject_warm(warm_start or ())
+
+    @property
+    def evaluated(self) -> int:
+        """Samples actually measured through the environment — warm
+        points are prior knowledge and never count against the budget."""
+        return len(self.y) - self._n_warm
+
+    def _inject_warm(self, warm: Sequence[Sample]) -> None:
+        """Seed the GP with prior trace samples, free of charge."""
+        for sample in warm:
+            if not sample.config_items or not math.isfinite(
+                    sample.e2e_runtime):
+                continue
+            cfg = sample.configs
+            if set(cfg) != set(self.names):
+                continue
+            self.X.append(self._x_from_configs(cfg))
+            self.y.append(self._objective(sample))
+            self._n_warm += 1
 
     # -- config <-> vector ---------------------------------------------
     def _apply(self, x: np.ndarray) -> None:
@@ -101,6 +144,19 @@ class BayesianOptimizer:
                                      mem=quantize_mem(float(x[2 * i + 1])))
                 for i, name in enumerate(self.names)}
 
+    def _x_from_configs(self, configs: Dict[str, ResourceConfig]) -> np.ndarray:
+        x = np.empty(self.dim)
+        for i, name in enumerate(self.names):
+            try:
+                cfg = configs[name]
+            except KeyError:
+                raise ValueError(
+                    f"configuration map is missing function {name!r} of "
+                    f"workflow {self.wf.name!r}")
+            x[2 * i] = cfg.cpu
+            x[2 * i + 1] = cfg.mem
+        return x
+
     def _evaluate_batch(self, xs: np.ndarray) -> None:
         """Evaluate a whole acquisition batch in ONE backend call."""
         candidates = [self._config_map(x) for x in xs]
@@ -138,41 +194,67 @@ class BayesianOptimizer:
 
     # -- main loop ---------------------------------------------------------
     def run(self, n_rounds: int = 100) -> Optional[Sample]:
+        """Search until ``n_rounds`` samples have been *evaluated*.
+
+        Re-entrant: calling ``run`` again with a larger ``n_rounds``
+        continues from the current GP state (no re-initialization), so
+        a resumed search spends exactly the extra budget.
+        """
         if not self.env.trace.capture_configs:
             raise ValueError(
                 "BO reads the winning configuration back from the trace "
                 "(best_feasible().configs); capture_configs=False would "
                 "silently return empty configs")
-        # the over-provisioned platform default is always in the initial
-        # design (practitioners start from the known-safe config)
-        base = np.empty(self.dim)
-        base[0::2], base[1::2] = CPU_MAX, MEM_MAX_MB
-        if self.batch_size == 1:
-            self._evaluate(base)
-            for _ in range(min(self.n_init, n_rounds) - 1):
-                self._evaluate(self._random_x(1)[0])
-            while len(self.y) < n_rounds:
-                cand = self._random_x(self.n_candidates)
-                ei = self._expected_improvement(cand)
+        if not self._initialized:
+            self._initialized = True
+            self._initial_design(n_rounds)
+        while self.evaluated < n_rounds:
+            cand = self._random_x(self.n_candidates)
+            ei = self._expected_improvement(cand)
+            if self.batch_size == 1:
                 self._evaluate(cand[int(np.argmax(ei))])
-        else:
-            # batch BO: same design points, evaluated q at a time
-            n_init = min(self.n_init, n_rounds)
-            init = np.concatenate([base[None, :],
-                                   self._random_x(n_init - 1)]) \
-                if n_init > 1 else base[None, :]
-            for lo in range(0, len(init), self.batch_size):
-                self._evaluate_batch(init[lo:lo + self.batch_size])
-            while len(self.y) < n_rounds:
-                cand = self._random_x(self.n_candidates)
-                ei = self._expected_improvement(cand)
-                q = min(self.batch_size, n_rounds - len(self.y))
+            else:
+                q = min(self.batch_size, n_rounds - self.evaluated)
                 top = np.argsort(ei)[::-1][:q]       # best-EI first
                 self._evaluate_batch(cand[top])
         best = self.env.trace.best_feasible()
         if best is not None:
             self.wf.apply_configs(best.configs)
         return best
+
+    def _initial_design(self, n_rounds: int) -> None:
+        """Evaluate the initial design: the over-provisioned platform
+        default (practitioners start from the known-safe config), then
+        any transferred ``init_points``, then random points up to
+        ``n_init``. Warm-started runs already own GP data, so they skip
+        the safe-base/random design and evaluate only the transferred
+        incumbents."""
+        ipts = [self._x_from_configs(c) for c in self.init_points]
+        if self._n_warm > 0:
+            for x in ipts:
+                if self.evaluated >= n_rounds:
+                    break
+                self._evaluate(x)
+            return
+        base = np.empty(self.dim)
+        base[0::2], base[1::2] = CPU_MAX, MEM_MAX_MB
+        if self.batch_size == 1:
+            self._evaluate(base)
+            for x in ipts[:max(0, n_rounds - 1)]:
+                self._evaluate(x)
+            n_rand = min(self.n_init, n_rounds) - 1 - len(ipts)
+            for _ in range(max(0, n_rand)):
+                self._evaluate(self._random_x(1)[0])
+        else:
+            # batch BO: same design points, evaluated q at a time
+            n_init = min(self.n_init, n_rounds)
+            rows = [base[None, :]] + [x[None, :] for x in ipts]
+            n_rand = n_init - 1 - len(ipts)
+            if n_rand > 0:
+                rows.append(self._random_x(n_rand))
+            init = np.concatenate(rows)[:max(1, n_rounds)]
+            for lo in range(0, len(init), self.batch_size):
+                self._evaluate_batch(init[lo:lo + self.batch_size])
 
 
 def bo_search(wf: Workflow, slo: float, env: Environment,

@@ -12,18 +12,20 @@ workloads (ML Pipeline) where the coupled axis cannot express
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.core.cost import workflow_cost
 from repro.core.dag import Workflow
 from repro.core.env import Environment, Sample
-from repro.core.resources import (MEM_MIN_MB, MEM_MAX_MB, coupled_config,
-                                  quantize_mem)
+from repro.core.resources import (MEM_MIN_MB, MEM_MAX_MB, ResourceConfig,
+                                  coupled_config, quantize_mem)
 
 
 def maff_search(wf: Workflow, slo: float, env: Environment, *,
                 shrink: float = 0.4, min_rel_step: float = 0.02,
-                max_samples: int = 200) -> Optional[Sample]:
+                max_samples: int = 200,
+                start_configs: Optional[Dict[str, ResourceConfig]] = None,
+                fallback_to_base: bool = True) -> Optional[Sample]:
     """Coupled memory descent, one function at a time.
 
     For each function (in topological order): repeatedly multiply its
@@ -32,16 +34,32 @@ def maff_search(wf: Workflow, slo: float, env: Environment, *,
     terminate the function's descent once the step falls below
     ``min_rel_step`` — MAFF's per-function gradient descent with step
     decay. Returns the best feasible sample.
+
+    ``start_configs`` warm-starts the descent from a known
+    configuration (e.g. AARC's best for the same cell, or a config
+    transferred from a structurally identical workflow) instead of the
+    coupled base; a start that violates the SLO on *this* response
+    surface falls back to the coupled base rather than aborting.
+    ``fallback_to_base=False`` disables that retry (and its extra base
+    sample) — resumed searches use it to keep a hard sample budget.
     """
     if not env.trace.capture_configs:
         raise ValueError(
             "MAFF reads the winning configuration back from the trace "
             "(best_feasible().configs); capture_configs=False would "
             "silently return empty configs")
-    # start from the coupled base configuration
-    for node in wf:
-        node.config = coupled_config(MEM_MAX_MB)
+    if start_configs is not None:
+        wf.apply_configs(start_configs)
+    else:
+        # start from the coupled base configuration
+        for node in wf:
+            node.config = coupled_config(MEM_MAX_MB)
     sample = env.execute(wf, slo=slo, note="maff:base")
+    if not sample.feasible and start_configs is not None and fallback_to_base:
+        # transferred start infeasible here — retry from the base
+        for node in wf:
+            node.config = coupled_config(MEM_MAX_MB)
+        sample = env.execute(wf, slo=slo, note="maff:base")
     if not sample.feasible:
         return None
     prev_cost = sample.cost

@@ -163,6 +163,26 @@ class CampaignReport:
                     1.0 - t / worst if worst > 0 else 0.0)
         return per
 
+    def totals(self) -> Dict[str, float]:
+        """Portfolio-wide aggregates across every (task, searcher) row —
+        the probe-budget / attainment axes the adaptive scheduler is
+        compared against."""
+        rows = self.results
+        att = [r.replay.slo_attainment for r in rows if r.replay is not None]
+        cost = [r.replay.total_cost for r in rows if r.replay is not None]
+        return {
+            "n_results": len(rows),
+            "total_samples": sum(r.search.n_samples for r in rows),
+            "total_search_time_s": sum(r.search.search_time for r in rows),
+            "total_search_cost": sum(r.search.search_cost for r in rows),
+            "feasible_rate": (sum(r.search.feasible for r in rows)
+                              / len(rows)) if rows else float("nan"),
+            "mean_slo_attainment": (sum(att) / len(att)) if att
+            else float("nan"),
+            "mean_replay_cost": (sum(cost) / len(cost)) if cost
+            else float("nan"),
+        }
+
     def to_rows(self) -> List[Dict[str, object]]:
         return [r.row() for r in self.results]
 
@@ -228,6 +248,14 @@ class Campaign:
                               **self.spec.searcher_kwargs.get(name, {}))
                 for name in self.spec.searchers]
 
+    def arrival_seeds(self, n_tasks: int) -> List[int]:
+        """Per-task replay arrival seeds — independent of the workflow
+        seeds but derived from the same master seed, so any scheduler
+        (uniform sweep or adaptive) replaying task ``i`` sees the
+        bit-identical arrival process."""
+        rng = np.random.default_rng(self.spec.seed + 1)
+        return [int(s) for s in rng.integers(0, 2**31 - 1, size=n_tasks)]
+
     # -- replay --------------------------------------------------------
     def replay(self, task: CampaignTask, result: SearchResult,
                arrival_seed: int) -> ReplayMetrics:
@@ -258,10 +286,7 @@ class Campaign:
         t0 = time.perf_counter()
         tasks = self.tasks()
         searchers = self.searchers()
-        # arrival seeds are independent of workflow seeds but derived
-        # from the same master seed (shared seeded RNG)
-        arrival_rng = np.random.default_rng(self.spec.seed + 1)
-        arrival_seeds = arrival_rng.integers(0, 2**31 - 1, size=len(tasks))
+        arrival_seeds = self.arrival_seeds(len(tasks))
         results: List[TaskResult] = []
         for task in tasks:
             for searcher in searchers:

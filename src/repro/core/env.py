@@ -271,10 +271,18 @@ class Environment:
         n_cand = len(candidates)
         if n_cand == 0:
             return []
+        name_set = set(names)
         cpu = np.empty((n_cand, len(nodes)))
         mem = np.empty((n_cand, len(nodes)))
         items: List[ConfigItems] = []
         for ci, cand in enumerate(candidates):
+            if set(cand) != name_set:
+                unknown = sorted(set(cand) - name_set)
+                missing = sorted(name_set - set(cand))
+                raise ValueError(
+                    f"candidate {ci} does not match workflow {wf.name!r}: "
+                    f"references unknown function(s) {unknown}, missing "
+                    f"config(s) for {missing}")
             row = []
             for ni, name in enumerate(names):
                 cfg = cand[name]

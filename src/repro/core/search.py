@@ -17,8 +17,18 @@ result shapes. This module puts them behind one interface:
 
 Adding a new searcher: implement ``search`` (measure candidates
 through the :class:`repro.core.env.Environment` you are given so the
-trace bookkeeping stays comparable), set a ``name``, and register the
-class in :data:`SEARCHERS`.
+trace bookkeeping stays comparable) and ``resume``, set a ``name``,
+and register the class in :data:`SEARCHERS`.
+
+Resumable budgets (the adaptive-campaign layer): every ``search``
+attaches a :class:`ResumeState` to its result, and
+``resume(state, extra_budget)`` re-enters the search with up to
+``extra_budget`` additional trace samples, returning a *cumulative*
+:class:`SearchResult` (same environment, same trace, updated best).
+``resume(state, 0)`` is a guaranteed no-op. Resumption mutates the
+state's environment/workflow in place, so resumable cells should be
+driven through an environment *factory* — a shared ``Environment``
+instance would have its trace reset by the next ``search`` call.
 
 Each concrete searcher takes an *environment factory* — a zero-arg
 callable returning a fresh :class:`Environment` — so one searcher
@@ -40,9 +50,12 @@ from typing import (Callable, Dict, Optional, Protocol, Type, Union,
 
 from repro.core.baselines.bo import BayesianOptimizer
 from repro.core.baselines.maff import maff_search
+from repro.core.cost import workflow_cost
+from repro.core.critical_path import find_critical_path
 from repro.core.dag import Workflow
 from repro.core.env import Environment, Sample, SearchTrace
-from repro.core.priority import FUNC_TRIAL, INITIAL_STEP, MAX_TRAIL
+from repro.core.priority import (FUNC_TRIAL, INITIAL_STEP, MAX_TRAIL,
+                                 priority_configuration)
 from repro.core.resources import BASE_CONFIG, ResourceConfig
 from repro.core.scheduler import GraphCentricScheduler
 
@@ -65,6 +78,7 @@ class SearchResult:
     trace: SearchTrace
     best: Optional[Sample] = None        # cheapest feasible trace sample
     note: str = ""                       # e.g. infeasibility diagnostics
+    state: Optional["ResumeState"] = None  # continuation handle (resume)
 
     def summary(self) -> Dict[str, object]:
         """Flat row for benchmark JSON emission."""
@@ -77,6 +91,26 @@ class SearchResult:
         }
 
 
+@dataclasses.dataclass
+class ResumeState:
+    """Continuation handle for a resumable search.
+
+    Holds everything ``Searcher.resume`` needs to keep sampling where
+    the previous ``search``/``resume`` call stopped: the environment
+    (whose trace keeps accumulating), the searched workflow with its
+    current configs/runtimes, and the last cumulative result.
+    ``payload`` carries searcher-specific machinery (e.g. the live
+    :class:`BayesianOptimizer` with its GP history).
+    """
+
+    searcher: str
+    env: Environment
+    wf: Workflow
+    slo: float
+    result: SearchResult
+    payload: object = None
+
+
 @runtime_checkable
 class Searcher(Protocol):
     """Anything that can configure a workflow against an SLO."""
@@ -85,6 +119,12 @@ class Searcher(Protocol):
 
     def search(self, wf: Workflow, slo: float) -> SearchResult:
         """Find a per-function configuration for ``wf`` under ``slo``."""
+        ...
+
+    def resume(self, state: ResumeState, extra_budget: int) -> SearchResult:
+        """Continue a previous search with up to ``extra_budget`` more
+        trace samples; ``extra_budget <= 0`` returns the state's result
+        unchanged (no sampling)."""
         ...
 
 
@@ -117,6 +157,12 @@ class _EnvSearcher:
             wall_time_s=wall, trace=env.trace,
             best=env.trace.best_feasible(), note=note)
 
+    def _attach(self, res: SearchResult, env: Environment, wf: Workflow,
+                slo: float, payload: object = None) -> SearchResult:
+        res.state = ResumeState(searcher=self.name, env=env, wf=wf, slo=slo,
+                                result=res, payload=payload)
+        return res
+
 
 def _base_configs(wf: Workflow) -> Dict[str, ResourceConfig]:
     """Safe over-provisioned fallback when a search finds nothing."""
@@ -146,12 +192,43 @@ class AARCSearcher(_EnvSearcher):
                 initial_step=self.initial_step,
                 batch_size=self.batch_size).schedule(wf, slo)
         except ValueError as exc:       # SLO infeasible even at base config
-            return self._result(env, wf, slo, _base_configs(wf),
-                                math.inf, math.inf, False,
-                                time.perf_counter() - t0, note=str(exc))
-        return self._result(env, wf, slo, res.configs, res.e2e_runtime,
-                            res.cost, res.e2e_runtime <= slo + 1e-9,
-                            time.perf_counter() - t0)
+            return self._attach(
+                self._result(env, wf, slo, _base_configs(wf),
+                             math.inf, math.inf, False,
+                             time.perf_counter() - t0, note=str(exc)),
+                env, wf, slo)
+        return self._attach(
+            self._result(env, wf, slo, res.configs, res.e2e_runtime,
+                         res.cost, res.e2e_runtime <= slo + 1e-9,
+                         time.perf_counter() - t0),
+            env, wf, slo)
+
+    def resume(self, state: ResumeState, extra_budget: int) -> SearchResult:
+        """Run another Algorithm-2 pass over the *current* critical path
+        (recomputed from the measured runtimes, which may have shifted
+        under the deallocations already accepted), spending at most
+        ``extra_budget`` samples. Deallocation is monotone-cost: the
+        resumed configuration is never worse than the state's."""
+        if extra_budget <= 0:
+            return state.result
+        prior = state.result
+        if not prior.feasible and not math.isfinite(prior.e2e_runtime):
+            # the SLO is unreachable even at the over-provisioned base
+            # config — extra budget cannot help a deterministic backend
+            return prior
+        env, wf, slo = state.env, state.wf, state.slo
+        t0 = time.perf_counter()
+        path = find_critical_path(wf)
+        priority_configuration(
+            wf, path, slo, env, global_slo=slo, max_trail=extra_budget,
+            func_trial=self.func_trial, initial_step=self.initial_step,
+            batch_size=self.batch_size)
+        e2e = wf.end_to_end_latency()
+        cost = workflow_cost(env.pricing, wf)
+        wall = prior.wall_time_s + (time.perf_counter() - t0)
+        res = self._result(env, wf, slo, wf.configs(), e2e, cost,
+                           e2e <= slo + 1e-9, wall)
+        return self._attach(res, env, wf, slo)
 
 
 class BOSearcher(_EnvSearcher):
@@ -170,10 +247,15 @@ class BOSearcher(_EnvSearcher):
     def search(self, wf: Workflow, slo: float) -> SearchResult:
         env = self._fresh_env()
         t0 = time.perf_counter()
-        best = BayesianOptimizer(wf, slo, env, seed=self.seed,
-                                 batch_size=self.batch_size,
-                                 **self.bo_kwargs).run(self.n_rounds)
+        opt = BayesianOptimizer(wf, slo, env, seed=self.seed,
+                                batch_size=self.batch_size, **self.bo_kwargs)
+        best = opt.run(self.n_rounds)
         wall = time.perf_counter() - t0
+        return self._attach(self._bo_result(env, wf, slo, best, wall),
+                            env, wf, slo, payload=opt)
+
+    def _bo_result(self, env: Environment, wf: Workflow, slo: float,
+                   best: Optional[Sample], wall: float) -> SearchResult:
         if best is None:
             return self._result(env, wf, slo, _base_configs(wf), math.inf,
                                 math.inf, False, wall,
@@ -181,32 +263,90 @@ class BOSearcher(_EnvSearcher):
         return self._result(env, wf, slo, best.configs, best.e2e_runtime,
                             best.cost, True, wall)
 
+    def resume(self, state: ResumeState, extra_budget: int) -> SearchResult:
+        """Continue the GP/EI loop for ``extra_budget`` more evaluated
+        samples — the surrogate keeps its whole history, so resumed
+        rounds start from the posterior the budget already paid for."""
+        if extra_budget <= 0:
+            return state.result
+        opt: BayesianOptimizer = state.payload
+        env, wf, slo = state.env, state.wf, state.slo
+        t0 = time.perf_counter()
+        best = opt.run(opt.evaluated + extra_budget)
+        wall = state.result.wall_time_s + (time.perf_counter() - t0)
+        return self._attach(self._bo_result(env, wf, slo, best, wall),
+                            env, wf, slo, payload=opt)
+
 
 class MAFFSearcher(_EnvSearcher):
-    """Coupled memory-descent baseline behind the Searcher protocol."""
+    """Coupled memory-descent baseline behind the Searcher protocol.
+
+    ``start_configs`` warm-starts the descent (see
+    :func:`repro.core.baselines.maff.maff_search`); the default is the
+    legacy coupled base config, bit-for-bit.
+    """
 
     name = "maff"
 
     def __init__(self, env: EnvLike, *, shrink: float = 0.4,
-                 min_rel_step: float = 0.02, max_samples: int = 200):
+                 min_rel_step: float = 0.02, max_samples: int = 200,
+                 start_configs: Optional[Dict[str, ResourceConfig]] = None):
         super().__init__(env)
         self.shrink = shrink
         self.min_rel_step = min_rel_step
         self.max_samples = max_samples
+        self.start_configs = start_configs
 
     def search(self, wf: Workflow, slo: float) -> SearchResult:
         env = self._fresh_env()
         t0 = time.perf_counter()
         best = maff_search(wf, slo, env, shrink=self.shrink,
                            min_rel_step=self.min_rel_step,
-                           max_samples=self.max_samples)
+                           max_samples=self.max_samples,
+                           start_configs=self.start_configs)
         wall = time.perf_counter() - t0
+        return self._attach(self._maff_result(env, wf, slo, best, wall),
+                            env, wf, slo)
+
+    def _maff_result(self, env: Environment, wf: Workflow, slo: float,
+                     best: Optional[Sample], wall: float) -> SearchResult:
         if best is None:
             return self._result(env, wf, slo, _base_configs(wf), math.inf,
                                 math.inf, False, wall,
                                 note="infeasible at coupled base config")
         return self._result(env, wf, slo, best.configs, best.e2e_runtime,
                             best.cost, True, wall)
+
+    def resume(self, state: ResumeState, extra_budget: int) -> SearchResult:
+        """Restart the memory descent from the best configuration found
+        so far with a fresh (full) shrink step and at most
+        ``extra_budget`` samples (one is reserved for the re-anchoring
+        base execution). The cumulative trace keeps the global best, so
+        the resumed result is never worse than the state's."""
+        if extra_budget <= 0 or not state.result.feasible:
+            # infeasible means the coupled base violates the SLO — on a
+            # deterministic backend no amount of budget changes that
+            return state.result
+        prior = state.result
+        env, wf, slo = state.env, state.wf, state.slo
+        t0 = time.perf_counter()
+        # no fallback retry: the re-anchoring base execution is the one
+        # sample reserved out of the grant, so resume spends at most
+        # extra_budget samples even on a stochastic backend
+        best = maff_search(wf, slo, env, shrink=self.shrink,
+                           min_rel_step=self.min_rel_step,
+                           max_samples=max(0, extra_budget - 1),
+                           start_configs=prior.configs,
+                           fallback_to_base=False)
+        wall = prior.wall_time_s + (time.perf_counter() - t0)
+        if best is None:
+            # only possible when stochastic noise made the incumbent
+            # replay infeasible: keep the incumbent, charge the sample
+            res = self._result(env, wf, slo, prior.configs,
+                               prior.e2e_runtime, prior.cost, True, wall)
+            return self._attach(res, env, wf, slo)
+        return self._attach(self._maff_result(env, wf, slo, best, wall),
+                            env, wf, slo)
 
 
 #: registry: campaign specs / CLIs name searchers as strings

@@ -39,6 +39,8 @@ class FunctionSpec:
     mem_penalty: float = 1.0   # runtime multiplier reached at the floor
     io_time: float = 0.5       # seconds, resource-independent
     scale_mem: bool = True     # does input size grow the working set?
+    profile: str = ""          # affinity class this spec was drawn from
+                               # (generator metadata; "" for hand-built)
 
     def amdahl(self, cpu: float) -> float:
         p = self.parallel_frac

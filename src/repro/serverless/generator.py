@@ -58,6 +58,7 @@ class AffinityProfile:
             mem_knee=float(floor * u(*self.knee_ratio)),
             mem_penalty=float(u(*self.mem_penalty)),
             io_time=float(u(*self.io_time)),
+            profile=self.name,
         )
 
 
@@ -213,6 +214,48 @@ def generate(kind: str = "layered", **kw) -> Workflow:
         raise ValueError(
             f"unknown workflow kind {kind!r}; choose from {sorted(GENERATORS)}")
     return builder(**kw)
+
+
+def topology_signature(wf: Workflow, *, with_profiles: bool = False
+                       ) -> Tuple:
+    """Hashable structural fingerprint of a workflow.
+
+    Two workflows share a signature iff they have the same node count
+    and the same edge set *under topological rank* (the deterministic
+    name-tie-broken order), i.e. they are the same DAG shape — every
+    ``chain_workflow(n)`` matches every other regardless of seed, every
+    ``fan_workflow(w)`` matches every other, and so on. That is the
+    matching key the adaptive campaign uses to warm-start a cell from a
+    structurally identical, already-solved workflow.
+
+    ``with_profiles=True`` additionally pins each node's affinity class
+    (generator metadata recorded on :class:`FunctionSpec`), giving the
+    strict signature under which response surfaces are drawn from the
+    same distributions.
+    """
+    order = wf.topological_order()
+    rank = {name: i for i, name in enumerate(order)}
+    edges = tuple(sorted((rank[u], rank[v])
+                         for u in order for v in wf.successors(u)))
+    sig: Tuple = (len(order), edges)
+    if with_profiles:
+        sig += (tuple(getattr(wf.nodes[n].payload, "profile", "")
+                      for n in order),)
+    return sig
+
+
+def transfer_configs(src: Workflow, configs: Dict, dst: Workflow) -> Dict:
+    """Map a per-function configuration across structurally identical
+    workflows by topological rank: function ``i`` of ``src``'s order
+    donates its config to function ``i`` of ``dst``'s order. Raises
+    ``ValueError`` when the two workflows differ structurally (rank
+    alignment would be meaningless)."""
+    if topology_signature(src) != topology_signature(dst):
+        raise ValueError(
+            f"cannot transfer configs: {src.name!r} and {dst.name!r} are "
+            f"not structurally identical")
+    return {d: configs[s].copy()
+            for s, d in zip(src.topological_order(), dst.topological_order())}
 
 
 def suggest_slo(wf: Workflow, *, slack: float = 1.5,

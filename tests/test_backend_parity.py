@@ -1,0 +1,141 @@
+"""`invoke_config_batch` parity with scalar invocation, as properties.
+
+The candidate-vectorized path (C configurations × N functions in one
+numpy expression) is the campaign/adaptive hot path; these tests pin
+that for random configs and topologies it is *exactly* a loop of
+scalar ``invoke`` calls — on the deterministic analytic surface and,
+under a fixed seed, on the stochastic surface too (the noise stream is
+consumed in the same candidate-major order either way).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.env import ExecutionError
+from repro.core.resources import ResourceConfig
+from repro.serverless.generator import (chain_workflow, fan_workflow,
+                                        layered_workflow)
+from repro.serverless.platform import AnalyticBackend, StochasticBackend
+
+
+def _build(kind, size, wf_seed):
+    if kind == "chain":
+        return chain_workflow(max(1, size), seed=wf_seed)
+    if kind == "fan":
+        return fan_workflow(max(1, size - 2), seed=wf_seed)
+    return layered_workflow(max(2, size), n_layers=3, seed=wf_seed)
+
+
+def _candidate_arrays(nodes, n_cand, rng, mem_lo, mem_hi):
+    cpu = rng.uniform(0.5, 10.0, size=(n_cand, len(nodes)))
+    mem = rng.uniform(mem_lo, mem_hi, size=(n_cand, len(nodes)))
+    return cpu, mem
+
+
+def _scalar_loop(backend, nodes, cpu, mem):
+    """Candidate-major loop of scalar ``invoke`` calls; OOM-killed
+    invocations report the clamped thrash runtime, like the batch."""
+    n_cand = cpu.shape[0]
+    runtimes = np.empty_like(cpu)
+    failed = np.zeros(cpu.shape, dtype=bool)
+    saved = [n.config for n in nodes]
+    try:
+        for ci in range(n_cand):
+            for ni, node in enumerate(nodes):
+                # assign raw values directly — the batch path consumes
+                # unquantized arrays, so the constructor's lattice
+                # snapping must not kick in here
+                node.config = ResourceConfig()
+                node.config.cpu = float(cpu[ci, ni])
+                node.config.mem = float(mem[ci, ni])
+                try:
+                    runtimes[ci, ni] = backend.invoke(node)
+                except ExecutionError:
+                    runtimes[ci, ni] = backend.invoke_clamped(node)
+                    failed[ci, ni] = True
+    finally:
+        for node, cfg in zip(nodes, saved):
+            node.config = cfg
+    return runtimes, failed
+
+
+@given(st.sampled_from(["chain", "fan", "layered"]),
+       st.integers(3, 10), st.integers(0, 10_000),
+       st.integers(1, 12), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_analytic_config_batch_matches_scalar_invoke(kind, size, wf_seed,
+                                                     n_cand, cfg_seed):
+    """Analytic surface: batch == scalar loop, including OOM failures
+    (batch reports the clamped thrash runtime scalar callers get from
+    ``invoke_clamped``)."""
+    wf = _build(kind, size, wf_seed)
+    nodes = list(wf.nodes.values())
+    rng = np.random.default_rng(cfg_seed)
+    # range reaches below every profile's working-set floor, so OOM
+    # rows genuinely occur across examples
+    cpu, mem = _candidate_arrays(nodes, n_cand, rng, 64.0, 10240.0)
+    backend = AnalyticBackend()
+    got_rt, got_failed = backend.invoke_config_batch(nodes, cpu, mem)
+    want_rt, want_failed = _scalar_loop(AnalyticBackend(), nodes, cpu, mem)
+    assert np.array_equal(got_failed, want_failed)
+    assert np.array_equal(got_rt, want_rt)
+
+
+@given(st.sampled_from(["chain", "fan", "layered"]),
+       st.integers(3, 8), st.integers(0, 10_000),
+       st.integers(1, 8), st.integers(0, 10_000),
+       st.floats(0.005, 0.1))
+@settings(max_examples=25, deadline=None)
+def test_stochastic_config_batch_matches_scalar_invoke(kind, size, wf_seed,
+                                                       n_cand, cfg_seed,
+                                                       sigma):
+    """Stochastic surface under a fixed seed: the batched evaluation
+    draws its (C, N) noise matrix in the same candidate-major order the
+    scalar loop consumes one draw at a time, so results are identical.
+    Configs stay above every working-set floor — a scalar OOM raises
+    before its noise draw and would legitimately shift the stream."""
+    wf = _build(kind, size, wf_seed)
+    nodes = list(wf.nodes.values())
+    rng = np.random.default_rng(cfg_seed)
+    cpu, mem = _candidate_arrays(nodes, n_cand, rng, 6144.0, 10240.0)
+    got_rt, got_failed = StochasticBackend(
+        noise_sigma=sigma, seed=99).invoke_config_batch(nodes, cpu, mem)
+    want_rt, want_failed = _scalar_loop(
+        StochasticBackend(noise_sigma=sigma, seed=99), nodes, cpu, mem)
+    assert not got_failed.any() and not want_failed.any()
+    assert np.array_equal(got_rt, want_rt)
+
+
+def test_stochastic_batch_charges_failures_deterministically():
+    """Failing invocations are charged the deterministic clamped thrash
+    time (noise applies to successful rows only)."""
+    wf = chain_workflow(4, seed=3)
+    nodes = list(wf.nodes.values())
+    floors = np.array([n.payload.mem_floor for n in nodes])
+    cpu = np.full((2, len(nodes)), 2.0)
+    mem = np.tile(floors * 0.5, (2, 1))          # all OOM
+    backend = StochasticBackend(noise_sigma=0.05, seed=1)
+    runtimes, failed = backend.invoke_config_batch(nodes, cpu, mem)
+    assert failed.all()
+    clamped = np.empty(len(nodes))
+    ref = AnalyticBackend()
+    saved = [n.config for n in nodes]
+    try:
+        for ni, node in enumerate(nodes):
+            node.config = ResourceConfig()
+            node.config.cpu, node.config.mem = 2.0, float(mem[0, ni])
+            clamped[ni] = ref.invoke_clamped(node)
+    finally:
+        for node, cfg in zip(nodes, saved):
+            node.config = cfg
+    assert np.allclose(runtimes, np.tile(clamped, (2, 1)))
+
+
+def test_config_batch_leaves_node_configs_untouched():
+    wf = fan_workflow(3, seed=0)
+    nodes = list(wf.nodes.values())
+    before = [(n.config.cpu, n.config.mem) for n in nodes]
+    cpu = np.full((3, len(nodes)), 1.5)
+    mem = np.full((3, len(nodes)), 4096.0)
+    AnalyticBackend().invoke_config_batch(nodes, cpu, mem)
+    assert [(n.config.cpu, n.config.mem) for n in nodes] == before

@@ -66,7 +66,20 @@ def test_duck_typed_searcher_satisfies_protocol():
         def search(self, wf, slo):
             raise NotImplementedError
 
+        def resume(self, state, extra_budget):
+            raise NotImplementedError
+
     assert isinstance(Constant(), Searcher)
+
+
+def test_search_without_resume_no_longer_satisfies_protocol():
+    class Legacy:
+        name = "legacy"
+
+        def search(self, wf, slo):
+            raise NotImplementedError
+
+    assert not isinstance(Legacy(), Searcher)
 
 
 @pytest.mark.parametrize("method", ["aarc", "bo", "maff"])
@@ -285,3 +298,157 @@ def test_environment_reuses_engine():
     engine = env.engine
     env.execute(wf, slo=120.0)
     assert env.engine is engine
+
+
+# -- candidate validation (clear errors, not shape errors) --------------
+
+def test_execute_candidates_rejects_unknown_function_names():
+    """A candidate referencing functions absent from the workflow must
+    fail with a diagnostic ValueError, not an opaque KeyError/shape
+    error deep in the vectorized path."""
+    wf = layered_workflow(6, n_layers=2, seed=1)
+    good = {n.name: ResourceConfig(cpu=2.0, mem=2048.0) for n in wf}
+    env = make_env()
+
+    renamed = dict(good)
+    renamed["not-a-function"] = renamed.pop(next(iter(good)))
+    with pytest.raises(ValueError, match="unknown function.*not-a-function"):
+        env.execute_candidates(wf, [good, renamed], slo=100.0)
+
+    missing = dict(good)
+    dropped = sorted(good)[0]
+    del missing[dropped]
+    with pytest.raises(ValueError, match=f"missing config.*{dropped}"):
+        env.execute_candidates(wf, [missing], slo=100.0)
+    # nothing was recorded for the failed batch
+    assert env.trace.n_samples == 0
+
+
+# -- resumable searches (Searcher.resume) -------------------------------
+
+RESUME_KWARGS = {"aarc": {"max_trail": 8},
+                 "bo": {"n_rounds": 10, "seed": 0},
+                 "maff": {"max_samples": 10}}
+
+
+@pytest.mark.parametrize("method", sorted(RESUME_KWARGS))
+def test_resume_zero_budget_is_noop(method):
+    wf = layered_workflow(10, n_layers=3, seed=4)
+    slo = suggest_slo(wf)
+    searcher = make_searcher(method, make_env, **RESUME_KWARGS[method])
+    res = searcher.search(wf.copy(), slo)
+    assert res.state is not None
+    again = searcher.resume(res.state, 0)
+    assert again is res
+    assert again.n_samples == res.n_samples == res.trace.n_samples
+
+
+@pytest.mark.parametrize("method", sorted(RESUME_KWARGS))
+def test_resume_spends_at_most_the_extra_budget(method):
+    wf = layered_workflow(10, n_layers=3, seed=4)
+    slo = suggest_slo(wf)
+    searcher = make_searcher(method, make_env, **RESUME_KWARGS[method])
+    res = searcher.search(wf.copy(), slo)
+    resumed = searcher.resume(res.state, 12)
+    assert resumed.n_samples - res.n_samples <= 12
+    assert resumed.n_samples == resumed.trace.n_samples
+    # the cumulative result is never worse than what it resumed from
+    assert resumed.feasible >= res.feasible
+    assert resumed.cost <= res.cost + 1e-9
+    twice = searcher.resume(resumed.state, 12)
+    assert twice.n_samples - resumed.n_samples <= 12
+    assert twice.cost <= resumed.cost + 1e-9
+
+
+def test_resume_on_infeasible_aarc_declines_the_grant():
+    """An SLO unreachable at the over-provisioned base config cannot be
+    rescued by budget on a deterministic backend — resume must return
+    the same result without sampling."""
+    wf = layered_workflow(8, n_layers=2, seed=0)
+    searcher = make_searcher("aarc", make_env)
+    res = searcher.search(wf.copy(), slo=1e-6)
+    assert not res.feasible
+    resumed = searcher.resume(res.state, 16)
+    assert resumed is res
+
+
+# -- cross-searcher warm starts -----------------------------------------
+
+def test_warm_started_bo_with_empty_trace_is_cold_bo():
+    """warm_start=() / init_points=() must be the cold optimizer
+    bit-for-bit — the PR 2 trace pin extended to the warm-start path."""
+    wf = WORKLOADS["chatbot"]()
+    slo = workload_slo("chatbot")
+    cold = make_searcher("bo", make_env, n_rounds=30, seed=0).search(
+        wf.copy(), slo)
+    warm = make_searcher("bo", make_env, n_rounds=30, seed=0,
+                         warm_start=(), init_points=()).search(wf.copy(), slo)
+    assert _trace_rows(warm.trace) == _trace_rows(cold.trace)
+    assert _trace_rows(warm.trace) == _trace_rows(_legacy_trace("bo",
+                                                                "chatbot"))
+
+
+@pytest.mark.parametrize("batch_size", [1, 4])
+def test_warm_started_batch_bo_with_empty_trace_is_cold_bo(batch_size):
+    wf = layered_workflow(10, n_layers=3, seed=7)
+    slo = suggest_slo(wf)
+    cold = make_searcher("bo", make_env, n_rounds=20, seed=5,
+                         batch_size=batch_size).search(wf.copy(), slo)
+    warm = make_searcher("bo", make_env, n_rounds=20, seed=5,
+                         batch_size=batch_size, warm_start=[],
+                         init_points=[]).search(wf.copy(), slo)
+    assert _trace_rows(warm.trace) == _trace_rows(cold.trace)
+
+
+def test_bo_warm_started_from_aarc_trace_starts_at_aarc_best():
+    """AARC's accepted trials seed the GP for free (no budget) and the
+    transferred incumbent is the first point evaluated, so a handful of
+    rounds already match AARC's configuration cost."""
+    wf = layered_workflow(10, n_layers=3, seed=4)
+    slo = suggest_slo(wf)
+    aarc = make_searcher("aarc", make_env).search(wf.copy(), slo)
+    accepted = [s for s in aarc.trace.samples if s.feasible]
+    warm = make_searcher("bo", make_env, n_rounds=5, seed=0,
+                         warm_start=accepted,
+                         init_points=[aarc.configs]).search(wf.copy(), slo)
+    assert warm.feasible
+    assert warm.n_samples == 5                  # warm data was free
+    assert warm.cost <= aarc.cost + 1e-9
+    first = warm.trace.samples[0]
+    assert first.configs == aarc.configs
+
+
+def test_maff_resume_budget_holds_on_stochastic_backend():
+    """Resume reserves one sample for its re-anchoring base execution
+    and disables the infeasible-start fallback, so even when stochastic
+    noise makes the incumbent replay infeasible the grant is never
+    overdrawn — and the incumbent is kept rather than discarded."""
+    wf = layered_workflow(10, n_layers=3, seed=4)
+    slo = suggest_slo(wf)
+    for noise_seed in range(6):
+        env_factory = lambda: make_env(noise_sigma=0.3, seed=noise_seed)
+        searcher = make_searcher("maff", env_factory, max_samples=10)
+        res = searcher.search(wf.copy(), slo)
+        if not res.feasible:
+            continue
+        resumed = searcher.resume(res.state, 5)
+        assert resumed.n_samples - res.n_samples <= 5
+        assert resumed.feasible
+        assert resumed.cost <= res.cost + 1e-9
+
+
+def test_maff_warm_start_and_infeasible_start_fallback():
+    wf = layered_workflow(10, n_layers=3, seed=4)
+    slo = suggest_slo(wf)
+    aarc = make_searcher("aarc", make_env).search(wf.copy(), slo)
+    warm = make_searcher("maff", make_env, max_samples=10,
+                         start_configs=aarc.configs).search(wf.copy(), slo)
+    assert warm.feasible and warm.cost <= aarc.cost + 1e-9
+
+    # a start violating the SLO falls back to the coupled base instead
+    # of aborting the whole search
+    bad_start = {n.name: ResourceConfig(cpu=0.1, mem=10240.0) for n in wf}
+    fallback = make_searcher("maff", make_env, max_samples=10,
+                             start_configs=bad_start).search(wf.copy(), slo)
+    assert fallback.feasible
+    assert fallback.trace.samples[1].note == "maff:base"
