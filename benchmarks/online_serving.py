@@ -1,0 +1,242 @@
+"""Online-serving control-plane benchmark (``BENCH_online.json``).
+
+Serves the *same* portfolio under the *same* seeded
+:class:`repro.serverless.generator.DriftSchedule` three ways:
+
+  * **static**      — configure once at deploy, never touch it again
+    (the paper's deployment model; ``OnlineSpec.mode="never"``),
+  * **online**      — the :mod:`repro.core.online` control plane:
+    sliding-window drift detection, incremental search grants routed
+    through ``Searcher.resume``, challenger validation on the live
+    arrival seeds, atomic swaps (``mode="drift"``),
+  * **naive**       — full re-search of every cell at every epoch
+    boundary, swapped unconditionally (``mode="every_epoch"``), the
+    probe-budget comparator.
+
+The acceptance bar (checked by ``--smoke`` and pinned in the emitted
+JSON), per the load-shift and input-mix scenarios: **drift-triggered
+reconfiguration recovers >= 80 % of the attainment the static fleet
+loses under drift, while spending <= 50 % of the probe samples of the
+naive per-epoch re-search** — and with an empty drift schedule the
+online run is **bit-identical** to the static replay (shared serving
+loop, silent detector). A cold-start regime-change scenario rides
+along informationally.
+
+Attainment windows: *pre* is the mean static attainment over the
+epochs before the drift event; *post* is the mean over the last
+``POST_EPOCHS`` epochs (after the control plane has had time to
+converge — reconfiguration takes a detection window plus a validation
+pass, it is not instant). ``recovery = (online_post - static_post) /
+(pre - static_post)``.
+
+Every row is deterministic (wall-clock keys stay on stdout), so
+``BENCH_online.json`` is byte-stable across runs of one master seed;
+``--smoke`` gates without writing the artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.core.campaign import PortfolioSpec, ReplaySpec
+from repro.core.engine import ClusterModel, ColdStartModel
+from repro.core.online import OnlineReport, OnlineSpec, run_online
+from repro.serverless.generator import (DriftSchedule, coldstart_schedule,
+                                        input_mix_schedule,
+                                        load_shift_schedule)
+
+from benchmarks.common import emit
+
+#: post-drift evaluation window (last K epochs)
+POST_EPOCHS = 4
+#: the pinned bars
+RECOVERY_BAR = 0.80
+BUDGET_BAR = 0.50
+
+#: load shift: a homogeneous chain portfolio on per-cell quotas sized
+#: so the 3x rate step produces heavy-but-stationary queueing — the
+#: deployed cost-optimal configs bind their SLOs and burst queue delay
+#: breaks them; a re-searched config with headroom absorbs it
+LOAD_SHIFT = OnlineSpec(
+    portfolio=PortfolioSpec(n_workflows=4, size=6, kinds=("chain",),
+                            slo_slacks=(1.6,)),
+    replay=ReplaySpec(n_instances=24, rate=0.1,
+                      cluster=ClusterModel(total_cpu=460.0,
+                                           total_mem_mb=460.0 * 1024.0)),
+    n_epochs=12, drift=load_shift_schedule(2, 3.0), seed=0,
+    total_budget=512)
+
+#: input mix: bigger payloads from epoch 2 on (work and working sets
+#: grow 1.5x) — the deployed configs violate their SLOs outright and
+#: some OOM at the larger working sets; re-searching under the drifted
+#: surface restores attainment
+INPUT_MIX = OnlineSpec(
+    portfolio=PortfolioSpec(n_workflows=3, size=6, slo_slacks=(2.0,)),
+    replay=ReplaySpec(n_instances=24, rate=0.5),
+    n_epochs=10, drift=input_mix_schedule(2, 1.5), seed=0,
+    total_budget=512)
+
+#: cold-start regime change (informational): provisioning slows to 5 s
+#: and keep-alive collapses below the per-function arrival gap, so
+#: every invocation pays the delay; headroom re-search absorbs it
+COLD_START = OnlineSpec(
+    portfolio=PortfolioSpec(n_workflows=3, size=6, kinds=("chain",),
+                            slo_slacks=(1.4,)),
+    replay=ReplaySpec(n_instances=24, rate=0.05,
+                      cold_start=ColdStartModel(delay_s=1.0,
+                                                keep_alive_s=600.0)),
+    n_epochs=10, drift=coldstart_schedule(2, 5.0, keep_alive_s=5.0), seed=0,
+    total_budget=512)
+
+#: no drift: the load-shift serving regime with an empty schedule —
+#: finite cluster and carry in play, so the bit-identical pin covers
+#: the whole resumable-epoch path, not just the degenerate one
+NO_DRIFT = dataclasses.replace(LOAD_SHIFT, drift=DriftSchedule(),
+                               n_epochs=6)
+
+
+def drift_case(case: str, spec: OnlineSpec) -> Dict:
+    """One static/online/naive comparison under a drift scenario."""
+    drift_epoch = min(e.epoch for e in spec.drift.events)
+    pre = range(0, drift_epoch)
+    post = range(spec.n_epochs - POST_EPOCHS, spec.n_epochs)
+
+    t0 = time.perf_counter()
+    online = run_online(spec)
+    static = run_online(dataclasses.replace(spec, mode="never"))
+    naive = run_online(dataclasses.replace(spec, mode="every_epoch"))
+    wall = time.perf_counter() - t0
+
+    pre_att = static.mean_attainment(pre)
+    static_post = static.mean_attainment(post)
+    online_post = online.mean_attainment(post)
+    naive_post = naive.mean_attainment(post)
+    loss = pre_att - static_post
+    recovery = ((online_post - static_post) / loss) if loss > 1e-9 \
+        else float("nan")
+    online_spent = online.budget["spent"]
+    naive_spent = naive.budget["spent"]
+    return {
+        "case": case,
+        "seed": spec.seed,
+        "n_cells": len(online.cells),
+        "n_epochs": spec.n_epochs,
+        "drift_epoch": drift_epoch,
+        "drift": [dataclasses.asdict(e) for e in spec.drift.events],
+        "pre_attainment": pre_att,
+        "static_post": static_post,
+        "online_post": online_post,
+        "naive_post": naive_post,
+        "attainment_loss": loss,
+        "recovery": recovery,
+        "deploy_spent": online.deploy_spent,
+        "online_spent": online_spent,
+        "naive_spent": naive_spent,
+        "probe_fraction": (online_spent / naive_spent) if naive_spent
+        else float("nan"),
+        "grants": len(online.reconfigs),
+        "swaps": sum(r.accepted for r in online.reconfigs),
+        "online_curve": [round(a, 6) for a in online.epoch_attainment()],
+        "static_curve": [round(a, 6) for a in static.epoch_attainment()],
+        "naive_curve": [round(a, 6) for a in naive.epoch_attainment()],
+        "wall_s": wall,
+    }
+
+
+def no_drift_case(case: str, spec: OnlineSpec) -> Dict:
+    """Empty drift schedule: the online run must be bit-identical to
+    the static replay — same serving rows, no reconfigurations."""
+    assert spec.drift.empty
+    t0 = time.perf_counter()
+    online = run_online(spec).to_payload()
+    static = run_online(
+        dataclasses.replace(spec, mode="never")).to_payload()
+    wall = time.perf_counter() - t0
+    identical = (online["epochs"] == static["epochs"]
+                 and online["epoch_attainment"]
+                 == static["epoch_attainment"]
+                 and not online["reconfigs"] and not static["reconfigs"]
+                 and online["budget"]["spent"] == 0)
+    return {
+        "case": case,
+        "seed": spec.seed,
+        "n_cells": len(online["cells"]),
+        "n_epochs": spec.n_epochs,
+        "bit_identical": identical,
+        "mean_attainment": online["mean_attainment"],
+        "wall_s": wall,
+    }
+
+
+def deterministic_payload(row: Dict) -> Dict:
+    """The row minus its wall-clock keys — byte-identical across runs
+    of the same spec (pinned by ``tests/test_online.py``)."""
+    return {k: v for k, v in row.items() if not k.endswith("_s")}
+
+
+def check_acceptance(rows: List[Dict]) -> List[str]:
+    """The pinned bars: recovery >= 80 % at <= 50 % of naive probes for
+    the load-shift and input-mix scenarios; no-drift bit-identical."""
+    errors = []
+    by_case = {r["case"]: r for r in rows}
+    for case in ("load_shift", "input_mix"):
+        row = by_case.get(case)
+        if row is None:
+            errors.append(f"{case}: scenario missing")
+            continue
+        if not row["recovery"] >= RECOVERY_BAR:
+            errors.append(f"{case}: recovery {row['recovery']:.2f} < "
+                          f"{RECOVERY_BAR:.0%} of static-fleet loss")
+        if not row["probe_fraction"] <= BUDGET_BAR:
+            errors.append(
+                f"{case}: online spent {row['probe_fraction']:.1%} of naive "
+                f"re-search probes (> {BUDGET_BAR:.0%})")
+    nd = by_case.get("no_drift")
+    if nd is None:
+        errors.append("no_drift: scenario missing")
+    elif not nd["bit_identical"]:
+        errors.append("no_drift: online run diverged from the static replay")
+    return errors
+
+
+def bench_main(verbose: bool = True) -> None:
+    """`benchmarks.run` harness entry point — raises when the
+    recovery/budget acceptance bar fails so the harness counts it."""
+    if main([]) != 0:
+        raise RuntimeError("online serving acceptance bar failed")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows = [
+        drift_case("load_shift", LOAD_SHIFT),
+        drift_case("input_mix", INPUT_MIX),
+        drift_case("cold_start", COLD_START),
+        no_drift_case("no_drift", NO_DRIFT),
+    ]
+    for row in rows:
+        for k, v in row.items():
+            if k != "case" and not k.endswith("_curve"):
+                print(f"online,{row['case']}_{k},{v},")
+    failures = check_acceptance(rows)
+    if not smoke:
+        # the emitted artifact is the *deterministic* payload (wall
+        # clocks stay on stdout); smoke mode only gates, never writes
+        emit([deterministic_payload(r) for r in rows], "BENCH_online")
+    for f in failures:
+        print(f"FAIL {f}")
+    if not failures:
+        by_case = {r["case"]: r for r in rows}
+        print(f"OK   online_serving           "
+              f"load recovery={by_case['load_shift']['recovery']:.0%} "
+              f"input recovery={by_case['input_mix']['recovery']:.0%} "
+              f"probes={by_case['load_shift']['probe_fraction']:.1%}/"
+              f"{by_case['input_mix']['probe_fraction']:.1%} of naive")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

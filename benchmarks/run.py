@@ -13,8 +13,8 @@ def main() -> int:
     from benchmarks import (adaptive_campaign, campaign_scale,
                             fig2_decoupling, fig3_bo, fig5_search,
                             fig67_convergence, fig8_input_aware,
-                            fleet_throughput, roofline_table,
-                            table2_optimal, tpu_autotune)
+                            fleet_throughput, online_serving,
+                            roofline_table, table2_optimal, tpu_autotune)
     benches = [
         ("fig2_decoupling", fig2_decoupling.main),
         ("fig3_bo", fig3_bo.main),
@@ -27,6 +27,7 @@ def main() -> int:
         ("fleet_throughput", fleet_throughput.main),
         ("campaign_scale", campaign_scale.main),
         ("adaptive_campaign", adaptive_campaign.bench_main),
+        ("online_serving", online_serving.bench_main),
     ]
     failures = 0
     for name, fn in benches:

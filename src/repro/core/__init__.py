@@ -20,9 +20,10 @@ from repro.core.cost import DEFAULT_PRICING, PricingModel, workflow_cost
 from repro.core.critical_path import (SubPath, find_critical_path,
                                       find_detour_subpath, runtime_sum)
 from repro.core.dag import Node, Workflow
-from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
-                               FleetReport, INFINITE_CLUSTER, InstanceResult,
-                               NO_COLD_START, PoissonArrivals, TraceArrivals,
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
+                               FleetEngine, FleetReport, INFINITE_CLUSTER,
+                               InstanceResult, NO_COLD_START,
+                               PoissonArrivals, TraceArrivals,
                                arrival_times, run_fleet)
 from repro.core.env import Environment, ExecutionError, Sample, SearchTrace
 from repro.core.input_aware import InputAwareEngine, InputClass
@@ -31,8 +32,12 @@ from repro.core.resources import (BASE_CONFIG, ResourceConfig, coupled_config,
                                   quantize_cpu, quantize_mem)
 from repro.core.scheduler import GraphCentricScheduler, ScheduleResult, schedule
 from repro.core.search import (AARCSearcher, BOSearcher, MAFFSearcher,
-                               SEARCHERS, SearchResult, Searcher,
-                               make_searcher)
+                               ResumeState, SEARCHERS, SearchResult,
+                               Searcher, make_searcher, retune_state)
+from repro.core.adaptive import (AdaptiveCampaign, AdaptiveReport,
+                                 AdaptiveSpec, GrantScorer, run_adaptive)
+from repro.core.online import (OnlineController, OnlineReport, OnlineSpec,
+                               ReconfigRecord, ServingCell, run_online)
 
 __all__ = [
     "BaseBackend", "CallableBackend", "RuntimeBackend", "as_backend",
@@ -48,9 +53,14 @@ __all__ = [
     "BASE_CONFIG", "ResourceConfig", "coupled_config",
     "quantize_cpu", "quantize_mem",
     "GraphCentricScheduler", "ScheduleResult", "schedule",
-    "AARCSearcher", "BOSearcher", "MAFFSearcher", "SEARCHERS",
-    "SearchResult", "Searcher", "make_searcher",
+    "AARCSearcher", "BOSearcher", "MAFFSearcher", "ResumeState",
+    "SEARCHERS", "SearchResult", "Searcher", "make_searcher",
+    "retune_state",
     "Campaign", "CampaignReport", "CampaignSpec", "CampaignTask",
     "PortfolioSpec", "ReplayMetrics", "ReplaySpec", "TaskResult",
     "run_campaign",
+    "AdaptiveCampaign", "AdaptiveReport", "AdaptiveSpec", "GrantScorer",
+    "run_adaptive",
+    "FleetCarry", "OnlineController", "OnlineReport", "OnlineSpec",
+    "ReconfigRecord", "ServingCell", "run_online",
 ]

@@ -52,7 +52,57 @@ from repro.core.campaign import (Campaign, CampaignSpec, CampaignTask,
 from repro.core.env import Environment
 from repro.core.resources import ResourceConfig
 from repro.core.search import SearchResult, Searcher, make_searcher
-from repro.serverless.generator import topology_signature, transfer_configs
+from repro.serverless.generator import (degree_bucket, topology_signature,
+                                        transfer_configs)
+
+
+@dataclasses.dataclass(frozen=True)
+class GrantScorer:
+    """The UCB grant scorer shared by the offline adaptive campaign and
+    the online control plane (:mod:`repro.core.online`) — ONE
+    implementation of "which cell deserves the next search grant":
+
+      * ``score`` — attainment deficit + realized marginal gain of the
+        cell's last grant + a ``sqrt(log(1+t)/(1+grants))`` exploration
+        bonus,
+      * ``is_candidate`` — deficient cells always qualify; attained
+        cells only while their last grant still paid
+        (``gain_floor``) or, with ``explore_attained``, before their
+        first grant (cost-polish mode),
+      * ``realized_gain`` — the per-sample gain a grant realized:
+        attainment improvement plus ``gain_weight`` × relative fleet
+        cost reduction.
+    """
+
+    ucb_beta: float = 0.5
+    gain_weight: float = 0.5
+    gain_floor: float = 1e-6
+    attainment_tol: float = 1e-9
+    explore_attained: bool = False
+
+    def score(self, *, deficit: float, last_gain: float, grants: int,
+              t: int) -> float:
+        explore = self.ucb_beta * math.sqrt(
+            math.log1p(t) / (1.0 + grants))
+        return max(deficit, 0.0) + last_gain + explore
+
+    def is_candidate(self, *, deficit: float, last_gain: float,
+                     grants: int) -> bool:
+        if deficit > self.attainment_tol:
+            return True
+        if grants == 0:
+            return self.explore_attained
+        return last_gain > self.gain_floor
+
+    def realized_gain(self, *, prev_att: float, new_att: float,
+                      prev_cost: float, new_cost: float, used: int) -> float:
+        if used <= 0:
+            return 0.0
+        att_gain = max(0.0, new_att - prev_att)
+        cost_gain = 0.0
+        if math.isfinite(prev_cost) and prev_cost > 0:
+            cost_gain = max(0.0, (prev_cost - new_cost) / prev_cost)
+        return (att_gain + self.gain_weight * cost_gain) / used
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +140,14 @@ class AdaptiveSpec:
     #: when True, fully-attained cells with no grants yet remain
     #: candidates (cost-polish mode); default saves the budget instead
     explore_attained: bool = False
+
+    def scorer(self) -> GrantScorer:
+        """The shared grant scorer this spec parameterizes."""
+        return GrantScorer(ucb_beta=self.ucb_beta,
+                           gain_weight=self.gain_weight,
+                           gain_floor=self.gain_floor,
+                           attainment_tol=self.attainment_tol,
+                           explore_attained=self.explore_attained)
 
 
 @dataclasses.dataclass
@@ -230,6 +288,7 @@ class AdaptiveCampaign:
     def __init__(self, spec: AdaptiveSpec = AdaptiveSpec(), *,
                  env_factory: Optional[Callable[[], Environment]] = None):
         self.spec = spec
+        self.scorer = spec.scorer()
         self._campaign = Campaign(
             CampaignSpec(portfolio=spec.portfolio, replay=spec.replay,
                          searchers=tuple(spec.searchers),
@@ -265,8 +324,8 @@ class AdaptiveCampaign:
                 warm_src = "aarc-trace"
             elif spec.warm_starts and donor is not None:
                 ipts.append(transfer_configs(donor[0], donor[1],
-                                             task.template))
-                warm_src = f"donor:{donor[2]}"
+                                             task.template, approx=donor[3]))
+                warm_src = f"donor{'~' if donor[3] else ':'}{donor[2]}"
             return make_searcher(name, self.env_factory,
                                  n_rounds=spec.seed_rounds, seed=bo_seed,
                                  warm_start=warm, init_points=ipts,
@@ -279,8 +338,9 @@ class AdaptiveCampaign:
                 start = aarc_res.configs
                 warm_src = "aarc-best"
             elif spec.warm_starts and donor is not None:
-                start = transfer_configs(donor[0], donor[1], task.template)
-                warm_src = f"donor:{donor[2]}"
+                start = transfer_configs(donor[0], donor[1], task.template,
+                                         approx=donor[3])
+                warm_src = f"donor{'~' if donor[3] else ':'}{donor[2]}"
             return make_searcher(name, self.env_factory,
                                  max_samples=spec.seed_samples,
                                  start_configs=start, **user), warm_src
@@ -305,29 +365,22 @@ class AdaptiveCampaign:
             cell.replay = replay
             cell.best_configs = res.configs
         if not first and used > 0:
-            att_gain = max(0.0, cell.attainment - prev_att)
-            cost_gain = 0.0
-            if math.isfinite(prev_cost) and prev_cost > 0:
-                cost_gain = max(0.0, (prev_cost - cell.replay_cost)
-                                / prev_cost)
-            cell.last_gain = (att_gain
-                              + self.spec.gain_weight * cost_gain) / used
+            cell.last_gain = self.scorer.realized_gain(
+                prev_att=prev_att, new_att=cell.attainment,
+                prev_cost=prev_cost, new_cost=cell.replay_cost, used=used)
         cell.history.append(cell.attainment)
 
     def _is_candidate(self, cell: CellState) -> bool:
         if cell.exhausted or cell.result is None or cell.result.state is None:
             return False
-        if 1.0 - cell.attainment > self.spec.attainment_tol:
-            return True
-        if cell.grants == 0:
-            return self.spec.explore_attained
-        return cell.last_gain > self.spec.gain_floor
+        return self.scorer.is_candidate(deficit=1.0 - cell.attainment,
+                                        last_gain=cell.last_gain,
+                                        grants=cell.grants)
 
     def _score(self, cell: CellState, t: int) -> float:
-        deficit = 1.0 - cell.attainment
-        explore = self.spec.ucb_beta * math.sqrt(
-            math.log1p(t) / (1.0 + cell.grants))
-        return deficit + cell.last_gain + explore
+        return self.scorer.score(deficit=1.0 - cell.attainment,
+                                 last_gain=cell.last_gain,
+                                 grants=cell.grants, t=t)
 
     # -- the pipeline --------------------------------------------------
     def run(self, *, progress: Optional[Callable[[str], None]] = None
@@ -342,15 +395,26 @@ class AdaptiveCampaign:
         total = int(spec.total_budget)
         remaining = total
         cells: List[CellState] = []
-        #: structural signature -> (template, configs, task index) of the
-        #: first solved cell; warm-starts structurally identical tasks
+        #: structural signature -> (template, configs, task index,
+        #: approx) of the first solved cell; warm-starts structurally
+        #: identical tasks. ``bucket_donors`` is the degree-sequence
+        #: fallback: layered DAGs rarely collide on the exact edge-set
+        #: signature, but near-twins of one (n_nodes, role-multiset)
+        #: bucket still donate a rank-mapped starting guess.
         donors: Dict[Tuple, Tuple] = {}
+        bucket_donors: Dict[Tuple, Tuple] = {}
 
         # -- seeding pass ---------------------------------------------
         ci = 0
         for task in tasks:
             sig = topology_signature(task.template)
-            donor = donors.get(sig) if spec.warm_starts else None
+            bucket = degree_bucket(task.template)
+            donor = None
+            if spec.warm_starts:
+                donor = donors.get(sig)
+                if donor is None and bucket in bucket_donors:
+                    tpl, cfgs, idx, _ = bucket_donors[bucket]
+                    donor = (tpl, cfgs, idx, True)
             aarc_res: Optional[SearchResult] = None
             for name in spec.searchers:
                 cell = CellState(index=ci, task=task, searcher_name=name,
@@ -374,7 +438,11 @@ class AdaptiveCampaign:
                 if name == "aarc":
                     aarc_res = res
                 if res.feasible and sig not in donors:
-                    donors[sig] = (task.template, res.configs, task.index)
+                    donors[sig] = (task.template, res.configs, task.index,
+                                   False)
+                if res.feasible and bucket not in bucket_donors:
+                    bucket_donors[bucket] = (task.template, res.configs,
+                                             task.index, False)
                 if progress is not None:
                     progress(f"seed {name} {task.kind}#{task.index} "
                              f"spent={res.n_samples} "

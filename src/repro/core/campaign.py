@@ -34,8 +34,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.dag import Workflow
-from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
-                               INFINITE_CLUSTER, NO_COLD_START,
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
+                               FleetEngine, INFINITE_CLUSTER, NO_COLD_START,
                                PoissonArrivals)
 from repro.core.env import Environment
 from repro.core.search import SearchResult, Searcher, make_searcher
@@ -262,17 +262,42 @@ class Campaign:
         """Replay one found configuration through the fleet engine under
         Poisson load; infeasible searches fall back to the searcher's
         reported (safe, over-provisioned) configuration."""
+        return self.replay_configs(task, result.configs, arrival_seed)
+
+    def replay_configs(self, task: CampaignTask,
+                       configs: Dict[str, "ResourceConfig"],
+                       arrival_seed: int, *,
+                       rate: Optional[float] = None,
+                       n_instances: Optional[int] = None,
+                       cluster: Optional[ClusterModel] = None,
+                       cold_start: Optional[ColdStartModel] = None,
+                       env: Optional[Environment] = None,
+                       start: float = 0.0,
+                       carry: Optional["FleetCarry"] = None) -> ReplayMetrics:
+        """Replay an *explicit* per-function configuration — the
+        challenger-evaluation hook: the online control plane validates
+        a candidate reconfiguration against the live arrival seed (and
+        the live load/cold-start conditions, via the keyword overrides
+        and a conditions-tuned ``env``) before atomically swapping it
+        in. ``start``/``carry`` replay from a live fleet state (the
+        backlog and warm pool the challenger would inherit) instead of
+        an empty cluster. Defaults reproduce :meth:`replay` exactly."""
         r = self.spec.replay
-        env = self.env_factory()
+        env = env if env is not None else self.env_factory()
         engine = FleetEngine(env.backend, pricing=env.pricing,
-                             cluster=r.cluster, cold_start=r.cold_start)
+                             cluster=cluster if cluster is not None
+                             else r.cluster,
+                             cold_start=cold_start if cold_start is not None
+                             else r.cold_start)
+        n = n_instances if n_instances is not None else r.n_instances
         instances = []
-        for _ in range(r.n_instances):
+        for _ in range(n):
             wf = task.template.copy()
-            wf.apply_configs(result.configs)
+            wf.apply_configs(configs)
             instances.append(wf)
-        arrivals = PoissonArrivals(r.rate, r.n_instances, seed=arrival_seed)
-        report = engine.run(instances, arrivals.times())
+        arrivals = PoissonArrivals(rate if rate is not None else r.rate,
+                                   n, seed=arrival_seed, start=start)
+        report = engine.run(instances, arrivals.times(), carry=carry)
         return ReplayMetrics(
             slo_attainment=report.slo_attainment(task.slo),
             p50_s=report.p50, p99_s=report.p99,

@@ -18,7 +18,12 @@ instances against a cluster model:
     hold no cluster capacity; only running invocations do),
   * **batching** — all invocations that start at one engine step are
     evaluated through ``backend.invoke_batch`` in a single vectorized
-    call, not per-node Python dispatch.
+    call, not per-node Python dispatch,
+  * **epoch resumption** — a run can start from a :class:`FleetCarry`
+    (warm containers plus still-running invocations from a previous
+    bounded epoch) and emit the carry for the next epoch, so an online
+    control plane serving back-to-back epochs does not restart the
+    fleet cold at every boundary (see :mod:`repro.core.online`).
 
 Failure semantics mirror :meth:`Environment.execute`: a failing
 invocation (OOM) burns its clamped thrash time, the instance is marked
@@ -129,6 +134,53 @@ class ColdStartModel:
 NO_COLD_START = ColdStartModel(delay_s=0.0)
 
 
+@dataclasses.dataclass
+class FleetCarry:
+    """Cross-epoch engine state for resumable epoch runs.
+
+    An online control plane serves bounded time epochs back to back;
+    restarting the engine cold at every boundary would throw away two
+    things a real platform keeps:
+
+      * ``warm`` — the warm-container pool keyed by
+        ``(workflow template, function)``, entries ``[deposit_t,
+        expire_t]`` in absolute simulated time,
+      * ``busy`` — ``(finish_t, cpu, mem)`` capacity reservations. On a
+        carry returned from a ``collect_carry`` run this is the run's
+        *full* invocation log; :meth:`pruned` reduces it to the set
+        still in flight at a boundary (``run`` also ignores entries
+        that finish before its first arrival, so an unpruned carry
+        cannot distort the next run's clock or utilization).
+
+    A run invoked with ``collect_carry=True`` returns its full
+    invocation/warm log on ``FleetReport.carry``; callers prune it at
+    the next epoch's start time via :meth:`pruned` and feed it back
+    through ``FleetEngine.run(..., carry=...)``. The one documented
+    approximation: an epoch drains its own queue without seeing the
+    *next* epoch's arrivals compete for capacity — the reservation list
+    re-enacts the occupancy, not the FIFO interleaving.
+    """
+
+    clock: float = 0.0
+    warm: Dict[Tuple[str, str], List[List[float]]] = \
+        dataclasses.field(default_factory=dict)
+    busy: List[Tuple[float, float, float]] = \
+        dataclasses.field(default_factory=list)
+
+    def pruned(self, t: float) -> "FleetCarry":
+        """The state visible to an epoch starting at ``t``: unexpired
+        warm containers (including ones deposited later than ``t`` by
+        still-draining invocations — they become claimable mid-epoch)
+        and capacity reservations that outlive ``t``."""
+        warm = {}
+        for key, pool in self.warm.items():
+            live = [list(c) for c in pool if c[1] >= t]
+            if live:
+                warm[key] = live
+        return FleetCarry(clock=t, warm=warm,
+                          busy=[(f, c, m) for f, c, m in self.busy if f > t])
+
+
 # --------------------------------------------------------------------------
 # results
 # --------------------------------------------------------------------------
@@ -153,6 +205,8 @@ class FleetReport:
     mem_utilization: float
     #: Σ queue delay keyed by "<workflow template>/<function name>"
     queue_delay_by_function: Dict[str, float]
+    #: end-of-run warm/busy state (only when ``collect_carry=True``)
+    carry: Optional[FleetCarry] = None
 
     @property
     def latencies(self) -> np.ndarray:
@@ -161,10 +215,11 @@ class FleetReport:
     def percentile(self, q: float) -> float:
         """Linear-interpolated percentile that stays inf-safe: dead
         instances (inf latency) make the crossed tail inf, never nan
-        (naive interpolation between finite and inf is inf - inf)."""
+        (naive interpolation between finite and inf is inf - inf).
+        An empty fleet has a well-defined zero-latency tail."""
         lat = np.sort(self.latencies)
         if not lat.size:
-            return float("nan")
+            return 0.0
         rank = q / 100.0 * (lat.size - 1)
         lo = int(math.floor(rank))
         hi = int(math.ceil(rank))
@@ -181,9 +236,10 @@ class FleetReport:
         return self.percentile(99.0)
 
     def slo_attainment(self, slo: float) -> float:
-        """Fraction of instances that finished within ``slo`` seconds."""
+        """Fraction of instances that finished within ``slo`` seconds
+        (vacuously 1.0 for an empty fleet — nothing missed)."""
         if not self.instances:
-            return float("nan")
+            return 1.0
         ok = sum(1 for r in self.instances if not r.failed and r.e2e <= slo)
         return ok / len(self.instances)
 
@@ -208,7 +264,7 @@ class FleetReport:
 # engine internals
 # --------------------------------------------------------------------------
 
-_ARRIVAL, _FINISH = 0, 1
+_ARRIVAL, _FINISH, _RELEASE = 0, 1, 2
 
 
 @dataclasses.dataclass
@@ -239,10 +295,17 @@ class FleetEngine:
 
     # -- public API ----------------------------------------------------
     def run(self, workflows: Sequence[Workflow],
-            arrivals: ArrivalLike) -> FleetReport:
+            arrivals: ArrivalLike, *,
+            carry: Optional[FleetCarry] = None,
+            collect_carry: bool = False) -> FleetReport:
         """Execute one instance per workflow object; ``arrivals[i]`` is
         instance ``i``'s submission time. Node runtimes/failed flags are
-        written onto the given workflows as invocations complete."""
+        written onto the given workflows as invocations complete.
+
+        ``carry`` resumes from a previous epoch's warm-container pool
+        and in-flight capacity reservations (see :class:`FleetCarry`);
+        ``collect_carry=True`` records this run's end state on
+        ``FleetReport.carry`` for the next epoch."""
         times = arrival_times(arrivals)
         if len(times) != len(workflows):
             raise ValueError(
@@ -250,7 +313,17 @@ class FleetEngine:
         for wf in workflows:
             self._check_placeable(wf)
 
-        if (len(workflows) == 1 and not self.cluster.finite
+        if not len(times):
+            # empty fleet: a well-defined empty report (zero cost,
+            # NaN-free percentiles/attainment), carry passed through
+            out = None
+            if collect_carry:
+                out = (carry.pruned(carry.clock) if carry is not None
+                       else FleetCarry())
+            return self._report([], 0.0, 0.0, 0.0, 0.0, {}, carry_out=out)
+
+        if (carry is None and not collect_carry
+                and len(workflows) == 1 and not self.cluster.finite
                 and self.cold_start.delay_s == 0.0):
             # degenerate case (every Environment.execute sample): no
             # contention => runtimes are schedule-independent, so skip
@@ -264,15 +337,30 @@ class FleetEngine:
         ]
 
         seq = itertools.count()
-        events: List[Tuple[float, int, int, int, Optional[str]]] = [
+        events: List[Tuple[float, int, int, int, object]] = [
             (inst.arrival, next(seq), _ARRIVAL, inst.uid, None)
             for inst in instances
         ]
-        heapq.heapify(events)
         pending: collections.deque = collections.deque()
         warm: Dict[tuple, List[List[float]]] = collections.defaultdict(list)
         used_cpu = used_mem = 0.0
-        t0 = float(times.min()) if len(times) else 0.0
+        inv_log: Optional[List[Tuple[float, float, float]]] = \
+            [] if collect_carry else None
+        if carry is not None:
+            t_min = float(times.min())
+            for key, pool in carry.warm.items():
+                warm[key] = [list(c) for c in pool]
+            for finish, cpu, mem in carry.busy:
+                if finish <= t_min:
+                    continue            # released before this run starts
+                # a reservation holds capacity until its finish event
+                used_cpu += cpu
+                used_mem += mem
+                events.append((finish, next(seq), _RELEASE, -1, (cpu, mem)))
+                if inv_log is not None:
+                    inv_log.append((finish, cpu, mem))
+        heapq.heapify(events)
+        t0 = float(events[0][0]) if events else 0.0
         t_last, cpu_area, mem_area = t0, 0.0, 0.0
         per_fn_queue: Dict[str, float] = collections.defaultdict(float)
 
@@ -283,6 +371,11 @@ class FleetEngine:
             t_last = t
             while events and events[0][0] == t:
                 _, _, kind, uid, name = heapq.heappop(events)
+                if kind == _RELEASE:
+                    cpu, mem = name
+                    used_cpu -= cpu
+                    used_mem -= mem
+                    continue
                 inst = instances[uid]
                 if kind == _ARRIVAL:
                     for src in inst.wf.sources():
@@ -310,14 +403,21 @@ class FleetEngine:
                             pending.append((t, uid, succ))
             used_cpu, used_mem = self._start_pending(
                 t, pending, instances, warm, used_cpu, used_mem,
-                events, seq, per_fn_queue)
+                events, seq, per_fn_queue, inv_log)
 
         stranded = {uid for _, uid, _ in pending if not instances[uid].dead}
         if stranded:  # engine invariant: only dead instances leave work behind
             raise RuntimeError(
                 f"scheduler stranded work for instances {sorted(stranded)}")
+        carry_out = None
+        if collect_carry:
+            carry_out = FleetCarry(
+                clock=t_last,
+                warm={k: [list(c) for c in pool]
+                      for k, pool in warm.items() if pool},
+                busy=list(inv_log))
         return self._report(instances, t0, t_last, cpu_area, mem_area,
-                            dict(per_fn_queue))
+                            dict(per_fn_queue), carry_out=carry_out)
 
     # -- internals -----------------------------------------------------
     def _run_degenerate(self, wf: Workflow, arrival: float) -> FleetReport:
@@ -367,7 +467,7 @@ class FleetEngine:
         return False
 
     def _start_pending(self, t, pending, instances, warm, used_cpu, used_mem,
-                       events, seq, per_fn_queue):
+                       events, seq, per_fn_queue, inv_log=None):
         """FIFO admission: start every queued invocation that fits, stop
         at the first that doesn't (no overtaking => no starvation). All
         admitted invocations are evaluated in ONE backend batch call.
@@ -429,6 +529,9 @@ class FleetEngine:
                     delay = self.cold_start.delay_s
                 inst.cold_delay += delay
                 inst.cost += self.pricing.function_cost(rt, node.config)
+                if inv_log is not None:
+                    inv_log.append((t + delay + rt, node.config.cpu,
+                                    node.config.mem))
                 heapq.heappush(events,
                                (t + delay + rt, next(seq), _FINISH, uid,
                                 name))
@@ -436,7 +539,7 @@ class FleetEngine:
                 return used_cpu, used_mem
 
     def _report(self, instances, t0, t_end, cpu_area, mem_area,
-                per_fn_queue) -> FleetReport:
+                per_fn_queue, carry_out=None) -> FleetReport:
         results = [
             InstanceResult(
                 uid=inst.uid, arrival=inst.arrival,
@@ -456,7 +559,8 @@ class FleetEngine:
         return FleetReport(instances=results, makespan=makespan,
                            cpu_utilization=cpu_util,
                            mem_utilization=mem_util,
-                           queue_delay_by_function=per_fn_queue)
+                           queue_delay_by_function=per_fn_queue,
+                           carry=carry_out)
 
 
 def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],

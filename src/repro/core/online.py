@@ -1,0 +1,600 @@
+"""Online serving control plane: drift-triggered reconfiguration of a
+live fleet.
+
+AARC configures a workflow once, at deploy time; the SLO-compliance
+claim only holds while load and input distribution match what the
+searcher probed. This module closes the loop *while serving*:
+
+  1. **deploy** — every (workflow, SLO) cell of a generated portfolio
+     is configured by one searcher (default AARC) and validated by a
+     fleet replay on the campaign's arrival seeds; that validated
+     attainment is the cell's **baseline** and detection target,
+  2. **serve** — the fleet runs in bounded time epochs through
+     :class:`repro.core.engine.FleetEngine`. Epochs are *resumable*:
+     each run starts from the previous epoch's :class:`FleetCarry`
+     (warm containers + in-flight capacity), so the fleet is never
+     restarted cold at a boundary. Arrival rate, input-class mix and
+     the cold-start regime follow a seeded
+     :class:`repro.serverless.generator.DriftSchedule`,
+  3. **detect** — per cell, a sliding window over the last ``window``
+     served instances estimates live attainment; drift is declared
+     when the window's *upper* confidence bound falls below the
+     baseline minus ``target_margin`` (i.e. the cell is below target
+     with statistical confidence, not just wobbling),
+  4. **reconfigure** — drifted cells are ranked by the shared
+     :class:`repro.core.adaptive.GrantScorer` and receive incremental
+     search grants routed through the existing
+     ``Searcher.resume``/``ResumeState`` machinery:
+     :func:`repro.core.search.retune_state` first re-aims the
+     continuation at the live conditions (drifted ``input_scale``, an
+     *effective* SLO tightened by the queueing/cold-start overhead
+     observed in the window, base-config reset so deallocation can
+     re-descend) at the cost of one re-measure sample, then ``resume``
+     spends the rest of the grant,
+  5. **validate & swap** — the challenger configuration and the
+     incumbent are both replayed on the epoch's *live* arrival seed
+     under the live conditions
+     (:meth:`repro.core.campaign.Campaign.replay_configs`); the
+     challenger is swapped in — atomically, at the epoch boundary —
+     only if it validates strictly better (or equal attainment at
+     lower fleet cost). A reconfiguration can therefore never lower a
+     cell's validated attainment,
+  6. **account** — every grant lands in a deterministic
+     reconfiguration ledger; the sample budget satisfies
+     ``allocated == spent + remaining`` at all times, and
+     :meth:`OnlineReport.to_payload` is byte-stable across runs of one
+     master seed (wall-clock never enters the payload).
+
+``OnlineSpec.mode`` selects the control policy over the *same* serving
+loop, which is what makes the comparisons exact:
+
+  * ``"drift"``       — the control plane above (default),
+  * ``"never"``       — a static, configure-once fleet (the paper's
+    deployment model). With an empty :class:`DriftSchedule`, a
+    ``"drift"`` run is bit-identical to this — the detector stays
+    silent and the serving path is shared code,
+  * ``"every_epoch"`` — naive adaptation: a full re-search of every
+    cell at every epoch boundary, swapped in unconditionally. The
+    probe-budget comparator for the benchmark's ≤50%-of-naive bar.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import GrantScorer
+from repro.core.campaign import (Campaign, CampaignSpec, CampaignTask,
+                                 PortfolioSpec, ReplayMetrics, ReplaySpec)
+from repro.core.engine import (ColdStartModel, FleetCarry, FleetEngine,
+                               PoissonArrivals)
+from repro.core.env import Environment
+from repro.core.resources import ResourceConfig
+from repro.core.search import (SearchResult, Searcher, make_searcher,
+                               retune_state)
+from repro.serverless.generator import DriftSchedule, EpochConditions
+
+#: control policies (see module docstring)
+MODES = ("drift", "never", "every_epoch")
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineSpec:
+    """One online serving run: portfolio + drift + control policy."""
+
+    portfolio: PortfolioSpec = PortfolioSpec(n_workflows=4, size=6,
+                                             slo_slacks=(2.0,))
+    #: per-epoch serving load: ``n_instances`` arrivals at ``rate``
+    #: (scaled by the drift schedule) on ``cluster`` with ``cold_start``
+    replay: ReplaySpec = ReplaySpec()
+    searcher: str = "aarc"
+    searcher_kwargs: Dict[str, Dict] = dataclasses.field(default_factory=dict)
+    seed: int = 0
+    n_epochs: int = 8
+    drift: DriftSchedule = DriftSchedule()
+    mode: str = "drift"
+    # -- drift detection ----------------------------------------------
+    #: sliding-window length (served instances) per cell
+    window: int = 48
+    #: observations required before the detector may fire
+    min_observations: int = 12
+    #: one-sided confidence multiplier on the window's binomial s.e.
+    confidence_z: float = 1.64
+    #: detection target = deploy-validated baseline − this margin
+    target_margin: float = 0.05
+    #: epochs a cell sits out after receiving a grant
+    cooldown_epochs: int = 1
+    #: consecutive rejected challengers before a cell stops receiving
+    #: grants (re-armed when the drift schedule enters a new regime)
+    max_failed_grants: int = 3
+    # -- grant routing ------------------------------------------------
+    #: hard cap on online probe samples across the whole run
+    total_budget: int = 256
+    #: samples per reconfiguration grant (incl. the retune re-measure)
+    grant_budget: int = 16
+    #: drifted cells granted per epoch (score-ordered)
+    grants_per_epoch: int = 4
+    #: shared UCB scorer (one implementation with core.adaptive)
+    scorer: GrantScorer = GrantScorer()
+    #: validation-replay horizon (arrivals); default 2× the serving
+    #: epoch so a challenger that merely *postpones* saturation (drains
+    #: the backlog, then drowns again) is caught before the swap
+    validation_instances: Optional[int] = None
+    #: quantile of observed per-instance queue+cold overhead subtracted
+    #: from the SLO when retuning (headroom for contention)
+    headroom_quantile: float = 0.9
+    #: never tighten the effective SLO below this fraction of the SLO
+    slo_floor_frac: float = 0.3
+    attainment_tol: float = 1e-9
+
+    def __post_init__(self) -> None:
+        if self.mode not in MODES:
+            raise ValueError(
+                f"unknown mode {self.mode!r}; choose from {MODES}")
+        if self.grant_budget < 2:
+            # one sample is consumed by the retune re-measure; a grant
+            # must leave the searcher at least one sample to spend, or
+            # the "challenger" would just be the base-config reset
+            raise ValueError("grant_budget must be >= 2 (retune + search)")
+
+
+@dataclasses.dataclass
+class ReconfigRecord:
+    """One grant in the reconfiguration ledger."""
+
+    epoch: int
+    cell: int
+    granted: int
+    spent: int
+    accepted: bool
+    validated_before: float      # incumbent attainment on the live seed
+    validated_after: float       # what the swap (or rejection) kept
+    cost_before: float
+    cost_after: float
+    effective_slo: float
+    note: str = ""
+
+    def row(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ServingCell:
+    """One (workflow, SLO) cell of the live fleet."""
+
+    index: int
+    task: CampaignTask
+    arrival_seed: int                        # deploy-validation seed
+    searcher: Optional[Searcher] = None
+    result: Optional[SearchResult] = None    # live search continuation
+    #: incumbent serving configuration (the atomic-swap target)
+    configs: Dict[str, ResourceConfig] = dataclasses.field(
+        default_factory=dict)
+    baseline: float = 0.0                    # deploy-validated attainment
+    baseline_cost: float = math.inf
+    validated: float = 0.0                   # latest validated attainment
+    validated_cost: float = math.inf
+    window: Deque[bool] = dataclasses.field(
+        default_factory=collections.deque)
+    overheads: Deque[float] = dataclasses.field(
+        default_factory=collections.deque)
+    carry: Optional[FleetCarry] = None
+    clock: float = 0.0
+    deploy_spent: int = 0
+    spent: int = 0                           # online probe samples
+    grants: int = 0
+    last_gain: float = 0.0
+    failed_grants: int = 0                   # consecutive, per regime
+    regime: int = 0
+    cooldown: int = 0
+    note: str = ""
+
+    def live_attainment(self) -> float:
+        if not self.window:
+            return float("nan")
+        return sum(self.window) / len(self.window)
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "cell": self.index, "task": self.task.index,
+            "kind": self.task.kind, "wf_seed": self.task.wf_seed,
+            "n_nodes": self.task.n_nodes, "slo_s": self.task.slo,
+            "baseline": self.baseline, "validated": self.validated,
+            "validated_cost": self.validated_cost,
+            "deploy_spent": self.deploy_spent, "spent": self.spent,
+            "grants": self.grants, "failed_grants": self.failed_grants,
+            "configs": sorted((n, c.cpu, c.mem)
+                              for n, c in self.configs.items()),
+            "note": self.note,
+        }
+
+
+@dataclasses.dataclass
+class OnlineReport:
+    spec: OnlineSpec
+    cells: List[ServingCell]
+    #: per-(cell, epoch) serving rows — identical across control modes
+    #: whenever no swap fired (the static-equivalence pin)
+    epochs: List[Dict[str, object]]
+    reconfigs: List[ReconfigRecord]
+    budget: Dict[str, int]                   # {"total", "spent", "remaining"}
+    deploy_spent: int
+    n_validations: int
+    wall_time_s: float
+
+    def epoch_attainment(self) -> List[float]:
+        """Mean live attainment across cells, per epoch."""
+        per: Dict[int, List[float]] = {}
+        for row in self.epochs:
+            per.setdefault(int(row["epoch"]), []).append(
+                float(row["attainment"]))
+        return [sum(v) / len(v) for _, v in sorted(per.items())]
+
+    def mean_attainment(self, epochs: Optional[range] = None) -> float:
+        att = self.epoch_attainment()
+        if epochs is not None:
+            att = [att[e] for e in epochs if 0 <= e < len(att)]
+        return (sum(att) / len(att)) if att else float("nan")
+
+    def to_payload(self) -> Dict[str, object]:
+        """JSON-ready, *deterministic* snapshot: everything derives from
+        the master seed (wall-clock is excluded), so two runs of one
+        spec emit byte-identical payloads."""
+        s = self.spec
+        return {
+            "spec": {
+                "mode": s.mode, "searcher": s.searcher, "seed": s.seed,
+                "n_epochs": s.n_epochs,
+                "n_workflows": s.portfolio.n_workflows,
+                "kinds": list(s.portfolio.kinds),
+                "size": s.portfolio.size,
+                "slo_slacks": list(s.portfolio.slo_slacks),
+                "n_instances": s.replay.n_instances,
+                "rate": s.replay.rate,
+                "drift": [dataclasses.asdict(e) for e in s.drift.events],
+                "window": s.window, "confidence_z": s.confidence_z,
+                "target_margin": s.target_margin,
+                "total_budget": s.total_budget,
+                "grant_budget": s.grant_budget,
+            },
+            "budget": dict(self.budget),
+            "deploy_spent": self.deploy_spent,
+            "n_validations": self.n_validations,
+            "epoch_attainment": self.epoch_attainment(),
+            "mean_attainment": self.mean_attainment(),
+            "epochs": list(self.epochs),
+            "reconfigs": [r.row() for r in self.reconfigs],
+            "cells": [c.row() for c in self.cells],
+        }
+
+
+class OnlineController:
+    """Runs an :class:`OnlineSpec` end to end.
+
+    Wraps a uniform :class:`repro.core.campaign.Campaign` for the task
+    grid and the validation replays, so every control mode sees
+    bit-identical workflows, SLOs, arrival seeds and drift conditions —
+    the serving loop is shared code and only the policy differs.
+    """
+
+    def __init__(self, spec: OnlineSpec = OnlineSpec(), *,
+                 env_factory: Optional[Callable[[], Environment]] = None):
+        self.spec = spec
+        self.scorer = spec.scorer
+        self._campaign = Campaign(
+            CampaignSpec(portfolio=spec.portfolio, replay=spec.replay,
+                         searchers=(spec.searcher,),
+                         searcher_kwargs=dict(spec.searcher_kwargs),
+                         seed=spec.seed),
+            env_factory=env_factory)
+        self.env_factory = self._campaign.env_factory
+
+    # -- conditions ----------------------------------------------------
+    def _serving_env(self, cond: EpochConditions) -> Environment:
+        """A fresh environment pointed at the epoch's input-class mix
+        (backends without the ``input_scale`` knob serve the baseline
+        mix — the drift still shifts load/cold-start)."""
+        env = self.env_factory()
+        if cond.input_scale != 1.0 and hasattr(env.backend, "input_scale"):
+            env.backend.input_scale = cond.input_scale
+        return env
+
+    def _cold_model(self, cond: EpochConditions) -> ColdStartModel:
+        base = self.spec.replay.cold_start
+        if cond.cold_delay_s is None and cond.cold_keep_alive_s is None:
+            return base
+        return ColdStartModel(
+            delay_s=base.delay_s if cond.cold_delay_s is None
+            else cond.cold_delay_s,
+            keep_alive_s=base.keep_alive_s if cond.cold_keep_alive_s is None
+            else cond.cold_keep_alive_s)
+
+    # -- deploy --------------------------------------------------------
+    def _deploy(self, tasks: List[CampaignTask],
+                arrival_seeds: List[int]) -> List[ServingCell]:
+        spec = self.spec
+        cells: List[ServingCell] = []
+        for task in tasks:
+            searcher = make_searcher(
+                spec.searcher, self.env_factory,
+                **spec.searcher_kwargs.get(spec.searcher, {}))
+            res = searcher.search(task.template.copy(), task.slo)
+            validated = self._campaign.replay(task, res,
+                                              arrival_seeds[task.index])
+            cell = ServingCell(
+                index=task.index, task=task,
+                arrival_seed=arrival_seeds[task.index],
+                searcher=searcher, result=res,
+                configs={n: c.copy() for n, c in res.configs.items()},
+                baseline=validated.slo_attainment,
+                baseline_cost=validated.total_cost,
+                validated=validated.slo_attainment,
+                validated_cost=validated.total_cost,
+                window=collections.deque(maxlen=spec.window),
+                overheads=collections.deque(maxlen=spec.window),
+                deploy_spent=res.n_samples,
+                note="" if res.feasible else f"deploy infeasible: {res.note}")
+            cells.append(cell)
+        return cells
+
+    # -- serving -------------------------------------------------------
+    def _serve_epoch(self, cell: ServingCell, epoch: int,
+                     cond: EpochConditions, seed: int) -> Dict[str, object]:
+        spec = self.spec
+        r = spec.replay
+        rate = r.rate * cond.rate_scale
+        times = PoissonArrivals(rate, r.n_instances, seed=seed,
+                                start=cell.clock).times()
+        env = self._serving_env(cond)
+        engine = FleetEngine(env.backend, pricing=env.pricing,
+                             cluster=r.cluster,
+                             cold_start=self._cold_model(cond))
+        instances = []
+        for _ in range(r.n_instances):
+            wf = cell.task.template.copy()
+            wf.apply_configs(cell.configs)
+            instances.append(wf)
+        report = engine.run(instances, times, carry=cell.carry,
+                            collect_carry=True)
+        # epochs are back-to-back: the next epoch starts at the nominal
+        # end of this arrival window (deterministic, not arrival-max)
+        cell.clock += r.n_instances / rate
+        cell.carry = report.carry.pruned(cell.clock)
+        slo = cell.task.slo
+        cold_total = 0.0
+        for inst in report.instances:        # uid order == arrival order
+            cell.window.append((not inst.failed) and inst.e2e <= slo)
+            overhead = inst.queue_delay + inst.cold_delay
+            cell.overheads.append(overhead if math.isfinite(overhead)
+                                  else slo)
+            cold_total += inst.cold_delay
+        return {
+            "epoch": epoch, "cell": cell.index,
+            "attainment": report.slo_attainment(slo),
+            "p50_s": report.p50, "p99_s": report.p99,
+            "cost": report.total_cost,
+            "queue_delay_s": report.total_queue_delay,
+            "cold_delay_s": cold_total,
+            "rate_scale": cond.rate_scale,
+            "input_scale": cond.input_scale,
+        }
+
+    # -- detection -----------------------------------------------------
+    def _triggered(self, cell: ServingCell) -> bool:
+        """Is the cell below target with statistical confidence? Uses
+        the window's one-sided upper confidence bound: even the
+        optimistic read of live attainment misses the target."""
+        n = len(cell.window)
+        if n < self.spec.min_observations:
+            return False
+        p = sum(cell.window) / n
+        ucb = p + self.spec.confidence_z * math.sqrt(p * (1.0 - p) / n)
+        return ucb < cell.baseline - self.spec.target_margin
+
+    def _effective_slo(self, cell: ServingCell) -> float:
+        """SLO tightened by the observed per-instance queue+cold
+        overhead (deterministic index quantile), floored so severe
+        contention cannot demand the impossible."""
+        slo = cell.task.slo
+        if not cell.overheads:
+            return slo
+        ov = sorted(cell.overheads)
+        q = ov[min(len(ov) - 1,
+                   int(self.spec.headroom_quantile * (len(ov) - 1)))]
+        return max(slo - q, self.spec.slo_floor_frac * slo)
+
+    # -- reconfiguration ----------------------------------------------
+    def _validate(self, cell: ServingCell,
+                  configs: Dict[str, ResourceConfig],
+                  cond: EpochConditions, seed: int) -> ReplayMetrics:
+        """Replay ``configs`` on the live arrival seed under the live
+        conditions, *from the live fleet state* (the cell's carry:
+        backlog + warm pool) — the challenger gate's evidence. Without
+        the carry a backlogged incumbent validates clean and no
+        challenger could ever beat it."""
+        r = self.spec.replay
+        carry = cell.carry.pruned(cell.clock) if cell.carry is not None \
+            else None
+        n = self.spec.validation_instances
+        return self._campaign.replay_configs(
+            cell.task, configs, seed,
+            rate=r.rate * cond.rate_scale,
+            n_instances=n if n is not None else 2 * r.n_instances,
+            cold_start=self._cold_model(cond),
+            env=self._serving_env(cond),
+            start=cell.clock, carry=carry)
+
+    def _reconfigure(self, cell: ServingCell, epoch: int,
+                     cond: EpochConditions, seed: int,
+                     remaining: int) -> Tuple[ReconfigRecord, int]:
+        spec = self.spec
+        grant = min(spec.grant_budget, remaining)
+        state = cell.result.state
+        env = state.env
+        before = env.trace.n_samples
+        slo_eff = self._effective_slo(cell)
+        used = retune_state(state, slo=slo_eff,
+                            input_scale=cond.input_scale)
+        res = cell.searcher.resume(state, grant - used)
+        used = env.trace.n_samples - before
+        cell.result = res
+        challenger = res.configs
+
+        val_ch = self._validate(cell, challenger, cond, seed)
+        val_inc = self._validate(cell, cell.configs, cond, seed)
+        tol = spec.attainment_tol
+        accept = (val_ch.slo_attainment > val_inc.slo_attainment + tol
+                  or (abs(val_ch.slo_attainment - val_inc.slo_attainment)
+                      <= tol
+                      and val_ch.total_cost < val_inc.total_cost - 1e-12))
+        if accept:
+            cell.configs = {n: c.copy() for n, c in challenger.items()}
+            cell.validated = val_ch.slo_attainment
+            cell.validated_cost = val_ch.total_cost
+            cell.last_gain = self.scorer.realized_gain(
+                prev_att=val_inc.slo_attainment,
+                new_att=val_ch.slo_attainment,
+                prev_cost=val_inc.total_cost, new_cost=val_ch.total_cost,
+                used=max(1, used))
+            cell.failed_grants = 0
+            # fresh estimator for the new configuration: mixing
+            # pre-swap observations would re-trigger on stale evidence
+            cell.window.clear()
+            cell.overheads.clear()
+        else:
+            cell.validated = val_inc.slo_attainment
+            cell.validated_cost = val_inc.total_cost
+            cell.last_gain = 0.0
+            cell.failed_grants += 1
+        cell.grants += 1
+        cell.spent += used
+        cell.cooldown = spec.cooldown_epochs
+        kept = val_ch if accept else val_inc
+        return ReconfigRecord(
+            epoch=epoch, cell=cell.index, granted=grant, spent=used,
+            accepted=accept,
+            validated_before=val_inc.slo_attainment,
+            validated_after=kept.slo_attainment,
+            cost_before=val_inc.total_cost, cost_after=kept.total_cost,
+            effective_slo=slo_eff,
+            note="swap" if accept else "challenger rejected"), used
+
+    def _research_cell(self, cell: ServingCell,
+                       cond: EpochConditions) -> int:
+        """``every_epoch`` policy: full re-search under the epoch's
+        conditions, swapped in unconditionally (the naive comparator)."""
+        spec = self.spec
+        searcher = make_searcher(
+            spec.searcher, lambda: self._serving_env(cond),
+            **spec.searcher_kwargs.get(spec.searcher, {}))
+        res = searcher.search(cell.task.template.copy(), cell.task.slo)
+        cell.configs = {n: c.copy() for n, c in res.configs.items()}
+        cell.result = res
+        cell.grants += 1
+        cell.spent += res.n_samples
+        return res.n_samples
+
+    # -- the pipeline --------------------------------------------------
+    def run(self, *, progress: Optional[Callable[[str], None]] = None
+            ) -> OnlineReport:
+        t0 = time.perf_counter()
+        spec = self.spec
+        tasks = self._campaign.tasks()
+        arrival_seeds = self._campaign.arrival_seeds(len(tasks))
+        epoch_seeds = np.random.default_rng(spec.seed + 5).integers(
+            0, 2**31 - 1, size=(max(1, len(tasks)), max(1, spec.n_epochs)))
+        cells = self._deploy(tasks, arrival_seeds)
+        total = int(spec.total_budget)
+        remaining = total
+        epochs: List[Dict[str, object]] = []
+        reconfigs: List[ReconfigRecord] = []
+        n_validations = 0
+
+        for epoch in range(spec.n_epochs):
+            cond = spec.drift.conditions(epoch)
+            regime = spec.drift.regime(epoch)
+            for cell in cells:
+                if regime != cell.regime:
+                    # new disturbance: re-arm the detector and the
+                    # grant gate, drop stale-regime observations
+                    cell.regime = regime
+                    cell.failed_grants = 0
+                    cell.window.clear()
+                    cell.overheads.clear()
+                if spec.mode == "every_epoch" and epoch > 0:
+                    self._research_cell(cell, cond)
+                seed = int(epoch_seeds[cell.task.index][epoch])
+                epochs.append(self._serve_epoch(cell, epoch, cond, seed))
+
+            granted_now = set()
+            if spec.mode == "drift":
+                candidates = []
+                for cell in cells:
+                    # remaining < 2 could not fund retune + one sample
+                    if (cell.cooldown > 0 or remaining < 2
+                            or cell.failed_grants >= spec.max_failed_grants
+                            or cell.result is None
+                            or cell.result.state is None):
+                        continue
+                    if not self._triggered(cell):
+                        continue
+                    deficit = cell.baseline - cell.live_attainment()
+                    if self.scorer.is_candidate(deficit=deficit,
+                                                last_gain=cell.last_gain,
+                                                grants=cell.grants):
+                        candidates.append(cell)
+                candidates.sort(key=lambda c: (-self.scorer.score(
+                    deficit=c.baseline - c.live_attainment(),
+                    last_gain=c.last_gain, grants=c.grants, t=epoch + 1),
+                    c.index))
+                for cell in candidates[:spec.grants_per_epoch]:
+                    if remaining < 2:
+                        break
+                    seed = int(epoch_seeds[cell.task.index][epoch])
+                    record, used = self._reconfigure(cell, epoch, cond,
+                                                     seed, remaining)
+                    remaining -= used
+                    n_validations += 2
+                    granted_now.add(cell.index)
+                    reconfigs.append(record)
+                    if progress is not None:
+                        progress(f"epoch {epoch}: cell {cell.index} "
+                                 f"+{used} accepted={record.accepted} "
+                                 f"att={record.validated_after:.2f} "
+                                 f"remaining={remaining}")
+            for cell in cells:
+                # a grant set this epoch must survive the decrement, or
+                # cooldown_epochs=1 would be a zero-epoch sit-out
+                if cell.index not in granted_now and cell.cooldown > 0:
+                    cell.cooldown -= 1
+            if progress is not None:
+                att = [e for e in epochs if e["epoch"] == epoch]
+                mean = sum(float(e["attainment"]) for e in att) / len(att)
+                progress(f"epoch {epoch}: mean attainment {mean:.3f}")
+
+        spent = sum(c.spent for c in cells)
+        if spec.mode == "drift":
+            budget = {"total": total, "spent": spent,
+                      "remaining": remaining}
+        else:
+            # never: nothing spent; every_epoch: unbounded by design —
+            # the ledger records the realized spend either way
+            budget = {"total": spent, "spent": spent, "remaining": 0}
+        return OnlineReport(
+            spec=spec, cells=cells, epochs=epochs, reconfigs=reconfigs,
+            budget=budget, deploy_spent=sum(c.deploy_spent for c in cells),
+            n_validations=n_validations,
+            wall_time_s=time.perf_counter() - t0)
+
+
+def run_online(spec: OnlineSpec = OnlineSpec(), *,
+               env_factory: Optional[Callable[[], Environment]] = None,
+               progress: Optional[Callable[[str], None]] = None
+               ) -> OnlineReport:
+    """Functional entry point: ``run_online(OnlineSpec(...))``."""
+    return OnlineController(spec, env_factory=env_factory).run(
+        progress=progress)

@@ -349,6 +349,52 @@ class MAFFSearcher(_EnvSearcher):
                             env, wf, slo)
 
 
+def retune_state(state: ResumeState, *, slo: Optional[float] = None,
+                 input_scale: Optional[float] = None,
+                 reset_to_base: bool = True) -> int:
+    """Re-aim a resumable search at shifted serving conditions.
+
+    The online control plane (:mod:`repro.core.online`) observes drift
+    *while serving* and routes an incremental grant through
+    ``Searcher.resume``; before resuming, the continuation has to
+    reflect the world the grant is meant to fix:
+
+      * ``slo`` retargets the continuation — typically an *effective*
+        SLO tightened by the queueing/cold-start overhead observed live,
+        so the re-searched configuration keeps headroom under
+        contention. Searchers that re-derive from ``state.slo`` (AARC,
+        MAFF) pick it up; BO keeps its construction-time objective,
+      * ``input_scale`` repoints the state's backend at the drifted
+        input-class mix (backends without the knob ignore it),
+      * ``reset_to_base`` restores the over-provisioned base config so
+        a deallocation search (AARC) re-descends under the new response
+        surface instead of being wedged at an incumbent that now
+        violates the SLO (deallocation can never *add* resources).
+
+    The workflow is then re-measured once under the new conditions so
+    cached node runtimes — and with them AARC's critical path and the
+    continuation's feasibility bookkeeping — are live rather than
+    pre-drift. That re-measure charges ONE full-workflow sample to the
+    state's trace; the number of samples spent is returned so grant
+    ledgers stay exact (``allocated == spent + remaining``)."""
+    if slo is not None:
+        state.slo = slo
+    if input_scale is not None and hasattr(state.env.backend, "input_scale"):
+        state.env.backend.input_scale = input_scale
+    if reset_to_base:
+        for node in state.wf:
+            node.config = BASE_CONFIG.copy()
+    before = state.env.trace.n_samples
+    sample = state.env.execute(state.wf, state.slo, note="retune")
+    res = state.result
+    res.slo = state.slo
+    res.configs = state.wf.configs()
+    res.e2e_runtime = sample.e2e_runtime
+    res.cost = sample.cost
+    res.feasible = sample.feasible
+    return state.env.trace.n_samples - before
+
+
 #: registry: campaign specs / CLIs name searchers as strings
 SEARCHERS: Dict[str, Type] = {
     AARCSearcher.name: AARCSearcher,

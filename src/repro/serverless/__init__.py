@@ -27,11 +27,17 @@ paper's three workflows: seeded random chains, fan-out/fan-in,
 diamonds, and layered DAGs with per-class affinity profiles.
 """
 from repro.serverless.function import FunctionSpec
-from repro.serverless.generator import (AFFINITY_PROFILES, GENERATORS,
-                                        chain_workflow, diamond_workflow,
-                                        fan_workflow, generate,
-                                        layered_workflow, random_spec,
-                                        suggest_slo)
+from repro.serverless.generator import (AFFINITY_PROFILES, DriftEvent,
+                                        DriftSchedule, EpochConditions,
+                                        GENERATORS, chain_workflow,
+                                        coldstart_schedule, degree_bucket,
+                                        diamond_workflow, fan_workflow,
+                                        generate, input_mix_schedule,
+                                        layered_workflow,
+                                        load_shift_schedule,
+                                        random_drift_schedule, random_spec,
+                                        suggest_slo, topology_signature,
+                                        transfer_configs)
 from repro.serverless.platform import (AnalyticBackend, JaxMeasuredOracle,
                                        SimulatedPlatform, StochasticBackend,
                                        make_env, make_scaled_env)
@@ -43,6 +49,9 @@ __all__ = [
     "AFFINITY_PROFILES", "GENERATORS", "chain_workflow", "diamond_workflow",
     "fan_workflow", "generate", "layered_workflow", "random_spec",
     "suggest_slo",
+    "DriftEvent", "DriftSchedule", "EpochConditions", "coldstart_schedule",
+    "degree_bucket", "input_mix_schedule", "load_shift_schedule",
+    "random_drift_schedule", "topology_signature", "transfer_configs",
     "AnalyticBackend", "JaxMeasuredOracle", "SimulatedPlatform",
     "StochasticBackend", "make_env", "make_scaled_env",
     "WORKLOADS", "chatbot", "ml_pipeline", "video_analysis", "workload_slo",

@@ -216,6 +216,24 @@ def generate(kind: str = "layered", **kw) -> Workflow:
     return builder(**kw)
 
 
+def degree_bucket(wf: Workflow, *, cap: int = 3) -> Tuple:
+    """Coarse structural bucket: node count plus the sorted multiset of
+    per-node ``(in-degree, out-degree)`` pairs, degrees capped at
+    ``cap``.
+
+    Two workflows in one bucket have the same number of functions
+    playing the same *local* roles (sources, sinks, joins, fan-outs)
+    even when their exact edge sets differ — the approximate matching
+    key used to warm-start layered DAGs from near-twin donors when
+    :func:`topology_signature` has no exact hit. Capping collapses
+    "wide join" vs "wider join" into one role, which is what makes
+    random layered DAGs of one (n_nodes, n_layers) family collide."""
+    degs = sorted((min(len(wf.predecessors(n)), cap),
+                   min(len(wf.successors(n)), cap))
+                  for n in wf.nodes)
+    return (len(wf), tuple(degs))
+
+
 def topology_signature(wf: Workflow, *, with_profiles: bool = False
                        ) -> Tuple:
     """Hashable structural fingerprint of a workflow.
@@ -244,18 +262,176 @@ def topology_signature(wf: Workflow, *, with_profiles: bool = False
     return sig
 
 
-def transfer_configs(src: Workflow, configs: Dict, dst: Workflow) -> Dict:
+def transfer_configs(src: Workflow, configs: Dict, dst: Workflow, *,
+                     approx: bool = False) -> Dict:
     """Map a per-function configuration across structurally identical
     workflows by topological rank: function ``i`` of ``src``'s order
     donates its config to function ``i`` of ``dst``'s order. Raises
     ``ValueError`` when the two workflows differ structurally (rank
-    alignment would be meaningless)."""
+    alignment would be meaningless).
+
+    ``approx=True`` widens the match to the :func:`degree_bucket`
+    fallback: workflows that are not edge-identical but have the same
+    node count and local-role multiset (e.g. two random layered DAGs of
+    one family) still donate by topological rank — a warm-start *guess*
+    the receiving searcher refines, not a guarantee of feasibility.
+    Structurally distant workflows (different bucket) still raise."""
     if topology_signature(src) != topology_signature(dst):
-        raise ValueError(
-            f"cannot transfer configs: {src.name!r} and {dst.name!r} are "
-            f"not structurally identical")
+        if not (approx and degree_bucket(src) == degree_bucket(dst)):
+            raise ValueError(
+                f"cannot transfer configs: {src.name!r} and {dst.name!r} "
+                f"are not structurally "
+                f"{'similar' if approx else 'identical'}")
     return {d: configs[s].copy()
             for s, d in zip(src.topological_order(), dst.topological_order())}
+
+
+# --------------------------------------------------------------------------
+# drift schedules (the online control plane's seeded disturbance source)
+# --------------------------------------------------------------------------
+
+#: drift kinds a schedule may inject
+DRIFT_KINDS = ("load", "input", "coldstart")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One step change in serving conditions, effective from ``epoch``
+    onward (until a later event of the same kind supersedes it).
+
+      * ``load``      — arrival-rate multiplier (``magnitude`` × the
+        spec's base Poisson rate),
+      * ``input``     — input-class mix shift: the backend's
+        ``input_scale`` becomes ``magnitude`` (work and working sets
+        grow together, §IV-D),
+      * ``coldstart`` — provisioning-regime change: cold-start delay
+        becomes ``magnitude`` seconds and warm keep-alive becomes
+        ``keep_alive_s`` (when given).
+    """
+
+    epoch: int
+    kind: str
+    magnitude: float
+    keep_alive_s: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.kind not in DRIFT_KINDS:
+            raise ValueError(
+                f"unknown drift kind {self.kind!r}; choose from {DRIFT_KINDS}")
+        if self.epoch < 0:
+            raise ValueError("drift epoch must be >= 0")
+        if self.kind == "coldstart":
+            # a zero provisioning delay is a legal regime
+            if self.magnitude < 0:
+                raise ValueError("drift magnitude must be >= 0")
+        elif self.magnitude <= 0:
+            # a zero rate/input multiplier has no serving semantics and
+            # would only surface as an arrival-process error mid-epoch
+            raise ValueError(f"{self.kind} drift magnitude must be > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpochConditions:
+    """Resolved serving conditions for one epoch."""
+
+    rate_scale: float = 1.0
+    input_scale: float = 1.0
+    cold_delay_s: Optional[float] = None      # None: keep the spec's model
+    cold_keep_alive_s: Optional[float] = None
+
+    @property
+    def baseline(self) -> bool:
+        return (self.rate_scale == 1.0 and self.input_scale == 1.0
+                and self.cold_delay_s is None
+                and self.cold_keep_alive_s is None)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSchedule:
+    """A deterministic disturbance script over serving epochs.
+
+    Events are step functions: the latest event of each kind at or
+    before an epoch defines that epoch's conditions. An empty schedule
+    is the static (no-drift) regime — :func:`conditions` returns the
+    baseline for every epoch, which is what makes the online control
+    plane's no-drift run bit-identical to a static replay."""
+
+    events: Tuple[DriftEvent, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "events", tuple(
+            sorted(self.events, key=lambda e: (e.epoch, e.kind))))
+
+    @property
+    def empty(self) -> bool:
+        return not self.events
+
+    def conditions(self, epoch: int) -> EpochConditions:
+        cond: Dict[str, object] = {}
+        for ev in self.events:                   # sorted by epoch
+            if ev.epoch > epoch:
+                break
+            if ev.kind == "load":
+                cond["rate_scale"] = ev.magnitude
+            elif ev.kind == "input":
+                cond["input_scale"] = ev.magnitude
+            else:
+                cond["cold_delay_s"] = ev.magnitude
+                if ev.keep_alive_s is not None:
+                    cond["cold_keep_alive_s"] = ev.keep_alive_s
+        return EpochConditions(**cond)
+
+    def regime(self, epoch: int) -> int:
+        """How many events have taken effect by ``epoch`` — a counter
+        that steps exactly when conditions change, used by the online
+        controller to re-arm cells after each new disturbance."""
+        return sum(1 for ev in self.events if ev.epoch <= epoch)
+
+
+def load_shift_schedule(epoch: int, factor: float) -> DriftSchedule:
+    """Arrival rate jumps to ``factor``× at ``epoch`` (load drift)."""
+    return DriftSchedule((DriftEvent(epoch, "load", factor),))
+
+
+def input_mix_schedule(epoch: int, scale: float) -> DriftSchedule:
+    """Input-class mix shifts so the mean input scale becomes ``scale``
+    at ``epoch`` (bigger payloads: more work, bigger working sets)."""
+    return DriftSchedule((DriftEvent(epoch, "input", scale),))
+
+
+def coldstart_schedule(epoch: int, delay_s: float,
+                       keep_alive_s: Optional[float] = None) -> DriftSchedule:
+    """Provisioning regime changes at ``epoch`` (e.g. a platform update
+    makes cold starts slower and containers shorter-lived)."""
+    return DriftSchedule((DriftEvent(epoch, "coldstart", delay_s,
+                                     keep_alive_s=keep_alive_s),))
+
+
+def random_drift_schedule(n_epochs: int, *, seed: int = 0,
+                          n_events: int = 2,
+                          kinds: Sequence[str] = ("load", "input"),
+                          load_range: Tuple[float, float] = (1.5, 3.0),
+                          input_range: Tuple[float, float] = (1.2, 1.8),
+                          cold_range: Tuple[float, float] = (0.5, 3.0)
+                          ) -> DriftSchedule:
+    """Seeded random disturbance script: ``n_events`` step changes at
+    distinct epochs in ``[1, n_epochs)``, kinds cycled from ``kinds``,
+    magnitudes drawn uniformly from the per-kind range. The same seed
+    reproduces the same schedule, like every other generator here."""
+    if n_epochs < 2 or n_events < 1:
+        return DriftSchedule()
+    rng = np.random.default_rng(seed)
+    n_events = min(n_events, n_epochs - 1)
+    epochs = sorted(int(e) for e in rng.choice(
+        np.arange(1, n_epochs), size=n_events, replace=False))
+    ranges = {"load": load_range, "input": input_range,
+              "coldstart": cold_range}
+    events = []
+    for i, epoch in enumerate(epochs):
+        kind = kinds[i % len(kinds)]
+        events.append(DriftEvent(epoch, kind,
+                                 float(rng.uniform(*ranges[kind]))))
+    return DriftSchedule(tuple(events))
 
 
 def suggest_slo(wf: Workflow, *, slack: float = 1.5,

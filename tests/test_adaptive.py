@@ -161,6 +161,23 @@ def test_donor_warm_start_fires_for_structural_twins():
     assert all(c.result.feasible for c in report.cells)
 
 
+def test_layered_tasks_find_approx_donors():
+    """The degree-sequence bucket fallback: a layered task with no
+    exact-signature donor still inherits a rank-mapped start from a
+    near-twin (warm source ``donor~<task>``), while exact twins keep
+    the strict ``donor:<task>`` path."""
+    spec = AdaptiveSpec(
+        portfolio=PortfolioSpec(n_workflows=6, size=8, kinds=("layered",),
+                                slo_slacks=(1.5,)),
+        replay=ReplaySpec(n_instances=8, rate=0.5),
+        searchers=("maff",), seed=8, total_budget=800)
+    report = run_adaptive(spec)
+    sources = [c.warm_source for c in report.cells]
+    assert any(s.startswith("donor~") for s in sources), sources
+    # approx donors only ever fall back — never shadow an exact match
+    assert sources[0] == ""                      # nothing solved yet
+
+
 def test_warm_starts_disabled_is_cold():
     report = run_adaptive(_small_spec(total_budget=2000, warm_starts=False))
     assert all(c.warm_source == "" for c in report.cells)

@@ -6,9 +6,9 @@ import pytest
 
 from repro.core.backend import CallableBackend
 from repro.core.dag import Workflow
-from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
-                               INFINITE_CLUSTER, PoissonArrivals,
-                               TraceArrivals, run_fleet)
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
+                               FleetEngine, INFINITE_CLUSTER,
+                               PoissonArrivals, TraceArrivals, run_fleet)
 from repro.core.env import Environment, ExecutionError
 from repro.core.resources import ResourceConfig
 from repro.serverless.platform import SimulatedPlatform
@@ -266,6 +266,121 @@ def test_engine_batches_invocations():
     engine.run(wfs, [0.0] * 8)
     # all 8 instances arrive at t=0: their sources start as ONE batch
     assert calls[0] == 8
+
+
+# -- empty fleets (regression: was NaN percentiles/attainment) ---------
+
+def test_empty_fleet_returns_well_defined_report():
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend, pricing=env.pricing)
+    rep = engine.run([], [])
+    assert rep.instances == []
+    assert rep.makespan == 0.0 and rep.total_cost == 0.0
+    assert rep.p50 == 0.0 and rep.p99 == 0.0
+    assert rep.slo_attainment(1.0) == 1.0          # vacuous: nothing missed
+    assert rep.throughput == 0.0
+    assert not any(math.isnan(v) for v in
+                   (rep.p50, rep.p99, rep.slo_attainment(1.0),
+                    rep.cpu_utilization, rep.mem_utilization))
+    # the run_fleet wrapper takes the same path
+    rep = run_fleet(env, chatbot(), [])
+    assert rep.instances == [] and rep.p99 == 0.0
+
+
+def test_empty_fleet_passes_carry_through():
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend, pricing=env.pricing)
+    carry = FleetCarry(clock=7.0, warm={("w", "f"): [[1.0, 100.0]]},
+                       busy=[(9.0, 2.0, 512.0)])
+    rep = engine.run([], [], carry=carry, collect_carry=True)
+    assert rep.carry is not None
+    assert rep.carry.warm == {("w", "f"): [[1.0, 100.0]]}
+    assert rep.carry.busy == [(9.0, 2.0, 512.0)]
+
+
+# -- resumable epoch runs (FleetCarry) ---------------------------------
+
+def test_carry_keeps_containers_warm_across_epochs():
+    """Epoch 1 resumed from epoch 0's carry reuses the warm pool; the
+    same epoch served cold pays full provisioning again."""
+    cold = ColdStartModel(delay_s=2.0, keep_alive_s=10_000.0)
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend, pricing=env.pricing, cold_start=cold)
+    first = engine.run([chatbot()], [0.0], collect_carry=True)
+    assert first.instances[0].cold_delay == pytest.approx(
+        2.0 * len(chatbot()))
+    resumed = engine.run([chatbot()], [500.0],
+                         carry=first.carry.pruned(500.0))
+    assert resumed.instances[0].cold_delay == 0.0
+    fresh = engine.run([chatbot()], [500.0])
+    assert fresh.instances[0].cold_delay == pytest.approx(
+        2.0 * len(chatbot()))
+
+
+def test_carry_busy_reservations_hold_capacity():
+    """An invocation still running at the epoch boundary occupies its
+    capacity in the next epoch until its finish time."""
+    def oracle(node):
+        return 10.0
+
+    def one():
+        wf = Workflow("w")
+        wf.add_function("f", config=ResourceConfig(cpu=10.0, mem=10240.0))
+        return wf
+
+    engine = FleetEngine(CallableBackend(oracle),
+                         cluster=ClusterModel(total_cpu=10.0,
+                                              total_mem_mb=10240.0))
+    first = engine.run([one()], [0.0], collect_carry=True)
+    assert first.carry.busy == [(10.0, 10.0, 10240.0)]
+    # boundary at t=5: the invocation (finishes at 10) is still running
+    carry = first.carry.pruned(5.0)
+    assert carry.busy == [(10.0, 10.0, 10240.0)]
+    second = engine.run([one()], [5.0], carry=carry)
+    res = second.instances[0]
+    assert res.queue_delay == pytest.approx(5.0)   # waited until t=10
+    assert res.finish == pytest.approx(20.0)
+    # without the carry the same arrival would start immediately
+    third = engine.run([one()], [5.0])
+    assert third.instances[0].queue_delay == 0.0
+
+
+def test_carry_pruning_drops_expired_and_finished_state():
+    carry = FleetCarry(clock=0.0,
+                       warm={("w", "a"): [[0.0, 10.0], [0.0, 100.0]],
+                             ("w", "b"): [[0.0, 5.0]]},
+                       busy=[(8.0, 1.0, 128.0), (50.0, 2.0, 256.0)])
+    pruned = carry.pruned(20.0)
+    assert pruned.clock == 20.0
+    assert pruned.warm == {("w", "a"): [[0.0, 100.0]]}
+    assert pruned.busy == [(50.0, 2.0, 256.0)]
+
+
+def test_carry_chain_is_deterministic():
+    """Serving two epochs via carry twice produces identical reports
+    (the online control plane's epoch loop relies on this)."""
+    cold = ColdStartModel(delay_s=1.0, keep_alive_s=30.0)
+
+    def run_chain():
+        env = SimulatedPlatform().environment()
+        engine = FleetEngine(env.backend, pricing=env.pricing,
+                             cluster=ClusterModel(total_cpu=50.0,
+                                                  total_mem_mb=51200.0),
+                             cold_start=cold)
+        out = []
+        carry = None
+        for epoch in range(3):
+            arrivals = PoissonArrivals(0.1, 8, seed=epoch,
+                                       start=epoch * 80.0)
+            wfs = [chatbot() for _ in range(8)]
+            rep = engine.run(wfs, arrivals.times(), carry=carry,
+                             collect_carry=True)
+            carry = rep.carry.pruned((epoch + 1) * 80.0)
+            out.append([(r.e2e, r.queue_delay, r.cold_delay, r.cost)
+                        for r in rep.instances])
+        return out
+
+    assert run_chain() == run_chain()
 
 
 # -- Environment.execute_function failure recording (env satellite) ----

@@ -154,3 +154,106 @@ def test_copy_preserves_incremental_index():
     assert _edges(cp) == _edges(wf)
     with pytest.raises(ValueError, match="cycle"):
         cp.add_edge("d1_join", "d0_open")
+
+
+# -- approximate topology matching (degree-sequence buckets) -----------
+
+def test_degree_bucket_near_twin_donates():
+    """Two layered DAGs of one (n_nodes, role-multiset) bucket donate
+    configs by topological rank even though their exact edge sets
+    differ — the warm-start fallback for layered portfolios."""
+    from repro.core.resources import ResourceConfig
+    from repro.serverless.generator import degree_bucket, transfer_configs
+    from repro.serverless.generator import topology_signature
+
+    src = layered_workflow(8, n_layers=3, seed=3)
+    dst = layered_workflow(8, n_layers=3, seed=23)
+    assert topology_signature(src) != topology_signature(dst)
+    assert degree_bucket(src) == degree_bucket(dst)
+    configs = {n.name: ResourceConfig(cpu=2.0, mem=2048.0) for n in src}
+    with pytest.raises(ValueError, match="not structurally identical"):
+        transfer_configs(src, configs, dst)
+    moved = transfer_configs(src, configs, dst, approx=True)
+    assert set(moved) == set(dst.nodes)
+    assert all(c.cpu == 2.0 and c.mem == 2048.0 for c in moved.values())
+
+
+def test_degree_bucket_rejects_structurally_distant_workflows():
+    """A chain and a fan of the same node count are different role
+    multisets — approximate matching must NOT cross families."""
+    from repro.core.resources import ResourceConfig
+    from repro.serverless.generator import degree_bucket, transfer_configs
+
+    src = chain_workflow(6, seed=0)
+    dst = fan_workflow(4, seed=1)          # also 6 nodes
+    assert len(src) == len(dst)
+    assert degree_bucket(src) != degree_bucket(dst)
+    configs = {n.name: ResourceConfig(cpu=2.0, mem=2048.0) for n in src}
+    with pytest.raises(ValueError, match="not structurally similar"):
+        transfer_configs(src, configs, dst, approx=True)
+
+
+# -- drift schedules (the online control plane's disturbance source) ----
+
+def test_drift_schedule_steps_conditions_by_epoch():
+    from repro.serverless.generator import DriftEvent, DriftSchedule
+
+    sched = DriftSchedule((DriftEvent(4, "input", 1.5),
+                           DriftEvent(2, "load", 3.0),
+                           DriftEvent(6, "coldstart", 2.0,
+                                      keep_alive_s=30.0)))
+    assert sched.conditions(0).baseline
+    assert sched.conditions(1).baseline
+    c2 = sched.conditions(2)
+    assert c2.rate_scale == 3.0 and c2.input_scale == 1.0
+    c5 = sched.conditions(5)
+    assert c5.rate_scale == 3.0 and c5.input_scale == 1.5
+    assert c5.cold_delay_s is None
+    c6 = sched.conditions(6)
+    assert c6.cold_delay_s == 2.0 and c6.cold_keep_alive_s == 30.0
+    # regime counts events in effect: re-arms the online detector
+    assert [sched.regime(e) for e in range(7)] == [0, 0, 1, 1, 2, 2, 3]
+
+
+def test_drift_schedule_empty_is_baseline_everywhere():
+    from repro.serverless.generator import DriftSchedule
+
+    sched = DriftSchedule()
+    assert sched.empty
+    assert all(sched.conditions(e).baseline for e in range(10))
+    assert all(sched.regime(e) == 0 for e in range(10))
+
+
+def test_drift_event_validation():
+    from repro.serverless.generator import DriftEvent
+
+    with pytest.raises(ValueError, match="unknown drift kind"):
+        DriftEvent(1, "weather", 2.0)
+    with pytest.raises(ValueError, match="epoch"):
+        DriftEvent(-1, "load", 2.0)
+    with pytest.raises(ValueError, match="magnitude"):
+        DriftEvent(1, "load", -2.0)
+    # a zero rate/input multiplier would only crash the serving loop
+    # mid-epoch — rejected at construction instead
+    with pytest.raises(ValueError, match="must be > 0"):
+        DriftEvent(1, "load", 0.0)
+    with pytest.raises(ValueError, match="must be > 0"):
+        DriftEvent(1, "input", 0.0)
+    assert DriftEvent(1, "coldstart", 0.0).magnitude == 0.0  # legal regime
+
+
+def test_random_drift_schedule_is_seeded_and_bounded():
+    from repro.serverless.generator import random_drift_schedule
+
+    a = random_drift_schedule(10, seed=7, n_events=3,
+                              kinds=("load", "input"))
+    b = random_drift_schedule(10, seed=7, n_events=3,
+                              kinds=("load", "input"))
+    c = random_drift_schedule(10, seed=8, n_events=3,
+                              kinds=("load", "input"))
+    assert a == b
+    assert a != c
+    assert len(a.events) == 3
+    assert all(1 <= e.epoch < 10 for e in a.events)
+    assert {e.kind for e in a.events} <= {"load", "input"}
+    assert random_drift_schedule(1, seed=0).empty

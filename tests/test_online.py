@@ -1,0 +1,251 @@
+"""Property tests for the online serving control plane.
+
+Four invariants the control plane must hold for *any* spec:
+
+  * **ledger conservation** — the grant budget satisfies
+    ``allocated == spent + remaining`` across epochs, every grant in
+    the reconfiguration ledger is accounted, and no grant overdraws
+    its per-round budget;
+  * **challenger gating** — a reconfiguration never *lowers* a cell's
+    validated attainment: rejected challengers keep the incumbent,
+    accepted ones validated strictly better (or equal at lower cost);
+  * **determinism** — everything derives from the master seed, so two
+    runs of one spec produce identical payloads
+    (``BENCH_online.json`` content, wall-clock excluded);
+  * **static equivalence** — with an empty
+    :class:`repro.serverless.generator.DriftSchedule`, a ``"drift"``
+    run serves bit-identically to a ``"never"`` (configure-once) run:
+    the detector stays silent and the serving loop is shared code.
+"""
+import dataclasses
+import math
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.campaign import PortfolioSpec, ReplaySpec
+from repro.core.engine import ClusterModel
+from repro.core.online import OnlineSpec, run_online
+from repro.serverless.generator import (DriftSchedule, input_mix_schedule,
+                                        load_shift_schedule)
+
+
+def _drift_spec(seed=0, total_budget=256, **kw):
+    """A small spec whose input-mix drift reliably collapses the static
+    fleet, so detection and grants actually fire."""
+    base = dict(
+        portfolio=PortfolioSpec(n_workflows=2, size=6, slo_slacks=(2.0,)),
+        replay=ReplaySpec(n_instances=16, rate=0.5),
+        n_epochs=6, drift=input_mix_schedule(2, 1.5),
+        seed=seed, total_budget=total_budget)
+    base.update(kw)
+    return OnlineSpec(**base)
+
+
+#: a finite-quota regime where load drift produces queueing (carry and
+#: busy reservations in play, unlike the infinite-cluster spec above)
+_CONTENDED = ReplaySpec(n_instances=16, rate=0.1,
+                        cluster=ClusterModel(total_cpu=460.0,
+                                             total_mem_mb=460.0 * 1024.0))
+
+
+# -- ledger conservation ------------------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(8, 400), st.integers(4, 24))
+@settings(max_examples=6, deadline=None)
+def test_grant_ledger_is_conserved_across_epochs(seed, total_budget,
+                                                 grant_budget):
+    """allocated == spent + remaining for any budget, and the
+    reconfiguration ledger accounts every sample the grants consumed."""
+    report = run_online(_drift_spec(seed=seed, total_budget=total_budget,
+                                    grant_budget=grant_budget))
+    b = report.budget
+    assert b["total"] == b["spent"] + b["remaining"]
+    assert b["total"] == report.spec.total_budget
+    assert b["spent"] == sum(c.spent for c in report.cells)
+    assert b["spent"] == sum(r.spent for r in report.reconfigs)
+    for record in report.reconfigs:
+        assert record.granted <= grant_budget
+        assert record.spent <= record.granted
+
+
+def test_deploy_spend_stays_out_of_the_grant_ledger():
+    report = run_online(_drift_spec())
+    assert report.deploy_spent > 0
+    assert report.budget["spent"] == sum(r.spent for r in report.reconfigs)
+
+
+def test_every_epoch_mode_records_realized_spend():
+    report = run_online(_drift_spec(mode="every_epoch", n_epochs=3))
+    b = report.budget
+    assert b["total"] == b["spent"] + b["remaining"]
+    assert b["remaining"] == 0
+    # one full re-search per cell per post-deploy epoch
+    assert all(c.grants == report.spec.n_epochs - 1 for c in report.cells)
+    assert b["spent"] > 0
+
+
+def test_exhausted_budget_stops_grants():
+    tiny = run_online(_drift_spec(total_budget=8, grant_budget=8))
+    assert tiny.budget["spent"] <= 8
+    assert tiny.budget["total"] == tiny.budget["spent"] + \
+        tiny.budget["remaining"]
+
+
+# -- challenger gating ---------------------------------------------------
+
+@given(st.integers(0, 10_000), st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_no_reconfiguration_lowers_validated_attainment(seed, contended):
+    """The swap gate: every ledger entry keeps validated attainment at
+    least at the incumbent's level; accepted swaps validated strictly
+    better (or equal attainment at strictly lower fleet cost)."""
+    spec = _drift_spec(seed=seed)
+    if contended:
+        spec = dataclasses.replace(spec, replay=_CONTENDED,
+                                   drift=load_shift_schedule(2, 3.0))
+    report = run_online(spec)
+    for r in report.reconfigs:
+        assert r.validated_after >= r.validated_before - 1e-12
+        if r.accepted:
+            assert (r.validated_after > r.validated_before
+                    or r.cost_after < r.cost_before)
+        else:
+            assert r.validated_after == r.validated_before
+            assert r.cost_after == r.cost_before
+
+
+def test_drift_recovery_beats_static_fleet():
+    """The acceptance property at test scale: under input-mix drift the
+    control plane recovers what the static fleet loses."""
+    spec = _drift_spec()
+    online = run_online(spec)
+    static = run_online(dataclasses.replace(spec, mode="never"))
+    oa, sa = online.epoch_attainment(), static.epoch_attainment()
+    # static collapses after the drift epoch; online recovers
+    assert sa[-1] < sa[0] - 0.5
+    assert oa[-1] > sa[-1] + 0.5
+    assert online.budget["spent"] > 0
+    assert any(r.accepted for r in online.reconfigs)
+
+
+# -- determinism ---------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_payload_is_deterministic(seed, contended):
+    """Two runs of one master seed emit identical payloads — including
+    when drift detection and reconfiguration fire."""
+    spec = _drift_spec(seed=seed)
+    if contended:
+        spec = dataclasses.replace(spec, replay=_CONTENDED,
+                                   drift=load_shift_schedule(2, 3.0))
+    first = run_online(spec).to_payload()
+    second = run_online(spec).to_payload()
+    assert first == second
+
+
+def test_bench_row_is_deterministic():
+    """The emitted BENCH_online.json rows (minus wall-clock keys) are
+    identical across runs of the same master seed."""
+    bench = pytest.importorskip(
+        "benchmarks.online_serving",
+        reason="benchmarks namespace needs the repo root on sys.path")
+    # enough epochs that the post-drift window sits past convergence
+    spec = _drift_spec(n_epochs=8)
+    first = bench.deterministic_payload(bench.drift_case("t", spec))
+    second = bench.deterministic_payload(bench.drift_case("t", spec))
+    assert first == second
+    assert not any(k == "wall_s" for k in first)
+    assert first["recovery"] >= 0.8
+    assert first["probe_fraction"] <= 0.5
+
+
+# -- static-fleet equivalence -------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_empty_drift_schedule_is_bit_identical_to_static_replay(seed):
+    """With no drift, the control plane IS the static fleet: same
+    serving rows (bit-identical floats), silent detector, zero spend."""
+    spec = _drift_spec(seed=seed, drift=DriftSchedule(),
+                       replay=_CONTENDED)
+    online = run_online(spec).to_payload()
+    static = run_online(
+        dataclasses.replace(spec, mode="never")).to_payload()
+    assert online["epochs"] == static["epochs"]
+    assert online["epoch_attainment"] == static["epoch_attainment"]
+    assert online["reconfigs"] == [] and static["reconfigs"] == []
+    assert online["budget"]["spent"] == 0
+    # the serving configs never moved off the deploy-time configuration
+    for c_on, c_st in zip(online["cells"], static["cells"]):
+        assert c_on["configs"] == c_st["configs"]
+
+
+# -- report shape --------------------------------------------------------
+
+def test_payload_covers_cells_epochs_and_ledger():
+    spec = _drift_spec()
+    payload = run_online(spec).to_payload()
+    assert len(payload["cells"]) == 2
+    assert len(payload["epochs"]) == 2 * spec.n_epochs
+    assert len(payload["epoch_attainment"]) == spec.n_epochs
+    assert {"total", "spent", "remaining"} == set(payload["budget"])
+    for row in payload["epochs"]:
+        assert {"epoch", "cell", "attainment", "p99_s", "cost",
+                "queue_delay_s", "cold_delay_s", "rate_scale",
+                "input_scale"} <= set(row)
+    for row in payload["reconfigs"]:
+        assert {"epoch", "cell", "granted", "spent", "accepted",
+                "validated_before", "validated_after",
+                "effective_slo"} <= set(row)
+    assert 0.0 <= payload["mean_attainment"] <= 1.0
+    assert math.isfinite(payload["mean_attainment"])
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="unknown mode"):
+        OnlineSpec(mode="sometimes")
+
+
+def test_grant_budget_must_fund_retune_plus_search():
+    with pytest.raises(ValueError, match="grant_budget"):
+        OnlineSpec(grant_budget=1)
+
+
+def test_cooldown_enforces_a_real_sit_out():
+    """A granted cell sits out cooldown_epochs grant phases: with the
+    default cooldown of 1, two grants to one cell are >= 2 epochs
+    apart (regression: the decrement used to land in the same epoch
+    the grant set it, making the cooldown a no-op)."""
+    spec = OnlineSpec(
+        portfolio=PortfolioSpec(n_workflows=3, size=6, slo_slacks=(2.0,)),
+        replay=ReplaySpec(n_instances=16, rate=0.1,
+                          cluster=ClusterModel(total_cpu=200.0,
+                                               total_mem_mb=200.0 * 1024.0)),
+        n_epochs=10, drift=load_shift_schedule(2, 3.0), seed=0,
+        total_budget=256)
+    report = run_online(spec)
+    by_cell = {}
+    for r in report.reconfigs:
+        by_cell.setdefault(r.cell, []).append(r.epoch)
+    assert any(len(v) > 1 for v in by_cell.values()), \
+        "scenario must re-grant at least one cell"
+    for epochs in by_cell.values():
+        assert all(b - a >= spec.cooldown_epochs + 1
+                   for a, b in zip(epochs, epochs[1:])), epochs
+
+
+def test_windows_reset_on_regime_change_and_swap():
+    """After a drift event enters a new regime, stale-regime
+    observations are dropped (the detector re-arms); after an accepted
+    swap the estimator restarts for the new configuration."""
+    report = run_online(_drift_spec())
+    drift_epoch = report.spec.drift.events[0].epoch
+    swaps = [r for r in report.reconfigs if r.accepted]
+    assert swaps, "the drift spec must force at least one swap"
+    # every swap happened at or after the regime change
+    assert all(r.epoch >= drift_epoch for r in swaps)
+    for cell in report.cells:
+        # windows only hold post-swap observations, bounded by maxlen
+        assert len(cell.window) <= report.spec.window
