@@ -2,21 +2,33 @@
 
 Runs 100 concurrent chatbot instances (Poisson arrivals) through the
 discrete-event engine on a capacity-constrained cluster, plus a
-1k-node generated layered DAG as a single instance, and reports
+1k-node generated layered DAG as a single instance, plus the batched
+replay plane (C candidate config-maps × S arrival seeds through
+``FleetEngine.run_many`` vs the looped scalar ``run``), and reports
 
   * simulation wall time + simulated instances per wall-second,
   * invocations evaluated per wall-second (vectorized batch path),
-  * queuing/latency percentiles of the constrained run.
+  * queuing/latency percentiles of the constrained run,
+  * C×S batched-replay speedup over the scalar loop, with every cell
+    verified bit-identical.
 
 Emits ``BENCH_fleet.json`` under artifacts/bench/ so regressions in
-the engine hot path surface in CI diffs.
+the engine hot path surface in CI diffs. ``--smoke`` gates the
+``replay_batch`` acceptance bar (≥5× at bit-identical reports)
+without overwriting the artifact.
 """
 from __future__ import annotations
 
+import sys
 import time
+from typing import List, Optional
 
-from repro.core.engine import ClusterModel, ColdStartModel, PoissonArrivals, run_fleet
-from repro.serverless.generator import layered_workflow, suggest_slo
+import numpy as np
+
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               PoissonArrivals, run_fleet)
+from repro.core.resources import ResourceConfig
+from repro.serverless.generator import (layered_workflow, suggest_slo)
 from repro.serverless.platform import SimulatedPlatform
 from repro.serverless.workloads import chatbot, workload_slo
 
@@ -25,6 +37,12 @@ from benchmarks.common import emit
 N_INSTANCES = 100
 CLUSTER = ClusterModel(total_cpu=60.0, total_mem_mb=61440.0)
 COLD = ColdStartModel(delay_s=0.5, keep_alive_s=300.0)
+
+#: replay_batch grid: C candidates × S arrival seeds × N instances
+REPLAY_C, REPLAY_S, REPLAY_N = 6, 4, 40
+#: the smoke bar: batched replays at least this much faster than the
+#: looped scalar path, bit-identical on every compared cell
+REPLAY_SPEEDUP_BAR = 5.0
 
 
 def _run_fleet_case():
@@ -69,8 +87,107 @@ def _run_big_dag_case():
     }
 
 
-def main(verbose: bool = True):
-    rows = [_run_fleet_case(), _run_big_dag_case()]
+def _reports_identical(a, b) -> bool:
+    return (np.array_equal(a.latencies, b.latencies)
+            and np.array_equal(a.costs, b.costs)
+            and np.array_equal(a.queue_delays, b.queue_delays)
+            and np.array_equal(a.finishes, b.finishes)
+            and np.array_equal(a.failed_mask, b.failed_mask)
+            and a.makespan == b.makespan
+            and a.total_cost == b.total_cost)
+
+
+def _run_replay_batch_case(n_candidates: int = REPLAY_C,
+                           n_seeds: int = REPLAY_S,
+                           n_instances: int = REPLAY_N):
+    """C×S batched replays (``run_many``) vs the looped scalar path —
+    the campaign/adaptive/online validation hot path at benchmark
+    scale. Every cell is verified bit-identical; the row carries the
+    realized speedup."""
+    template = layered_workflow(12, n_layers=4, seed=7)
+    rng = np.random.default_rng(1)
+    candidates = []
+    for _ in range(n_candidates):
+        candidates.append({
+            n.name: ResourceConfig(cpu=float(rng.uniform(1.0, 8.0)),
+                                   mem=float(rng.uniform(2048.0, 8192.0)))
+            for n in template})
+    seeds = [PoissonArrivals(0.5, n_instances, seed=s).times()
+             for s in range(n_seeds)]
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend, pricing=env.pricing)
+
+    t0 = time.perf_counter()
+    batched = engine.run_many(template, candidates, seeds)
+    batch_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    looped = []
+    for configs in candidates:
+        for times in seeds:
+            wfs = []
+            for _ in range(len(times)):
+                wf = template.copy()
+                wf.apply_configs(configs)
+                wfs.append(wf)
+            looped.append(engine.run(wfs, times))
+    loop_wall = time.perf_counter() - t0
+
+    identical = all(_reports_identical(a, b)
+                    for a, b in zip(batched, looped))
+    return {
+        "case": "replay_batch",
+        "n_candidates": n_candidates,
+        "n_seeds": n_seeds,
+        "n_instances": n_instances,
+        "n_fleets": n_candidates * n_seeds,
+        "batch_wall_s": batch_wall,
+        "loop_wall_s": loop_wall,
+        "speedup_x": loop_wall / batch_wall if batch_wall > 0
+        else float("inf"),
+        "bit_identical": identical,
+    }
+
+
+def check_replay_acceptance(row) -> List[str]:
+    """The bar the smoke lane enforces: ≥5× batched replay throughput
+    with ``run_many`` bit-identical to the scalar loop everywhere."""
+    errors = []
+    if not row["bit_identical"]:
+        errors.append("run_many reports diverged from the scalar loop")
+    if row["speedup_x"] < REPLAY_SPEEDUP_BAR:
+        errors.append(f"replay_batch speedup {row['speedup_x']:.1f}x "
+                      f"< {REPLAY_SPEEDUP_BAR:.0f}x")
+    return errors
+
+
+def main(verbose: bool = True, argv: Optional[List[str]] = None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    if smoke:
+        # the gate only needs the replay grid; re-time up to 3 times
+        # before failing so a noisy CI neighbor cannot flake the bar
+        # (bit-identity must hold on every attempt)
+        failures: List[str] = []
+        for _ in range(3):
+            row = _run_replay_batch_case()
+            failures = check_replay_acceptance(row)
+            if verbose:
+                print(f"fleet,replay_batch_speedup_x,{row['speedup_x']},")
+                print(f"fleet,replay_batch_bit_identical,"
+                      f"{row['bit_identical']},")
+            if not failures or not row["bit_identical"]:
+                break
+        for f in failures:
+            print(f"FAIL replay_batch: {f}")
+        if not failures:
+            print(f"OK   fleet_throughput         "
+                  f"replay_batch {row['speedup_x']:.1f}x "
+                  f"(bar {REPLAY_SPEEDUP_BAR:.0f}x, bit-identical)")
+        return 1 if failures else 0
+
+    rows = [_run_fleet_case(), _run_big_dag_case(),
+            _run_replay_batch_case()]
     if verbose:
         for r in rows:
             for k, v in r.items():
@@ -82,4 +199,5 @@ def main(verbose: bool = True):
 
 
 if __name__ == "__main__":
-    main()
+    out = main()
+    sys.exit(out if isinstance(out, int) else 0)

@@ -33,8 +33,34 @@ def smoke_fleet_engine():
     env = SimulatedPlatform().environment()
     s = env.execute(wf, slo=suggest_slo(wf))
     assert s.feasible, "generated workflow infeasible at base config"
+
+    # batched replay plane must match the looped scalar path bit-for-bit
+    from repro.core.engine import FleetEngine
+    from repro.core.resources import ResourceConfig
+
+    template = layered_workflow(8, n_layers=3, seed=1)
+    cands = [{n.name: ResourceConfig(cpu=2.0 + c, mem=3072.0)
+              for n in template} for c in range(3)]
+    seeds = [PoissonArrivals(0.5, 6, seed=k).times() for k in range(2)]
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend, pricing=env.pricing)
+    batched = engine.run_many(template, cands, seeds)
+    k = 0
+    for cand in cands:
+        for times in seeds:
+            wfs = []
+            for _ in range(len(times)):
+                w = template.copy()
+                w.apply_configs(cand)
+                wfs.append(w)
+            ref = engine.run(wfs, times)
+            assert (batched[k].latencies.tolist() == ref.latencies.tolist()
+                    and batched[k].total_cost == ref.total_cost), \
+                "run_many diverged from the looped scalar replay"
+            k += 1
     print(f"OK   fleet_engine             p50={rep.p50:.1f}s "
-          f"p99={rep.p99:.1f}s queue={rep.total_queue_delay:.0f}s")
+          f"p99={rep.p99:.1f}s queue={rep.total_queue_delay:.0f}s "
+          f"run_many={len(batched)} fleets bit-identical")
 
 
 def smoke_campaign():

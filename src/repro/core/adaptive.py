@@ -350,9 +350,16 @@ class AdaptiveCampaign:
     # -- feedback ------------------------------------------------------
     def _settle(self, cell: CellState, used: int = 0) -> None:
         """Replay the cell's latest configuration and apply the monotone
-        accept rule; record realized gain for the UCB score."""
+        accept rule; record realized gain for the UCB score.
+
+        Challenger validation routes through the campaign's batched
+        replay path (:meth:`Campaign.replay_configs_many` →
+        :meth:`FleetEngine.run_many` on the campaign's cached engine),
+        so every settle is one vectorized fleet evaluation instead of
+        a fresh engine + per-event Python replay."""
         res = cell.result
-        replay = self._campaign.replay(cell.task, res, cell.arrival_seed)
+        replay = self._campaign.replay_configs_many(
+            cell.task, [res.configs], cell.arrival_seed)[0]
         att, rcost = replay.slo_attainment, replay.total_cost
         tol = self.spec.attainment_tol
         prev_att, prev_cost = cell.attainment, cell.replay_cost

@@ -63,9 +63,18 @@ class BaseBackend:
     ``invoke_batch`` with a single numpy evaluation. The default
     ``invoke_clamped`` is +inf, so ``has_clamped`` is False until a
     subclass provides a finite thrash-time estimate.
+
+    ``deterministic`` declares that invocations are pure functions of
+    the node's config (no RNG/measurement state, so call order and
+    batching never change results). Only backends that opt in are
+    eligible for the fleet engine's candidate-vectorized replay plane
+    (``FleetEngine.run_many``); everything else takes the exact
+    serial fallback. False by default — opaque callables must not be
+    assumed pure.
     """
 
     has_clamped: bool = False
+    deterministic: bool = False
 
     def invoke(self, node: Node) -> float:  # pragma: no cover - abstract
         raise NotImplementedError

@@ -221,6 +221,9 @@ class Campaign:
                  env_factory: Optional[Callable[[], Environment]] = None):
         self.spec = spec
         self.env_factory = env_factory or _default_env_factory
+        #: cached default-spec replay engine (pricing/backend/cluster
+        #: are fixed per campaign; see :meth:`_replay_engine`)
+        self._engine: Optional[FleetEngine] = None
 
     # -- portfolio -----------------------------------------------------
     def tasks(self) -> List[CampaignTask]:
@@ -282,27 +285,63 @@ class Campaign:
         in. ``start``/``carry`` replay from a live fleet state (the
         backlog and warm pool the challenger would inherit) instead of
         an empty cluster. Defaults reproduce :meth:`replay` exactly."""
+        return self.replay_configs_many(
+            task, [configs], arrival_seed, rate=rate,
+            n_instances=n_instances, cluster=cluster, cold_start=cold_start,
+            env=env, start=start, carry=carry)[0]
+
+    def replay_configs_many(self, task: CampaignTask,
+                            config_sets: Sequence[Dict[str, "ResourceConfig"]],
+                            arrival_seed: int, *,
+                            rate: Optional[float] = None,
+                            n_instances: Optional[int] = None,
+                            cluster: Optional[ClusterModel] = None,
+                            cold_start: Optional[ColdStartModel] = None,
+                            env: Optional[Environment] = None,
+                            start: float = 0.0,
+                            carry: Optional["FleetCarry"] = None
+                            ) -> List[ReplayMetrics]:
+        """Replay C candidate config-maps on the same arrival seed as
+        one batched :meth:`FleetEngine.run_many` evaluation (the
+        incumbent-vs-challenger hot path) — bit-identical to C
+        :meth:`replay_configs` calls on a deterministic backend."""
         r = self.spec.replay
-        env = env if env is not None else self.env_factory()
-        engine = FleetEngine(env.backend, pricing=env.pricing,
-                             cluster=cluster if cluster is not None
-                             else r.cluster,
-                             cold_start=cold_start if cold_start is not None
-                             else r.cold_start)
+        engine = self._replay_engine(
+            env,
+            cluster if cluster is not None else r.cluster,
+            cold_start if cold_start is not None else r.cold_start)
         n = n_instances if n_instances is not None else r.n_instances
-        instances = []
-        for _ in range(n):
-            wf = task.template.copy()
-            wf.apply_configs(configs)
-            instances.append(wf)
         arrivals = PoissonArrivals(rate if rate is not None else r.rate,
                                    n, seed=arrival_seed, start=start)
-        report = engine.run(instances, arrivals.times(), carry=carry)
-        return ReplayMetrics(
+        reports = engine.run_many(task.template, list(config_sets),
+                                  [arrivals.times()], carry=carry)
+        return [ReplayMetrics(
             slo_attainment=report.slo_attainment(task.slo),
             p50_s=report.p50, p99_s=report.p99,
             total_cost=report.total_cost,
             total_queue_delay_s=report.total_queue_delay)
+            for report in reports]
+
+    def _replay_engine(self, env: Optional[Environment],
+                       cluster: ClusterModel,
+                       cold_start: ColdStartModel) -> FleetEngine:
+        """The engine replays run through. Pricing/backend/cluster are
+        fixed per campaign, so the default-spec engine is built ONCE
+        and reused across every replay of the run (the engine keeps no
+        state between runs). Overridden conditions get a per-call
+        engine; a *stateful* (stochastic) backend is never cached so
+        each replay still sees a fresh noise stream, exactly like the
+        historical fresh-env-per-replay path."""
+        default = (env is None and cluster == self.spec.replay.cluster
+                   and cold_start == self.spec.replay.cold_start)
+        if default and self._engine is not None:
+            return self._engine
+        env = env if env is not None else self.env_factory()
+        engine = FleetEngine(env.backend, pricing=env.pricing,
+                             cluster=cluster, cold_start=cold_start)
+        if default and getattr(env.backend, "deterministic", False):
+            self._engine = engine
+        return engine
 
     # -- the pipeline --------------------------------------------------
     def run(self, *, with_replay: bool = True,

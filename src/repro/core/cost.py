@@ -33,6 +33,14 @@ class PricingModel:
         """$ per second at this configuration (excluding mu2)."""
         return self.mu0 * config.cpu + self.mu1 * config.mem
 
+    def cost_batch(self, runtime_s, cpu, mem):
+        """Vectorized :meth:`function_cost` over aligned arrays of any
+        broadcastable shape. Performs the same IEEE operations in the
+        same order as the scalar path, so batched pricing (the fleet
+        engine's admission rounds, ``FleetEngine.run_many`` candidate
+        planes) is bit-identical to per-invocation calls."""
+        return runtime_s * (self.mu0 * cpu + self.mu1 * mem) + self.mu2
+
 
 DEFAULT_PRICING = PricingModel()
 

@@ -18,7 +18,15 @@ instances against a cluster model:
     hold no cluster capacity; only running invocations do),
   * **batching** — all invocations that start at one engine step are
     evaluated through ``backend.invoke_batch`` in a single vectorized
-    call, not per-node Python dispatch,
+    call (and priced in one ``PricingModel.cost_batch`` expression),
+    not per-node Python dispatch,
+  * **batched replays** — :meth:`FleetEngine.run_many` replays C
+    candidate config-maps × S arrival seeds over a shared topology as
+    one vectorized evaluation: a single ``invoke_config_batch``
+    response-surface call plus a candidate-vectorized longest-path
+    sweep over the shared event skeleton, bit-identical to the looped
+    scalar path. Finite-capacity / cold-start / carry-backlog /
+    stochastic-backend cases take an exact serial fallback,
   * **epoch resumption** — a run can start from a :class:`FleetCarry`
     (warm containers plus still-running invocations from a previous
     bounded epoch) and emit the carry for the next epoch, so an online
@@ -197,27 +205,112 @@ class InstanceResult:
     failed: bool
 
 
-@dataclasses.dataclass
 class FleetReport:
-    instances: List[InstanceResult]
-    makespan: float                      # last finish - first arrival
-    cpu_utilization: float               # ∫used_cpu dt / (total_cpu·makespan)
-    mem_utilization: float
-    #: Σ queue delay keyed by "<workflow template>/<function name>"
-    queue_delay_by_function: Dict[str, float]
-    #: end-of-run warm/busy state (only when ``collect_carry=True``)
-    carry: Optional[FleetCarry] = None
+    """Fleet execution results, structure-of-arrays backed.
+
+    Per-instance data lives in parallel float64/bool ndarrays (one slot
+    per instance, uid order); :attr:`instances` materializes the legacy
+    list of :class:`InstanceResult` objects lazily and caches it, so
+    array consumers (the batched replay paths) never pay per-instance
+    Python object construction. A report is immutable once built —
+    every aggregate accessor (``latencies``/``total_cost``/
+    ``total_queue_delay``/``percentile``/``slo_attainment``) is
+    computed once and memoized. The arrays returned by the accessors
+    are the report's own storage: treat them as read-only.
+    """
+
+    def __init__(self, instances: Optional[List[InstanceResult]] = None,
+                 makespan: float = 0.0, cpu_utilization: float = 0.0,
+                 mem_utilization: float = 0.0,
+                 queue_delay_by_function: Optional[Dict[str, float]] = None,
+                 carry: Optional[FleetCarry] = None):
+        rows = list(instances) if instances else []
+        self._init_common(
+            makespan=makespan, cpu_utilization=cpu_utilization,
+            mem_utilization=mem_utilization,
+            queue_delay_by_function=queue_delay_by_function or {},
+            carry=carry)
+        self.arrivals = np.asarray([r.arrival for r in rows], dtype=np.float64)
+        self.finishes = np.asarray([r.finish for r in rows], dtype=np.float64)
+        self._e2e = np.asarray([r.e2e for r in rows], dtype=np.float64)
+        self.queue_delays = np.asarray([r.queue_delay for r in rows],
+                                       dtype=np.float64)
+        self.cold_delays = np.asarray([r.cold_delay for r in rows],
+                                      dtype=np.float64)
+        self.costs = np.asarray([r.cost for r in rows], dtype=np.float64)
+        self.failed_mask = np.asarray([r.failed for r in rows], dtype=bool)
+        self._instances: Optional[List[InstanceResult]] = rows
+
+    def _init_common(self, *, makespan, cpu_utilization, mem_utilization,
+                     queue_delay_by_function, carry) -> None:
+        self.makespan = makespan             # last event - first arrival
+        self.cpu_utilization = cpu_utilization
+        self.mem_utilization = mem_utilization
+        #: Σ queue delay keyed by "<workflow template>/<function name>"
+        self.queue_delay_by_function = queue_delay_by_function
+        #: end-of-run warm/busy state (only when ``collect_carry=True``)
+        self.carry = carry
+        self._sorted: Optional[np.ndarray] = None
+        self._total_cost: Optional[float] = None
+        self._total_queue_delay: Optional[float] = None
+        self._attainment: Dict[float, float] = {}
+
+    @classmethod
+    def from_arrays(cls, *, arrival: np.ndarray, finish: np.ndarray,
+                    e2e: np.ndarray, queue_delay: np.ndarray,
+                    cold_delay: np.ndarray, cost: np.ndarray,
+                    failed: np.ndarray, makespan: float,
+                    cpu_utilization: float, mem_utilization: float,
+                    queue_delay_by_function: Dict[str, float],
+                    carry: Optional[FleetCarry] = None) -> "FleetReport":
+        """Build a report directly from aligned per-instance arrays
+        (uid order) without materializing ``InstanceResult`` objects."""
+        self = cls.__new__(cls)
+        self._init_common(
+            makespan=makespan, cpu_utilization=cpu_utilization,
+            mem_utilization=mem_utilization,
+            queue_delay_by_function=queue_delay_by_function, carry=carry)
+        self.arrivals = np.asarray(arrival, dtype=np.float64)
+        self.finishes = np.asarray(finish, dtype=np.float64)
+        self._e2e = np.asarray(e2e, dtype=np.float64)
+        self.queue_delays = np.asarray(queue_delay, dtype=np.float64)
+        self.cold_delays = np.asarray(cold_delay, dtype=np.float64)
+        self.costs = np.asarray(cost, dtype=np.float64)
+        self.failed_mask = np.asarray(failed, dtype=bool)
+        self._instances = None
+        return self
+
+    def __len__(self) -> int:
+        return int(self._e2e.size)
+
+    @property
+    def instances(self) -> List[InstanceResult]:
+        """Object view of the per-instance arrays (built once, cached)."""
+        if self._instances is None:
+            self._instances = [
+                InstanceResult(
+                    uid=i, arrival=float(self.arrivals[i]),
+                    finish=float(self.finishes[i]), e2e=float(self._e2e[i]),
+                    queue_delay=float(self.queue_delays[i]),
+                    cold_delay=float(self.cold_delays[i]),
+                    cost=float(self.costs[i]),
+                    failed=bool(self.failed_mask[i]))
+                for i in range(len(self))
+            ]
+        return self._instances
 
     @property
     def latencies(self) -> np.ndarray:
-        return np.asarray([r.e2e for r in self.instances], dtype=np.float64)
+        return self._e2e
 
     def percentile(self, q: float) -> float:
         """Linear-interpolated percentile that stays inf-safe: dead
         instances (inf latency) make the crossed tail inf, never nan
         (naive interpolation between finite and inf is inf - inf).
         An empty fleet has a well-defined zero-latency tail."""
-        lat = np.sort(self.latencies)
+        if self._sorted is None:
+            self._sorted = np.sort(self._e2e)
+        lat = self._sorted
         if not lat.size:
             return 0.0
         rank = q / 100.0 * (lat.size - 1)
@@ -238,23 +331,34 @@ class FleetReport:
     def slo_attainment(self, slo: float) -> float:
         """Fraction of instances that finished within ``slo`` seconds
         (vacuously 1.0 for an empty fleet — nothing missed)."""
-        if not self.instances:
+        if not len(self):
             return 1.0
-        ok = sum(1 for r in self.instances if not r.failed and r.e2e <= slo)
-        return ok / len(self.instances)
+        hit = self._attainment.get(slo)
+        if hit is None:
+            ok = int(np.count_nonzero(~self.failed_mask
+                                      & (self._e2e <= slo)))
+            hit = ok / len(self)
+            self._attainment[slo] = hit
+        return hit
 
     @property
     def total_cost(self) -> float:
-        return sum(r.cost for r in self.instances)
+        if self._total_cost is None:
+            # left-to-right Python-float adds: identical IEEE ops (and
+            # bits) to the historical sum over InstanceResult objects
+            self._total_cost = float(sum(self.costs.tolist()))
+        return self._total_cost
 
     @property
     def total_queue_delay(self) -> float:
-        return sum(r.queue_delay for r in self.instances)
+        if self._total_queue_delay is None:
+            self._total_queue_delay = float(sum(self.queue_delays.tolist()))
+        return self._total_queue_delay
 
     @property
     def throughput(self) -> float:
         """Completed instances per second of makespan."""
-        done = sum(1 for r in self.instances if math.isfinite(r.e2e))
+        done = int(np.count_nonzero(np.isfinite(self._e2e)))
         if self.makespan > 0:
             return done / self.makespan
         return float("inf") if done else 0.0
@@ -267,18 +371,69 @@ class FleetReport:
 _ARRIVAL, _FINISH, _RELEASE = 0, 1, 2
 
 
-@dataclasses.dataclass
-class _Instance:
-    uid: int
-    wf: Workflow
-    arrival: float
-    remaining: Dict[str, int]            # unfinished-predecessor counts
-    finish: float = 0.0
-    queue_delay: float = 0.0
-    cold_delay: float = 0.0
-    cost: float = 0.0
-    failed: bool = False
-    dead: bool = False                   # unrecoverable (inf runtime)
+def _pricing_vectorizes(pricing) -> bool:
+    """May the engine price invocations through ``pricing.cost_batch``?
+
+    Yes when the model provides its own vectorized implementation, or
+    when it inherits the base one AND has not overridden the scalar
+    ``function_cost``/``rate`` it mirrors — a subclass that customizes
+    only the scalar path must not be silently priced with the base
+    mu-formula."""
+    cls = type(pricing)
+    cost_batch = getattr(cls, "cost_batch", None)
+    if cost_batch is None:
+        return False
+    if cost_batch is not PricingModel.cost_batch:
+        return True
+    return (getattr(cls, "function_cost", None)
+            is PricingModel.function_cost
+            and getattr(cls, "rate", None) is PricingModel.rate)
+
+
+class _FleetState:
+    """Structure-of-arrays per-instance bookkeeping for one run.
+
+    Scalar per-instance fields (finish/queue/cold/failed/dead) are
+    float64/bool ndarrays indexed by uid instead of per-``_Instance``
+    Python objects; graph state that is inherently per-node
+    (unfinished-predecessor counts, topological ranks) stays in plain
+    dicts. Per-invocation costs are buffered as ``(topo_rank, cost)``
+    pairs and reduced per instance at report time in topological-rank
+    order — a canonical order shared with the vectorized
+    :meth:`FleetEngine.run_many` plane so batched replays are
+    bit-identical to the event loop.
+    """
+
+    __slots__ = ("wfs", "arrival", "finish", "queue_delay", "cold_delay",
+                 "failed", "dead", "remaining", "rank", "cost_items")
+
+    def __init__(self, wfs: Sequence[Workflow], times: np.ndarray):
+        n = len(wfs)
+        self.wfs = list(wfs)
+        self.arrival = np.array(times, dtype=np.float64)
+        self.finish = np.zeros(n)
+        self.queue_delay = np.zeros(n)
+        self.cold_delay = np.zeros(n)
+        self.failed = np.zeros(n, dtype=bool)
+        self.dead = np.zeros(n, dtype=bool)   # unrecoverable (inf runtime)
+        self.remaining = [{m: len(wf.predecessors(m)) for m in wf.nodes}
+                          for wf in wfs]      # unfinished-predecessor counts
+        self.rank = [{m: k for k, m in enumerate(wf.topological_order())}
+                     for wf in wfs]
+        self.cost_items: List[List[Tuple[int, float]]] = \
+            [[] for _ in range(n)]
+
+    def instance_costs(self) -> np.ndarray:
+        """Per-instance cost: executed invocations summed in
+        topological-rank order (left-to-right float adds)."""
+        out = np.zeros(len(self.wfs))
+        for i, items in enumerate(self.cost_items):
+            items.sort(key=lambda kv: kv[0])
+            acc = 0.0
+            for _, c in items:
+                acc += c
+            out[i] = acc
+        return out
 
 
 class FleetEngine:
@@ -292,6 +447,7 @@ class FleetEngine:
         self.pricing = pricing
         self.cluster = cluster
         self.cold_start = cold_start
+        self._pricing_vectorized = _pricing_vectorizes(pricing)
 
     # -- public API ----------------------------------------------------
     def run(self, workflows: Sequence[Workflow],
@@ -320,7 +476,7 @@ class FleetEngine:
             if collect_carry:
                 out = (carry.pruned(carry.clock) if carry is not None
                        else FleetCarry())
-            return self._report([], 0.0, 0.0, 0.0, 0.0, {}, carry_out=out)
+            return self._empty_report(carry_out=out)
 
         if (carry is None and not collect_carry
                 and len(workflows) == 1 and not self.cluster.finite
@@ -330,16 +486,12 @@ class FleetEngine:
             # the event machinery — ONE batch call + longest path
             return self._run_degenerate(workflows[0], float(times[0]))
 
-        instances = [
-            _Instance(uid=i, wf=wf, arrival=float(t),
-                      remaining={n: len(wf.predecessors(n)) for n in wf.nodes})
-            for i, (wf, t) in enumerate(zip(workflows, times))
-        ]
+        state = _FleetState(workflows, times)
 
         seq = itertools.count()
         events: List[Tuple[float, int, int, int, object]] = [
-            (inst.arrival, next(seq), _ARRIVAL, inst.uid, None)
-            for inst in instances
+            (float(t), next(seq), _ARRIVAL, uid, None)
+            for uid, t in enumerate(times)
         ]
         pending: collections.deque = collections.deque()
         warm: Dict[tuple, List[List[float]]] = collections.defaultdict(list)
@@ -376,14 +528,14 @@ class FleetEngine:
                     used_cpu -= cpu
                     used_mem -= mem
                     continue
-                inst = instances[uid]
+                wf = state.wfs[uid]
                 if kind == _ARRIVAL:
-                    for src in inst.wf.sources():
+                    for src in wf.sources():
                         pending.append((t, uid, src))
-                    if not len(inst.wf):          # empty workflow: trivial
-                        inst.finish = t
+                    if not len(wf):               # empty workflow: trivial
+                        state.finish[uid] = t
                 else:
-                    node = inst.wf.nodes[name]
+                    node = wf.nodes[name]
                     used_cpu -= node.config.cpu
                     used_mem -= node.config.mem
                     # an OOM-killed invocation leaves no reusable
@@ -392,20 +544,21 @@ class FleetEngine:
                     # across instances but never across unrelated
                     # functions that happen to repeat a node name
                     if self.cold_start.delay_s > 0.0 and not node.failed:
-                        warm[(inst.wf.name, name)].append(
+                        warm[(wf.name, name)].append(
                             [t, t + self.cold_start.keep_alive_s])
-                    inst.finish = max(inst.finish, t)
-                    if inst.dead:
+                    state.finish[uid] = max(state.finish[uid], t)
+                    if state.dead[uid]:
                         continue
-                    for succ in inst.wf.successors(name):
-                        inst.remaining[succ] -= 1
-                        if inst.remaining[succ] == 0:
+                    rem = state.remaining[uid]
+                    for succ in wf.successors(name):
+                        rem[succ] -= 1
+                        if rem[succ] == 0:
                             pending.append((t, uid, succ))
             used_cpu, used_mem = self._start_pending(
-                t, pending, instances, warm, used_cpu, used_mem,
+                t, pending, state, warm, used_cpu, used_mem,
                 events, seq, per_fn_queue, inv_log)
 
-        stranded = {uid for _, uid, _ in pending if not instances[uid].dead}
+        stranded = {uid for _, uid, _ in pending if not state.dead[uid]}
         if stranded:  # engine invariant: only dead instances leave work behind
             raise RuntimeError(
                 f"scheduler stranded work for instances {sorted(stranded)}")
@@ -416,8 +569,189 @@ class FleetEngine:
                 warm={k: [list(c) for c in pool]
                       for k, pool in warm.items() if pool},
                 busy=list(inv_log))
-        return self._report(instances, t0, t_last, cpu_area, mem_area,
+        return self._report(state, t0, t_last, cpu_area, mem_area,
                             dict(per_fn_queue), carry_out=carry_out)
+
+    def run_many(self, template: Workflow,
+                 config_sets: Sequence[Dict[str, "ResourceConfig"]],
+                 arrival_sets: Sequence[ArrivalLike], *,
+                 carry: Optional[FleetCarry] = None,
+                 collect_carry: bool = False) -> List[FleetReport]:
+        """Replay C candidate config-maps × S arrival processes over a
+        shared topology as one vectorized evaluation.
+
+        Each cell (c, s) is semantically ``run([template.copy() with
+        config_sets[c] applied, ...], arrival_sets[s], carry=carry)``
+        — one fleet of ``len(arrival_sets[s])`` instances — and the
+        returned reports are **bit-identical** to that scalar loop.
+        Reports come back candidate-major: ``reports[c * S + s]``.
+
+        When the cluster is infinite, cold starts are off, the carry
+        holds no in-flight reservations and the backend is a
+        deterministic response surface with ``invoke_config_batch``,
+        instances never interact, so the whole C×S plane collapses to
+        ONE C×V response-surface call plus a candidate-vectorized
+        longest-path sweep over the shared event skeleton (no template
+        copies, no heap, no per-event Python). Finite-capacity,
+        cold-start, carry-backlog and stochastic/opaque-backend cases
+        genuinely serialize and take the exact looped-``run`` fallback.
+
+        Unlike ``run``, the vectorized path does not write runtimes
+        back onto any workflow (there are no per-instance copies to
+        write to); callers that need mutated workflows should use
+        ``run`` directly.
+        """
+        config_sets = list(config_sets)
+        times_list = [arrival_times(a) for a in arrival_sets]
+        if not config_sets or not times_list:
+            return []
+        for configs in config_sets:
+            for name in configs:
+                if name not in template.nodes:   # match apply_configs
+                    raise KeyError(name)
+
+        # On an infinite cluster with cold starts off, a carry is inert
+        # except for its busy reservations' release events, which only
+        # extend the measured makespan — the vectorized plane
+        # reproduces that analytically, so carries stay vectorizable.
+        vectorizable = (
+            not self.cluster.finite
+            and self.cold_start.delay_s == 0.0
+            and not collect_carry
+            and len(template) > 0
+            and getattr(self.backend, "deterministic", False)
+            and hasattr(self.backend, "invoke_config_batch")
+            and self._pricing_vectorized)
+        if not vectorizable:
+            return self._run_many_serial(template, config_sets, times_list,
+                                         carry, collect_carry)
+        return self._run_many_vectorized(template, config_sets, times_list,
+                                         carry)
+
+    def _run_many_serial(self, template, config_sets, times_list,
+                         carry, collect_carry) -> List[FleetReport]:
+        """Exact fallback: the looped-``run`` semantics, one fleet per
+        (candidate, arrival set) cell."""
+        out: List[FleetReport] = []
+        for configs in config_sets:
+            for times in times_list:
+                out.append(self._run_one_serial(template, configs, times,
+                                                carry, collect_carry))
+        return out
+
+    def _run_one_serial(self, template, configs, times, carry,
+                        collect_carry) -> FleetReport:
+        wfs = []
+        for _ in range(len(times)):
+            wf = template.copy()
+            wf.apply_configs(configs)
+            wfs.append(wf)
+        return self.run(wfs, times, carry=carry, collect_carry=collect_carry)
+
+    def _run_many_vectorized(self, template, config_sets, times_list,
+                             carry) -> List[FleetReport]:
+        nodes = list(template.nodes.values())
+        names = [n.name for n in nodes]
+        n_cand, n_nodes = len(config_sets), len(nodes)
+        cpu = np.empty((n_cand, n_nodes))
+        mem = np.empty((n_cand, n_nodes))
+        for ci, configs in enumerate(config_sets):
+            for vi, node in enumerate(nodes):
+                # .copy() so the lattice quantization matches what
+                # Workflow.copy() + apply_configs hand the scalar path
+                cfg = configs.get(node.name, node.config).copy()
+                cpu[ci, vi] = cfg.cpu
+                mem[ci, vi] = cfg.mem
+        runtimes, failed = self.backend.invoke_config_batch(nodes, cpu, mem)
+        finite = np.isfinite(runtimes).all(axis=1)
+
+        n_seeds = len(times_list)
+        reports: List[Optional[FleetReport]] = [None] * (n_cand * n_seeds)
+        # a candidate with an unbounded (inf-runtime) failure kills its
+        # instances mid-flight — downstream work never runs, which the
+        # longest-path plane cannot express: serialize those candidates
+        for ci in np.flatnonzero(~finite):
+            for si, times in enumerate(times_list):
+                reports[ci * n_seeds + si] = self._run_one_serial(
+                    template, config_sets[ci], times, carry, False)
+        live = np.flatnonzero(finite)
+        if not live.size:
+            return reports
+
+        rt = runtimes[live]                       # (C', V)
+        col = {name: i for i, name in enumerate(names)}
+        order = template.topological_order()
+        # per-candidate cost of one instance: executed invocations
+        # summed in topological-rank order — the same left-to-right
+        # float adds _FleetState.instance_costs performs
+        node_cost = self.pricing.cost_batch(rt, cpu[live], mem[live])
+        cand_cost = np.zeros(live.size)
+        for name in order:
+            cand_cost = cand_cost + node_cost[:, col[name]]
+        cand_failed = failed[live].any(axis=1)
+
+        # shared event skeleton: absolute finish of node v for every
+        # (candidate, instance) — sources start at the arrival instant,
+        # successors at the max of their predecessors' finishes, which
+        # is exactly the event-loop recurrence (t + rt per hop)
+        t_all = np.concatenate(times_list) if times_list else \
+            np.empty(0)
+        finish_by_node: Dict[str, np.ndarray] = {}
+        for name in order:
+            preds = template.predecessors(name)
+            if preds:
+                start = finish_by_node[preds[0]]
+                for p in preds[1:]:
+                    start = np.maximum(start, finish_by_node[p])
+            else:
+                start = t_all[None, :]
+            finish_by_node[name] = start + rt[:, col[name]][:, None]
+        inst_finish = None
+        for arr in finish_by_node.values():
+            inst_finish = arr if inst_finish is None \
+                else np.maximum(inst_finish, arr)
+
+        pfq = {f"{template.name}/{name}": 0.0 for name in names}
+        busy = carry.busy if carry is not None else []
+        lo = 0
+        for si, times in enumerate(times_list):
+            m = len(times)
+            seg = slice(lo, lo + m)
+            lo += m
+            for k, ci in enumerate(live):
+                idx = int(ci) * n_seeds + si
+                if m == 0:
+                    reports[idx] = self._empty_report()
+                    continue
+                if m == 1:
+                    # a fleet of one takes ``run``'s degenerate fast
+                    # path, whose float associations (relative
+                    # longest-path shifted by the arrival, cost in
+                    # node-insertion order) differ from the absolute-
+                    # time plane in the last bits — serialize to keep
+                    # the bit-identity contract
+                    reports[idx] = self._run_one_serial(
+                        template, config_sets[ci], times, carry, False)
+                    continue
+                t0 = float(times.min())
+                t_last = float(inst_finish[k, seg].max())
+                # carried-over reservations release inside this run and
+                # can be its last event (capacity itself never binds)
+                for f, _, _ in busy:
+                    if f > t0 and f > t_last:
+                        t_last = float(f)
+                zeros = np.zeros(m)
+                reports[idx] = FleetReport.from_arrays(
+                    arrival=np.array(times, dtype=np.float64),
+                    finish=inst_finish[k, seg].copy(),
+                    e2e=inst_finish[k, seg] - times,
+                    queue_delay=zeros, cold_delay=zeros.copy(),
+                    cost=np.full(m, cand_cost[k]),
+                    failed=np.full(m, bool(cand_failed[k]), dtype=bool),
+                    makespan=max(t_last - t0, 0.0),
+                    cpu_utilization=0.0, mem_utilization=0.0,
+                    queue_delay_by_function=dict(pfq))
+        return reports
 
     # -- internals -----------------------------------------------------
     def _run_degenerate(self, wf: Workflow, arrival: float) -> FleetReport:
@@ -434,14 +768,15 @@ class FleetEngine:
             if math.isfinite(node.runtime):
                 cost += self.pricing.function_cost(node.runtime, node.config)
         e2e = wf.end_to_end_latency()
-        result = InstanceResult(
-            uid=0, arrival=arrival, finish=arrival + e2e, e2e=e2e,
-            queue_delay=0.0, cold_delay=0.0, cost=cost,
-            failed=bool(failed.any()))
-        return FleetReport(instances=[result],
-                           makespan=e2e if math.isfinite(e2e) else 0.0,
-                           cpu_utilization=0.0, mem_utilization=0.0,
-                           queue_delay_by_function={})
+        fin = arrival + e2e
+        return FleetReport.from_arrays(
+            arrival=np.array([arrival]), finish=np.array([fin]),
+            e2e=np.array([e2e]), queue_delay=np.zeros(1),
+            cold_delay=np.zeros(1), cost=np.array([cost]),
+            failed=np.array([bool(failed.any())]),
+            makespan=e2e if math.isfinite(e2e) else 0.0,
+            cpu_utilization=0.0, mem_utilization=0.0,
+            queue_delay_by_function={})
 
     def _check_placeable(self, wf: Workflow) -> None:
         for node in wf:
@@ -466,11 +801,13 @@ class FleetEngine:
                 return True
         return False
 
-    def _start_pending(self, t, pending, instances, warm, used_cpu, used_mem,
-                       events, seq, per_fn_queue, inv_log=None):
+    def _start_pending(self, t, pending, state: _FleetState, warm,
+                       used_cpu, used_mem, events, seq, per_fn_queue,
+                       inv_log=None):
         """FIFO admission: start every queued invocation that fits, stop
         at the first that doesn't (no overtaking => no starvation). All
-        admitted invocations are evaluated in ONE backend batch call.
+        admitted invocations are evaluated in ONE backend batch call and
+        priced in one vectorized ``cost_batch`` expression.
         If an invocation dies on the spot (infinite runtime, no clamped
         estimate) its freed capacity triggers another admission round at
         the same instant — otherwise work queued behind it could strand
@@ -479,11 +816,10 @@ class FleetEngine:
             startable: List[Tuple[float, int, str]] = []
             while pending:
                 ready_t, uid, name = pending[0]
-                inst = instances[uid]
-                if inst.dead:
+                if state.dead[uid]:
                     pending.popleft()
                     continue
-                cfg = inst.wf.nodes[name].config
+                cfg = state.wfs[uid].nodes[name].config
                 if (used_cpu + cfg.cpu > self.cluster.total_cpu
                         or used_mem + cfg.mem > self.cluster.total_mem_mb):
                     break
@@ -494,41 +830,43 @@ class FleetEngine:
             if not startable:
                 return used_cpu, used_mem
 
-            nodes = [instances[uid].wf.nodes[name]
+            nodes = [state.wfs[uid].nodes[name]
                      for _, uid, name in startable]
             runtimes, failed = self.backend.invoke_batch(nodes)
+            costs = self._price_batch(nodes, runtimes)
 
             released = False
-            for (ready_t, uid, name), node, rt, bad in zip(
-                    startable, nodes, runtimes, failed):
-                inst = instances[uid]
+            for k, ((ready_t, uid, name), node, rt, bad) in enumerate(zip(
+                    startable, nodes, runtimes, failed)):
                 rt = float(rt)
                 node.runtime = rt
                 node.failed = bool(bad)
                 if not node.failed:
                     node.fail_reason = ""
                 wait = t - ready_t
-                inst.queue_delay += wait
+                state.queue_delay[uid] += wait
                 # same scoping as warm containers: heterogeneous fleets
                 # must not merge unrelated functions sharing a node name
-                per_fn_queue[f"{inst.wf.name}/{name}"] += wait
+                per_fn_queue[f"{state.wfs[uid].name}/{name}"] += wait
                 if bad:
-                    inst.failed = True
+                    state.failed[uid] = True
                 if not math.isfinite(rt):
                     # unbounded failure (no clamped estimate): the
                     # instance can never finish; release its slot
                     cfg = node.config
                     used_cpu -= cfg.cpu
                     used_mem -= cfg.mem
-                    inst.dead = True
+                    state.dead[uid] = True
                     released = True
                     continue
                 delay = 0.0
                 if self.cold_start.delay_s > 0.0 and \
-                        not self._take_warm((inst.wf.name, name), t, warm):
+                        not self._take_warm((state.wfs[uid].name, name), t,
+                                            warm):
                     delay = self.cold_start.delay_s
-                inst.cold_delay += delay
-                inst.cost += self.pricing.function_cost(rt, node.config)
+                state.cold_delay[uid] += delay
+                state.cost_items[uid].append((state.rank[uid][name],
+                                              float(costs[k])))
                 if inv_log is not None:
                     inv_log.append((t + delay + rt, node.config.cpu,
                                     node.config.mem))
@@ -538,17 +876,36 @@ class FleetEngine:
             if not released:
                 return used_cpu, used_mem
 
-    def _report(self, instances, t0, t_end, cpu_area, mem_area,
+    def _price_batch(self, nodes: Sequence, runtimes: np.ndarray) -> np.ndarray:
+        """Vectorized per-invocation pricing for one admission batch
+        (falls back to scalar ``function_cost`` for pricing models that
+        can't vectorize — same IEEE ops either way)."""
+        if not self._pricing_vectorized:
+            return np.asarray([self.pricing.function_cost(float(rt), n.config)
+                               for n, rt in zip(nodes, runtimes)])
+        cost_batch = self.pricing.cost_batch
+        n = len(nodes)
+        cpu = np.empty(n)
+        mem = np.empty(n)
+        for i, node in enumerate(nodes):
+            cpu[i] = node.config.cpu
+            mem[i] = node.config.mem
+        return cost_batch(runtimes, cpu, mem)
+
+    def _empty_report(self, carry_out=None) -> FleetReport:
+        empty = np.empty(0)
+        return FleetReport.from_arrays(
+            arrival=empty, finish=empty, e2e=empty, queue_delay=empty,
+            cold_delay=empty, cost=empty,
+            failed=np.empty(0, dtype=bool), makespan=0.0,
+            cpu_utilization=0.0, mem_utilization=0.0,
+            queue_delay_by_function={}, carry=carry_out)
+
+    def _report(self, state: _FleetState, t0, t_end, cpu_area, mem_area,
                 per_fn_queue, carry_out=None) -> FleetReport:
-        results = [
-            InstanceResult(
-                uid=inst.uid, arrival=inst.arrival,
-                finish=math.inf if inst.dead else inst.finish,
-                e2e=math.inf if inst.dead else inst.finish - inst.arrival,
-                queue_delay=inst.queue_delay, cold_delay=inst.cold_delay,
-                cost=inst.cost, failed=inst.failed or inst.dead)
-            for inst in instances
-        ]
+        dead = state.dead
+        finish = np.where(dead, math.inf, state.finish)
+        e2e = np.where(dead, math.inf, state.finish - state.arrival)
         makespan = max(t_end - t0, 0.0)
         denom = self.cluster.total_cpu * makespan
         cpu_util = cpu_area / denom if denom > 0 and math.isfinite(denom) \
@@ -556,11 +913,13 @@ class FleetEngine:
         denom = self.cluster.total_mem_mb * makespan
         mem_util = mem_area / denom if denom > 0 and math.isfinite(denom) \
             else 0.0
-        return FleetReport(instances=results, makespan=makespan,
-                           cpu_utilization=cpu_util,
-                           mem_utilization=mem_util,
-                           queue_delay_by_function=per_fn_queue,
-                           carry=carry_out)
+        return FleetReport.from_arrays(
+            arrival=state.arrival, finish=finish, e2e=e2e,
+            queue_delay=state.queue_delay, cold_delay=state.cold_delay,
+            cost=state.instance_costs(), failed=state.failed | dead,
+            makespan=makespan, cpu_utilization=cpu_util,
+            mem_utilization=mem_util,
+            queue_delay_by_function=per_fn_queue, carry=carry_out)
 
 
 def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],

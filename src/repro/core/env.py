@@ -180,20 +180,21 @@ class Environment:
         thrash-until-killed wall time so search budgets stay honest.
         """
         report = self.engine.run([wf], [0.0])
-        res = report.instances[0]
-        # the degenerate path sums per-function costs in node order, so
-        # res.cost == workflow_cost(...) bit-for-bit — no recompute
-        if res.failed:
+        # array views (no InstanceResult materialization on the
+        # per-sample hot path); the degenerate path sums per-function
+        # costs in node order, so cost == workflow_cost(...) bit-for-bit
+        e2e = float(report.latencies[0])
+        cost = float(report.costs[0])
+        if report.failed_mask[0]:
             bad = "; ".join(n.fail_reason or n.name for n in wf if n.failed)
             if not self.backend.has_clamped:
                 # unbounded failure: charge the per-second rate only
                 cost = sum(self.pricing.rate(n.config) for n in wf)
                 return self.trace.record(math.inf, cost, wf, feasible=False,
                                          error=True, note=f"error:{bad}")
-            return self.trace.record(res.e2e, res.cost, wf, feasible=False,
+            return self.trace.record(e2e, cost, wf, feasible=False,
                                      error=True, note=f"error:{bad}")
-        feasible = res.e2e <= slo
-        return self.trace.record(res.e2e, res.cost, wf, feasible=feasible,
+        return self.trace.record(e2e, cost, wf, feasible=e2e <= slo,
                                  note=note)
 
     def execute_batch(self, wfs: Sequence[Workflow],

@@ -365,13 +365,15 @@ class OnlineController:
         cell.clock += r.n_instances / rate
         cell.carry = report.carry.pruned(cell.clock)
         slo = cell.task.slo
-        cold_total = 0.0
-        for inst in report.instances:        # uid order == arrival order
-            cell.window.append((not inst.failed) and inst.e2e <= slo)
-            overhead = inst.queue_delay + inst.cold_delay
+        # SoA report views: uid order == arrival order, no per-instance
+        # object materialization on the serving hot path
+        hits = (~report.failed_mask) & (report.latencies <= slo)
+        overheads = report.queue_delays + report.cold_delays
+        cold_total = float(sum(report.cold_delays.tolist()))
+        for hit, overhead in zip(hits.tolist(), overheads.tolist()):
+            cell.window.append(hit)
             cell.overheads.append(overhead if math.isfinite(overhead)
                                   else slo)
-            cold_total += inst.cold_delay
         return {
             "epoch": epoch, "cell": cell.index,
             "attainment": report.slo_attainment(slo),
@@ -408,25 +410,46 @@ class OnlineController:
         return max(slo - q, self.spec.slo_floor_frac * slo)
 
     # -- reconfiguration ----------------------------------------------
-    def _validate(self, cell: ServingCell,
-                  configs: Dict[str, ResourceConfig],
-                  cond: EpochConditions, seed: int) -> ReplayMetrics:
-        """Replay ``configs`` on the live arrival seed under the live
-        conditions, *from the live fleet state* (the cell's carry:
-        backlog + warm pool) — the challenger gate's evidence. Without
-        the carry a backlogged incumbent validates clean and no
-        challenger could ever beat it."""
+    def _validate_many(self, cell: ServingCell,
+                       config_sets: List[Dict[str, ResourceConfig]],
+                       cond: EpochConditions, seed: int
+                       ) -> List[ReplayMetrics]:
+        """Replay candidate config-maps on the live arrival seed under
+        the live conditions, *from the live fleet state* (the cell's
+        carry: backlog + warm pool) — the challenger gate's evidence.
+        Without the carry a backlogged incumbent validates clean and no
+        challenger could ever beat it. All candidates go through ONE
+        batched :meth:`Campaign.replay_configs_many` /
+        :meth:`FleetEngine.run_many` evaluation (challenger and
+        incumbent share the event skeleton whenever the live state
+        permits vectorization)."""
         r = self.spec.replay
         carry = cell.carry.pruned(cell.clock) if cell.carry is not None \
             else None
         n = self.spec.validation_instances
-        return self._campaign.replay_configs(
-            cell.task, configs, seed,
+        kwargs = dict(
             rate=r.rate * cond.rate_scale,
             n_instances=n if n is not None else 2 * r.n_instances,
             cold_start=self._cold_model(cond),
-            env=self._serving_env(cond),
             start=cell.clock, carry=carry)
+        env = self._serving_env(cond)
+        if not getattr(env.backend, "deterministic", False):
+            # stateful (stochastic) backend: the swap gate must stay a
+            # *paired* comparison — every candidate gets its own fresh,
+            # identically-seeded env so all see the same noise draws,
+            # exactly like the historical one-env-per-validation path
+            return [self._campaign.replay_configs_many(
+                cell.task, [configs], seed,
+                env=self._serving_env(cond), **kwargs)[0]
+                for configs in config_sets]
+        return self._campaign.replay_configs_many(
+            cell.task, config_sets, seed, env=env, **kwargs)
+
+    def _validate(self, cell: ServingCell,
+                  configs: Dict[str, ResourceConfig],
+                  cond: EpochConditions, seed: int) -> ReplayMetrics:
+        """Single-candidate view of :meth:`_validate_many`."""
+        return self._validate_many(cell, [configs], cond, seed)[0]
 
     def _reconfigure(self, cell: ServingCell, epoch: int,
                      cond: EpochConditions, seed: int,
@@ -444,8 +467,10 @@ class OnlineController:
         cell.result = res
         challenger = res.configs
 
-        val_ch = self._validate(cell, challenger, cond, seed)
-        val_inc = self._validate(cell, cell.configs, cond, seed)
+        # one batched replay validates challenger and incumbent on the
+        # identical live seed/conditions/backlog (see _validate_many)
+        val_ch, val_inc = self._validate_many(
+            cell, [challenger, cell.configs], cond, seed)
         tol = spec.attainment_tol
         accept = (val_ch.slo_attainment > val_inc.slo_attainment + tol
                   or (abs(val_ch.slo_attainment - val_inc.slo_attainment)

@@ -39,6 +39,9 @@ class AnalyticBackend(BaseBackend):
         self.invocations = 0
 
     has_clamped = True
+    #: pure response surface — batching/order never change results, so
+    #: the fleet engine may evaluate whole candidate planes at once
+    deterministic = True
 
     def _spec(self, node: Node) -> FunctionSpec:
         spec = node.payload
@@ -147,7 +150,20 @@ class AnalyticBackend(BaseBackend):
 
 
 class StochasticBackend(AnalyticBackend):
-    """Analytic surface x log-normal invocation noise (§IV validation)."""
+    """Analytic surface x log-normal invocation noise (§IV validation).
+
+    Inherits the full vectorized surface, **including**
+    ``invoke_config_batch``: a C×N candidate plane draws its (C, N)
+    noise matrix in candidate-major order — the same order a loop of
+    scalar ``invoke`` calls (or C ``invoke_batch`` rows) consumes the
+    stream — so batched candidate evaluation is bit-identical to the
+    scalar path under a fixed seed (pinned by
+    ``tests/test_backend_parity.py``). The RNG is stateful, so the
+    backend is *not* ``deterministic``: replay-order-sensitive callers
+    (``FleetEngine.run_many``) take their exact serial fallback.
+    """
+
+    deterministic = False
 
     def __init__(self, *, noise_sigma: float = 0.025, seed: int = 0,
                  input_scale: float = 1.0):

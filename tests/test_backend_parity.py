@@ -131,6 +131,56 @@ def test_stochastic_batch_charges_failures_deterministically():
     assert np.allclose(runtimes, np.tile(clamped, (2, 1)))
 
 
+@given(st.sampled_from(["chain", "fan", "layered"]),
+       st.integers(3, 8), st.integers(0, 10_000),
+       st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_stochastic_config_batch_matches_invoke_batch_rows(kind, size,
+                                                           wf_seed, n_cand,
+                                                           cfg_seed):
+    """One (C, N) candidate plane consumes the noise stream exactly
+    like C successive ``invoke_batch`` rows — *including* OOM rows
+    (``invoke_batch`` draws noise for every position and discards the
+    failing ones, so unlike the scalar-``invoke`` loop the stream
+    positions line up even across failures). This is the property the
+    fleet engine's batched replay paths rely on."""
+    wf = _build(kind, size, wf_seed)
+    nodes = list(wf.nodes.values())
+    rng = np.random.default_rng(cfg_seed)
+    # reaches below the working-set floors: OOM rows genuinely occur
+    cpu, mem = _candidate_arrays(nodes, n_cand, rng, 64.0, 10240.0)
+    got_rt, got_failed = StochasticBackend(
+        noise_sigma=0.05, seed=7).invoke_config_batch(nodes, cpu, mem)
+    row_backend = StochasticBackend(noise_sigma=0.05, seed=7)
+    want_rt = np.empty_like(cpu)
+    want_failed = np.zeros(cpu.shape, dtype=bool)
+    saved = [n.config for n in nodes]
+    try:
+        for ci in range(n_cand):
+            for ni, node in enumerate(nodes):
+                node.config = ResourceConfig()
+                node.config.cpu = float(cpu[ci, ni])
+                node.config.mem = float(mem[ci, ni])
+            want_rt[ci], want_failed[ci] = row_backend.invoke_batch(nodes)
+    finally:
+        for node, cfg in zip(nodes, saved):
+            node.config = cfg
+    assert np.array_equal(got_failed, want_failed)
+    assert np.array_equal(got_rt, want_rt)
+
+
+def test_backend_determinism_flags():
+    """`deterministic` gates the fleet engine's vectorized replay
+    plane: pure response surfaces opt in, stateful/opaque backends
+    must not."""
+    from repro.core.backend import BaseBackend, CallableBackend
+
+    assert AnalyticBackend().deterministic
+    assert not StochasticBackend().deterministic
+    assert not BaseBackend.deterministic
+    assert not CallableBackend(lambda node: 1.0).deterministic
+
+
 def test_config_batch_leaves_node_configs_untouched():
     wf = fan_workflow(3, seed=0)
     nodes = list(wf.nodes.values())

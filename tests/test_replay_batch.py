@@ -1,0 +1,379 @@
+"""`FleetEngine.run_many` equivalence bar + SoA report memoization.
+
+The batched replay plane (C candidate config-maps × S arrival seeds
+over a shared topology) must be **bit-identical** to the looped scalar
+path — ``run([template.copy() + configs, ...], times)`` per cell — on
+every compared field, across topology families, finite and infinite
+clusters, cold starts, the carry/backlog path the online challenger
+gate uses, and the serialized unbounded-failure case.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.backend import CallableBackend
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
+                               FleetEngine, PoissonArrivals)
+from repro.core.resources import ResourceConfig
+from repro.serverless.generator import (chain_workflow, diamond_workflow,
+                                        fan_workflow, layered_workflow)
+from repro.serverless.platform import (AnalyticBackend, SimulatedPlatform,
+                                       StochasticBackend)
+
+TOPOLOGIES = {
+    "chain": lambda: chain_workflow(5, seed=11),
+    "fan": lambda: fan_workflow(4, seed=12),
+    "diamond": lambda: diamond_workflow(2, seed=13),
+    "layered": lambda: layered_workflow(10, n_layers=3, seed=14),
+}
+
+
+def make_engine(**kw):
+    env = SimulatedPlatform().environment()
+    return FleetEngine(env.backend, pricing=env.pricing, **kw)
+
+
+def candidate_sets(template, n_cand, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_cand):
+        out.append({n.name: ResourceConfig(cpu=float(rng.uniform(1.0, 8.0)),
+                                           mem=float(rng.uniform(1024.0,
+                                                                 8192.0)))
+                    for n in template})
+    return out
+
+
+def arrival_sets(n_seeds, n=6, rate=0.25, start=0.0):
+    return [PoissonArrivals(rate, n, seed=s, start=start).times()
+            for s in range(n_seeds)]
+
+
+def scalar_cell(engine, template, configs, times, carry=None):
+    wfs = []
+    for _ in range(len(times)):
+        wf = template.copy()
+        wf.apply_configs(configs)
+        wfs.append(wf)
+    return engine.run(wfs, times, carry=carry)
+
+
+def assert_reports_identical(got, want):
+    """Every compared field exact — the acceptance-criteria bar."""
+    assert np.array_equal(got.arrivals, want.arrivals)
+    assert np.array_equal(got.finishes, want.finishes)
+    assert np.array_equal(got.latencies, want.latencies)
+    assert np.array_equal(got.queue_delays, want.queue_delays)
+    assert np.array_equal(got.cold_delays, want.cold_delays)
+    assert np.array_equal(got.costs, want.costs)
+    assert np.array_equal(got.failed_mask, want.failed_mask)
+    assert got.makespan == want.makespan
+    assert got.queue_delay_by_function == want.queue_delay_by_function
+    assert got.total_cost == want.total_cost
+    assert got.total_queue_delay == want.total_queue_delay
+    assert got.p50 == want.p50 and got.p99 == want.p99
+
+
+def assert_grid_identical(engine, template, cands, seeds, carry=None):
+    reports = engine.run_many(template, cands, seeds, carry=carry)
+    assert len(reports) == len(cands) * len(seeds)
+    k = 0
+    for configs in cands:                    # candidate-major ordering
+        for times in seeds:
+            assert_reports_identical(
+                reports[k], scalar_cell(engine, template, configs, times,
+                                        carry=carry))
+            k += 1
+    return reports
+
+
+@pytest.mark.parametrize("kind", list(TOPOLOGIES))
+def test_run_many_bit_identical_infinite_cluster(kind):
+    """Vectorized plane == looped scalar run on every topology family."""
+    template = TOPOLOGIES[kind]()
+    engine = make_engine()
+    assert_grid_identical(engine, template,
+                          candidate_sets(template, 3, seed=1),
+                          arrival_sets(2))
+
+
+@pytest.mark.parametrize("kind", list(TOPOLOGIES))
+def test_run_many_bit_identical_finite_cluster(kind):
+    """Finite capacity genuinely serializes; the exact fallback must
+    still reproduce the looped run bit-for-bit (queuing included)."""
+    template = TOPOLOGIES[kind]()
+    engine = make_engine(cluster=ClusterModel(total_cpu=12.0,
+                                              total_mem_mb=16384.0))
+    cands = [{n.name: ResourceConfig(cpu=4.0, mem=4096.0) for n in template},
+             {n.name: ResourceConfig(cpu=6.0, mem=6144.0) for n in template}]
+    reports = assert_grid_identical(engine, template, cands,
+                                    arrival_sets(2, rate=2.0))
+    assert any(r.total_queue_delay > 0.0 for r in reports)
+
+
+def test_run_many_bit_identical_with_cold_starts():
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine(cold_start=ColdStartModel(delay_s=1.5,
+                                                   keep_alive_s=60.0))
+    reports = assert_grid_identical(engine, template,
+                                    candidate_sets(template, 2, seed=2),
+                                    arrival_sets(2))
+    assert all(r.cold_delays.sum() > 0.0 for r in reports)
+
+
+def test_run_many_bit_identical_from_live_backlog():
+    """The online-challenger path: replay from a carried fleet state
+    (warm pool + in-flight reservations of a previous epoch)."""
+    template = TOPOLOGIES["layered"]()
+    # epoch 0 on a tight cluster leaves work in flight at the boundary
+    engine = make_engine(cluster=ClusterModel(total_cpu=14.0,
+                                              total_mem_mb=20480.0),
+                         cold_start=ColdStartModel(delay_s=0.5,
+                                                   keep_alive_s=500.0))
+    first = engine.run(
+        [template.copy() for _ in range(6)],
+        PoissonArrivals(1.0, 6, seed=7).times(), collect_carry=True)
+    boundary = 30.0
+    carry = first.carry.pruned(boundary)
+    assert carry.warm                       # the backlog is real
+    cands = candidate_sets(template, 2, seed=3)
+    seeds = [PoissonArrivals(1.0, 6, seed=8, start=boundary).times()]
+    assert_grid_identical(engine, template, cands, seeds, carry=carry)
+
+
+def test_run_many_busy_carry_on_infinite_cluster_stays_exact():
+    """An inert busy reservation still extends the measured makespan;
+    the vectorized plane must reproduce it."""
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine()
+    carry = FleetCarry(clock=0.0, warm={},
+                       busy=[(900.0, 2.0, 512.0), (0.1, 1.0, 128.0)])
+    reports = assert_grid_identical(engine, template,
+                                    candidate_sets(template, 2, seed=4),
+                                    arrival_sets(1), carry=carry)
+    assert all(r.makespan > 800.0 for r in reports)
+
+
+def test_run_many_empty_candidate_and_seed_sets():
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine()
+    assert engine.run_many(template, [], arrival_sets(2)) == []
+    assert engine.run_many(template, candidate_sets(template, 2), []) == []
+    # an empty arrival process yields the well-defined empty report
+    reports = engine.run_many(template, candidate_sets(template, 2),
+                              [np.empty(0)])
+    assert len(reports) == 2
+    for rep in reports:
+        assert len(rep) == 0 and rep.instances == []
+        assert rep.p99 == 0.0 and rep.slo_attainment(1.0) == 1.0
+
+
+def test_run_many_unknown_function_name_raises_keyerror():
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine()
+    bad = {"no-such-function": ResourceConfig()}
+    with pytest.raises(KeyError):
+        engine.run_many(template, [bad], arrival_sets(1))
+
+
+def test_run_many_uses_the_vectorized_plane():
+    """On an infinite cluster with a deterministic surface the C×S grid
+    must be ONE invoke_config_batch call — zero invoke_batch rounds."""
+    template = TOPOLOGIES["fan"]()
+    env = SimulatedPlatform().environment()
+    calls = {"config_batch": 0, "batch": 0}
+    real_cfg = env.backend.invoke_config_batch
+    env.backend.invoke_config_batch = \
+        lambda *a, **k: (calls.__setitem__("config_batch",
+                                           calls["config_batch"] + 1)
+                         or real_cfg(*a, **k))
+    env.backend.invoke_batch = \
+        lambda *a, **k: pytest.fail("scalar invoke_batch on the "
+                                    "vectorized plane")
+    engine = FleetEngine(env.backend, pricing=env.pricing)
+    reports = engine.run_many(template, candidate_sets(template, 4, seed=5),
+                              arrival_sets(3))
+    assert calls["config_batch"] == 1
+    assert len(reports) == 12
+
+
+def test_run_many_stochastic_backend_takes_exact_serial_fallback():
+    """A stateful backend must not be vectorized (draw order changes
+    results); the fallback consumes the noise stream exactly like the
+    hand-written loop."""
+    template = TOPOLOGIES["chain"]()
+    cands = candidate_sets(template, 2, seed=6)
+    seeds = arrival_sets(2)
+
+    def engine(seed):
+        return FleetEngine(StochasticBackend(noise_sigma=0.05, seed=seed),
+                           pricing=SimulatedPlatform().pricing)
+
+    got = engine(123).run_many(template, cands, seeds)
+    ref_engine = engine(123)
+    k = 0
+    for configs in cands:
+        for times in seeds:
+            assert_reports_identical(
+                got[k], scalar_cell(ref_engine, template, configs, times))
+            k += 1
+
+
+class _NoClampBackend(AnalyticBackend):
+    """Deterministic surface whose failures are unbounded (+inf): the
+    run_many plane must serialize those candidates — a dead instance
+    never runs its downstream nodes, which longest-path cannot see."""
+
+    has_clamped = False
+
+    def _surface(self, cpu, mem, spec_arrays):
+        rt, failed = super()._surface(cpu, mem, spec_arrays)
+        return np.where(failed, np.inf, rt), failed
+
+
+def test_run_many_serializes_unbounded_failure_candidates():
+    template = TOPOLOGIES["fan"]()
+    healthy = {n.name: ResourceConfig(cpu=4.0, mem=8192.0)
+               for n in template}
+    dying = {n.name: ResourceConfig(cpu=4.0, mem=128.0)    # below floors
+             for n in template}
+    engine = FleetEngine(_NoClampBackend(),
+                         pricing=SimulatedPlatform().pricing)
+    reports = assert_grid_identical(engine, template, [healthy, dying],
+                                    arrival_sets(2))
+    assert not reports[0].failed_mask.any()
+    assert reports[2].failed_mask.all()
+    assert math.isinf(reports[2].p99)
+
+
+def test_opaque_callable_backend_falls_back_and_matches():
+    """Backends without a config-batch surface (bare oracles) keep the
+    exact looped semantics."""
+    template = TOPOLOGIES["chain"]()
+    engine = FleetEngine(CallableBackend(lambda node: node.config.cpu * 0.1),
+                         pricing=SimulatedPlatform().pricing)
+    assert_grid_identical(engine, template,
+                          candidate_sets(template, 2, seed=8),
+                          arrival_sets(2))
+
+
+def test_run_many_single_instance_cell_matches_degenerate_path():
+    """A fleet of one goes through ``run``'s degenerate fast path,
+    whose float associations differ from the absolute-time plane —
+    run_many must serialize that cell to stay bit-identical. Uses a
+    template whose insertion order differs from topological order so
+    any accumulation-order divergence would surface."""
+    from repro.core.dag import Workflow
+    from repro.serverless.generator import random_spec
+
+    rng = np.random.default_rng(5)
+    template = Workflow("scrambled")
+    for name in ("f2", "f0", "f1"):          # non-topological insertion
+        template.add_function(name, payload=random_spec(name, rng))
+    template.add_edge("f0", "f1")
+    template.add_edge("f1", "f2")
+    engine = make_engine()
+    cands = candidate_sets(template, 2, seed=10)
+    # nonzero arrival: the degenerate path computes e2e relative and
+    # shifts by the arrival, unlike the absolute event-time chain
+    assert_grid_identical(engine, template, cands,
+                          [np.array([13.7])])
+
+
+def test_custom_pricing_overrides_are_honored():
+    """A pricing model that customizes only scalar function_cost must
+    not be silently priced with the base mu-formula (neither by the
+    admission rounds nor by the run_many plane)."""
+    from repro.core.cost import PricingModel
+
+    class DoubledPricing(PricingModel):
+        def function_cost(self, runtime_s, config):
+            return 2.0 * super().function_cost(runtime_s, config)
+
+    template = TOPOLOGIES["chain"]()
+    env = SimulatedPlatform().environment()
+    base = FleetEngine(env.backend)
+    doubled = FleetEngine(env.backend, pricing=DoubledPricing())
+    assert not doubled._pricing_vectorized     # falls back to scalar
+    cands = candidate_sets(template, 1, seed=11)
+    times = arrival_sets(1)[0]
+    got = doubled.run_many(template, cands, [times])[0]
+    ref = base.run_many(template, cands, [times])[0]
+    assert got.total_cost == pytest.approx(2.0 * ref.total_cost)
+    # a custom *vectorized* implementation is trusted as-is
+    class VectorizedDoubled(DoubledPricing):
+        def cost_batch(self, runtime_s, cpu, mem):
+            return 2.0 * super().cost_batch(runtime_s, cpu, mem)
+
+    vec = FleetEngine(env.backend, pricing=VectorizedDoubled())
+    assert vec._pricing_vectorized
+    got_vec = vec.run_many(template, cands, [times])[0]
+    assert got_vec.total_cost == pytest.approx(got.total_cost)
+
+
+def test_online_stochastic_validation_stays_paired():
+    """On a stochastic backend the challenger gate must remain a
+    *paired* comparison: every candidate validated under identical
+    noise draws. The same configuration in both slots must therefore
+    score identically (a shared noise stream would break this)."""
+    from repro.core.campaign import PortfolioSpec, ReplaySpec
+    from repro.core.online import OnlineController, OnlineSpec
+    from repro.serverless.generator import EpochConditions
+    from repro.serverless.platform import make_env
+
+    spec = OnlineSpec(
+        portfolio=PortfolioSpec(n_workflows=1, size=4, slo_slacks=(2.0,)),
+        replay=ReplaySpec(n_instances=6, rate=0.5), n_epochs=1)
+    ctl = OnlineController(
+        spec, env_factory=lambda: make_env(noise_sigma=0.05, seed=17))
+    tasks = ctl._campaign.tasks()
+    cells = ctl._deploy(tasks, ctl._campaign.arrival_seeds(len(tasks)))
+    cond = EpochConditions()
+    cfg = cells[0].configs
+    a, b = ctl._validate_many(cells[0], [cfg, cfg], cond, seed=3)
+    assert a == b
+
+
+# -- SoA report memoization (accessor-waste satellite) -----------------
+
+def test_report_accessors_are_memoized():
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine(cluster=ClusterModel(total_cpu=12.0,
+                                              total_mem_mb=16384.0))
+    rep = scalar_cell(engine, template,
+                      candidate_sets(template, 1, seed=9)[0],
+                      PoissonArrivals(1.0, 8, seed=1).times())
+    assert rep.latencies is rep.latencies            # no rebuild per call
+    assert rep.instances is rep.instances
+    assert rep.total_cost == rep.total_cost
+    assert rep.total_cost == sum(r.cost for r in rep.instances)
+    assert rep.total_queue_delay == \
+        sum(r.queue_delay for r in rep.instances)
+    assert rep.slo_attainment(5.0) == rep.slo_attainment(5.0)
+    # object view agrees with the arrays
+    for i, r in enumerate(rep.instances):
+        assert r.uid == i
+        assert r.e2e == rep.latencies[i]
+        assert r.cost == rep.costs[i]
+        assert r.failed == rep.failed_mask[i]
+
+
+def test_report_legacy_instances_constructor_roundtrips():
+    from repro.core.engine import FleetReport, InstanceResult
+
+    rows = [InstanceResult(uid=0, arrival=0.0, finish=2.0, e2e=2.0,
+                           queue_delay=0.5, cold_delay=0.0, cost=1.25,
+                           failed=False),
+            InstanceResult(uid=1, arrival=1.0, finish=math.inf, e2e=math.inf,
+                           queue_delay=0.0, cold_delay=0.0, cost=0.0,
+                           failed=True)]
+    rep = FleetReport(instances=rows, makespan=2.0,
+                      cpu_utilization=0.0, mem_utilization=0.0,
+                      queue_delay_by_function={})
+    assert rep.instances == rows
+    assert np.array_equal(rep.latencies, [2.0, math.inf])
+    assert rep.slo_attainment(3.0) == 0.5
+    assert rep.total_cost == 1.25
+    assert rep.p50 == math.inf or rep.p50 == 2.0   # interpolation defined
+    assert not math.isnan(rep.p99)
