@@ -356,7 +356,11 @@ class AdaptiveCampaign:
         replay path (:meth:`Campaign.replay_configs_many` →
         :meth:`FleetEngine.run_many` on the campaign's cached engine),
         so every settle is one vectorized fleet evaluation instead of
-        a fresh engine + per-event Python replay."""
+        a fresh engine + per-event Python replay — including campaigns
+        replayed on finite clusters or with cold starts, which the
+        engine's constrained plane now replays table-driven off one
+        response-surface call (only non-``batch_safe`` backends still
+        serialize; :meth:`FleetEngine.batch_eligibility` says why)."""
         res = cell.result
         replay = self._campaign.replay_configs_many(
             cell.task, [res.configs], cell.arrival_seed)[0]

@@ -66,15 +66,28 @@ class BaseBackend:
 
     ``deterministic`` declares that invocations are pure functions of
     the node's config (no RNG/measurement state, so call order and
-    batching never change results). Only backends that opt in are
-    eligible for the fleet engine's candidate-vectorized replay plane
-    (``FleetEngine.run_many``); everything else takes the exact
-    serial fallback. False by default — opaque callables must not be
-    assumed pure.
+    batching never change results). ``batch_safe`` is the weaker gate
+    the fleet engine's candidate-vectorized replay plane
+    (``FleetEngine.run_many``) actually checks: deterministic backends
+    qualify outright, and a *stochastic* backend may opt in by
+    implementing the paired replay-stream contract
+    (``config_surface`` + ``replay_noise``; see
+    :class:`repro.serverless.platform.StochasticBackend`) — its noise
+    then keys on the (instance, function) coordinate instead of call
+    order, so batched replays are reproducible paired comparisons.
+    Everything else takes the exact serial fallback. False by default
+    — opaque callables must not be assumed pure.
     """
 
     has_clamped: bool = False
     deterministic: bool = False
+
+    @property
+    def batch_safe(self) -> bool:
+        """May ``FleetEngine.run_many`` evaluate whole candidate planes
+        against this backend? Deterministic backends qualify; stateful
+        ones must override (and honor the replay-stream contract)."""
+        return self.deterministic
 
     def invoke(self, node: Node) -> float:  # pragma: no cover - abstract
         raise NotImplementedError

@@ -27,6 +27,7 @@ are exactly reproducible.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -39,6 +40,8 @@ from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                PoissonArrivals)
 from repro.core.env import Environment
 from repro.core.search import SearchResult, Searcher, make_searcher
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +227,9 @@ class Campaign:
         #: cached default-spec replay engine (pricing/backend/cluster
         #: are fixed per campaign; see :meth:`_replay_engine`)
         self._engine: Optional[FleetEngine] = None
+        #: (plane, reasons) combinations already logged — replay
+        #: fallbacks are reported once each, not once per replay
+        self._fallback_logged: set = set()
 
     # -- portfolio -----------------------------------------------------
     def tasks(self) -> List[CampaignTask]:
@@ -313,6 +319,17 @@ class Campaign:
         n = n_instances if n_instances is not None else r.n_instances
         arrivals = PoissonArrivals(rate if rate is not None else r.rate,
                                    n, seed=arrival_seed, start=start)
+        elig = engine.batch_eligibility(task.template, config_sets)
+        if not elig["vectorized"]:
+            # silent serialization is how batched replay regressions
+            # hide — surface the routing once per distinct cause
+            key = (elig["plane"], tuple(elig["reasons"]))
+            if key not in self._fallback_logged:
+                self._fallback_logged.add(key)
+                logger.info(
+                    "replay_configs_many: %s plane for task %d: %s",
+                    elig["plane"], task.index,
+                    "; ".join(elig["reasons"]) or "no reason reported")
         reports = engine.run_many(task.template, list(config_sets),
                                   [arrivals.times()], carry=carry)
         return [ReplayMetrics(

@@ -22,11 +22,16 @@ instances against a cluster model:
     not per-node Python dispatch,
   * **batched replays** — :meth:`FleetEngine.run_many` replays C
     candidate config-maps × S arrival seeds over a shared topology as
-    one vectorized evaluation: a single ``invoke_config_batch``
-    response-surface call plus a candidate-vectorized longest-path
-    sweep over the shared event skeleton, bit-identical to the looped
-    scalar path. Finite-capacity / cold-start / carry-backlog /
-    stochastic-backend cases take an exact serial fallback,
+    one vectorized evaluation: ONE ``invoke_config_batch``
+    response-surface call and ONE ``cost_batch`` pricing expression for
+    the whole plane, then either a candidate-vectorized longest-path
+    sweep (contention-free fleets; optionally a jitted ``lax.scan``
+    via ``plane_backend="jax"``) or table-driven replays of the exact
+    event loop (finite capacity, cold starts, carry collection) —
+    bit-identical to the looped scalar path either way. Stochastic
+    backends join the plane through a paired replay-noise stream; only
+    non-``batch_safe`` backends and empty templates still take the
+    serial fallback,
   * **epoch resumption** — a run can start from a :class:`FleetCarry`
     (warm containers plus still-running invocations from a previous
     bounded epoch) and emit the carry for the next epoch, so an online
@@ -53,11 +58,12 @@ import dataclasses
 import heapq
 import itertools
 import math
+import weakref
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.backend import RuntimeBackend, as_backend
+from repro.core.backend import BaseBackend, RuntimeBackend, as_backend
 from repro.core.cost import DEFAULT_PRICING, PricingModel
 from repro.core.dag import Workflow
 
@@ -371,6 +377,20 @@ class FleetReport:
 _ARRIVAL, _FINISH, _RELEASE = 0, 1, 2
 
 
+#: per-pricing-object detection cache: maps a pricing model to the
+#: (method identities, verdict) pair it was detected under, so the
+#: verdict survives engine caching but is re-detected the moment a
+#: subclass swaps/monkeypatches ``cost_batch``/``function_cost``/``rate``
+_PRICING_VERDICTS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _pricing_methods(pricing) -> tuple:
+    cls = type(pricing)
+    return (getattr(cls, "cost_batch", None),
+            getattr(cls, "function_cost", None),
+            getattr(cls, "rate", None))
+
+
 def _pricing_vectorizes(pricing) -> bool:
     """May the engine price invocations through ``pricing.cost_batch``?
 
@@ -378,16 +398,33 @@ def _pricing_vectorizes(pricing) -> bool:
     when it inherits the base one AND has not overridden the scalar
     ``function_cost``/``rate`` it mirrors — a subclass that customizes
     only the scalar path must not be silently priced with the base
-    mu-formula."""
-    cls = type(pricing)
-    cost_batch = getattr(cls, "cost_batch", None)
+    mu-formula.
+
+    The verdict is cached per *pricing object* (not per engine) and
+    keyed on the class's current method identities, so a
+    campaign-cached engine whose pricing model is swapped or mutated
+    after construction re-detects on the next use instead of serving a
+    stale per-engine snapshot."""
+    key = _pricing_methods(pricing)
+    try:
+        cached = _PRICING_VERDICTS.get(pricing)
+    except TypeError:            # unhashable/unweakrefable pricing object
+        cached = None
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    cost_batch, function_cost, rate = key
     if cost_batch is None:
-        return False
-    if cost_batch is not PricingModel.cost_batch:
-        return True
-    return (getattr(cls, "function_cost", None)
-            is PricingModel.function_cost
-            and getattr(cls, "rate", None) is PricingModel.rate)
+        verdict = False
+    elif cost_batch is not PricingModel.cost_batch:
+        verdict = True
+    else:
+        verdict = (function_cost is PricingModel.function_cost
+                   and rate is PricingModel.rate)
+    try:
+        _PRICING_VERDICTS[pricing] = (key, verdict)
+    except TypeError:
+        pass
+    return verdict
 
 
 class _FleetState:
@@ -426,14 +463,88 @@ class _FleetState:
     def instance_costs(self) -> np.ndarray:
         """Per-instance cost: executed invocations summed in
         topological-rank order (left-to-right float adds)."""
-        out = np.zeros(len(self.wfs))
-        for i, items in enumerate(self.cost_items):
-            items.sort(key=lambda kv: kv[0])
-            acc = 0.0
-            for _, c in items:
-                acc += c
-            out[i] = acc
-        return out
+        return _reduce_costs(self.cost_items, len(self.wfs))
+
+
+def _reduce_costs(cost_items: List[List[Tuple[int, float]]],
+                  n: int) -> np.ndarray:
+    """The canonical per-instance cost reduction shared by the scalar
+    event loop and the table-driven replay plane: executed invocations
+    sorted by topological rank, summed left-to-right."""
+    out = np.zeros(n)
+    for i, items in enumerate(cost_items):
+        items.sort(key=lambda kv: kv[0])
+        acc = 0.0
+        for _, c in items:
+            acc += c
+        out[i] = acc
+    return out
+
+
+class _PlannedBackend(BaseBackend):
+    """Replays a precomputed ``(runtime, failed)`` plan keyed by node
+    identity. The planned/per-cell replay paths use it to drive the
+    exact scalar event loop off ONE response-surface call: every
+    invocation looks its outcome up in the plan instead of dispatching
+    into the real backend again."""
+
+    deterministic = True
+
+    def __init__(self, plan: Dict[int, Tuple[float, bool]]):
+        self._plan = plan
+
+    def invoke_batch(self, nodes: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+        runtimes = np.empty(len(nodes), dtype=np.float64)
+        failed = np.zeros(len(nodes), dtype=bool)
+        for i, node in enumerate(nodes):
+            rt, bad = self._plan[id(node)]
+            runtimes[i] = rt
+            failed[i] = bad
+        return runtimes, failed
+
+
+#: lazily-built (enable_x64, jitted sweep) pair — see _jax_sweep_fn
+_JAX_SWEEP = None
+
+
+def _jax_sweep_fn():
+    """Build (once) the jitted ``lax.scan`` fleet step behind
+    ``FleetEngine(plane_backend="jax")``: one scan iteration per
+    topological rank advances the (candidates, instances, nodes)
+    finish-time tensor as a single device program. Import of jax is
+    deferred to first use so numpy-only deployments never pay for it."""
+    global _JAX_SWEEP
+    if _JAX_SWEEP is None:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.experimental import enable_x64
+
+        @jax.jit
+        def sweep(t_all, rt, order_idx, pred_idx, pred_mask):
+            finish0 = jnp.zeros((rt.shape[0], t_all.shape[0], rt.shape[1]),
+                                dtype=rt.dtype)
+
+            def step(fin, x):
+                v, pidx, pmask, rt_v = x
+                # a source has no live predecessor: its start is the
+                # arrival instant, everything else max-reduces over
+                # its predecessors' finishes — the same recurrence the
+                # numpy sweep runs per node
+                pf = jnp.where(pmask[None, None, :],
+                               fin[:, :, pidx], -jnp.inf)
+                start = jnp.max(pf, axis=-1)
+                start = jnp.where(jnp.isneginf(start),
+                                  t_all[None, :], start)
+                return fin.at[:, :, v].set(start + rt_v[:, None]), None
+
+            fin, _ = lax.scan(step, finish0,
+                              (order_idx, pred_idx, pred_mask,
+                               rt[:, order_idx].T))
+            return fin.max(axis=2)
+
+        _JAX_SWEEP = (enable_x64, sweep)
+    return _JAX_SWEEP
 
 
 class FleetEngine:
@@ -442,12 +553,28 @@ class FleetEngine:
     def __init__(self, backend: RuntimeBackend, *,
                  pricing: PricingModel = DEFAULT_PRICING,
                  cluster: ClusterModel = INFINITE_CLUSTER,
-                 cold_start: ColdStartModel = NO_COLD_START):
+                 cold_start: ColdStartModel = NO_COLD_START,
+                 plane_backend: str = "numpy"):
         self.backend = as_backend(backend)
         self.pricing = pricing
         self.cluster = cluster
         self.cold_start = cold_start
-        self._pricing_vectorized = _pricing_vectorizes(pricing)
+        if plane_backend not in ("numpy", "jax"):
+            raise ValueError(
+                f"plane_backend must be 'numpy' or 'jax', got "
+                f"{plane_backend!r}")
+        #: which array engine evaluates the contention-free replay
+        #: plane's longest-path sweep; ``"jax"`` runs a jitted
+        #: ``lax.scan`` over topological ranks (x64) instead of the
+        #: numpy loop — same recurrence, device-compiled
+        self.plane_backend = plane_backend
+
+    @property
+    def _pricing_vectorized(self) -> bool:
+        # resolved per use (cached per pricing *object*, see
+        # _pricing_vectorizes) so swapping/mutating the pricing model on
+        # a cached engine re-detects instead of serving a stale verdict
+        return _pricing_vectorizes(self.pricing)
 
     # -- public API ----------------------------------------------------
     def run(self, workflows: Sequence[Workflow],
@@ -586,20 +713,42 @@ class FleetEngine:
         returned reports are **bit-identical** to that scalar loop.
         Reports come back candidate-major: ``reports[c * S + s]``.
 
-        When the cluster is infinite, cold starts are off, the carry
-        holds no in-flight reservations and the backend is a
-        deterministic response surface with ``invoke_config_batch``,
-        instances never interact, so the whole C×S plane collapses to
-        ONE C×V response-surface call plus a candidate-vectorized
-        longest-path sweep over the shared event skeleton (no template
-        copies, no heap, no per-event Python). Finite-capacity,
-        cold-start, carry-backlog and stochastic/opaque-backend cases
-        genuinely serialize and take the exact looped-``run`` fallback.
+        Any ``batch_safe`` backend exposing ``invoke_config_batch``
+        evaluates the whole C×V response surface in ONE call and prices
+        it in ONE ``cost_batch`` expression; the plane the cells then
+        replay through depends on what actually binds
+        (:meth:`batch_eligibility` reports the routing):
 
-        Unlike ``run``, the vectorized path does not write runtimes
-        back onto any workflow (there are no per-instance copies to
-        write to); callers that need mutated workflows should use
-        ``run`` directly.
+          * **fast** — infinite cluster, cold starts off, no carried
+            backlog to re-enact: instances never interact, so the plane
+            collapses to a candidate-vectorized longest-path sweep over
+            the shared event skeleton (no heap, no per-event Python;
+            ``plane_backend="jax"`` runs the sweep as a jitted
+            ``lax.scan``),
+          * **constrained** — finite capacity, cold starts, or
+            ``collect_carry``: cells replay the exact scalar event loop
+            *table-driven* off the precomputed runtime/cost planes —
+            zero backend or pricing calls, zero template copies inside
+            the loops,
+          * **planned** — the pricing model does not vectorize: cells
+            replay through per-instance workflow copies against the
+            precomputed runtime plan so custom scalar pricing sees real
+            node objects,
+          * **serial** — an empty template or a backend that is not
+            ``batch_safe`` (opaque/stateful with no replay-stream
+            contract) genuinely serializes: the exact looped-``run``
+            fallback.
+
+        A stochastic backend that honors the paired replay-stream
+        contract (``config_surface`` + ``replay_noise``) is replayed as
+        a paired experiment: one noise tensor per plane, keyed by
+        (instance, function) and shared across candidates, so the same
+        configuration in two candidate slots scores identically.
+
+        Unlike ``run``, the batched paths do not write runtimes back
+        onto any workflow (there are no per-instance copies to write
+        to); callers that need mutated workflows should use ``run``
+        directly.
         """
         config_sets = list(config_sets)
         times_list = [arrival_times(a) for a in arrival_sets]
@@ -610,23 +759,155 @@ class FleetEngine:
                 if name not in template.nodes:   # match apply_configs
                     raise KeyError(name)
 
-        # On an infinite cluster with cold starts off, a carry is inert
-        # except for its busy reservations' release events, which only
-        # extend the measured makespan — the vectorized plane
-        # reproduces that analytically, so carries stay vectorizable.
-        vectorizable = (
-            not self.cluster.finite
-            and self.cold_start.delay_s == 0.0
-            and not collect_carry
-            and len(template) > 0
-            and getattr(self.backend, "deterministic", False)
-            and hasattr(self.backend, "invoke_config_batch")
-            and self._pricing_vectorized)
-        if not vectorizable:
+        plane = self._plan_replay(template, collect_carry)["plane"]
+        if plane == "serial":
             return self._run_many_serial(template, config_sets, times_list,
                                          carry, collect_carry)
+
+        nodes, names, cpu, mem = self._candidate_arrays(template, config_sets)
+        if any(len(t) for t in times_list):
+            self._check_candidates_placeable(template, config_sets, cpu, mem)
+        if getattr(self.backend, "deterministic", False):
+            # ONE response-surface call for the whole C×V plane
+            runtimes, failed = self.backend.invoke_config_batch(
+                nodes, cpu, mem)
+            noise = None
+        else:
+            # paired replay-stream contract: noise-free surface plus
+            # ONE (instances, functions) noise draw shared by all
+            # candidates — a paired experiment across the batch
+            runtimes, failed = self.backend.config_surface(nodes, cpu, mem)
+            n_total = sum(len(t) for t in times_list)
+            noise = self.backend.replay_noise(n_total, len(nodes))
+        runtimes = np.asarray(runtimes, dtype=np.float64)
+        failed = np.asarray(failed, dtype=bool)
+
+        if plane == "planned":
+            return self._run_many_planned(template, config_sets, times_list,
+                                          carry, collect_carry, names,
+                                          runtimes, failed, noise)
+        if plane == "constrained":
+            return self._run_many_constrained(template, config_sets,
+                                              times_list, carry,
+                                              collect_carry, names, cpu, mem,
+                                              runtimes, failed, noise)
         return self._run_many_vectorized(template, config_sets, times_list,
-                                         carry)
+                                         carry, names, cpu, mem,
+                                         runtimes, failed, noise)
+
+    def _plan_replay(self, template: Workflow, collect_carry: bool) -> dict:
+        """Route a ``run_many`` call to its replay plane; shared with
+        :meth:`batch_eligibility` so the diagnostic can never disagree
+        with the router."""
+        backend = self.backend
+        deterministic = getattr(backend, "deterministic", False)
+        batch_safe = getattr(backend, "batch_safe", deterministic)
+        reasons: List[str] = []
+        if len(template) == 0:
+            reasons.append("empty template (trivial scalar runs)")
+        if not batch_safe:
+            reasons.append(
+                "backend is not batch_safe (stateful/opaque with no "
+                "paired replay-stream contract)")
+        elif not hasattr(backend, "invoke_config_batch"):
+            reasons.append("backend lacks invoke_config_batch")
+        elif not deterministic and not (hasattr(backend, "config_surface")
+                                        and hasattr(backend,
+                                                    "replay_noise")):
+            reasons.append(
+                "stochastic backend is batch_safe but lacks the "
+                "config_surface/replay_noise replay-stream contract")
+        if reasons:
+            return {"plane": "serial", "reasons": reasons}
+        if not self._pricing_vectorized:
+            return {"plane": "planned", "reasons": [
+                "pricing model does not vectorize (scalar overrides "
+                "without a matching cost_batch)"]}
+        constrained = []
+        if self.cluster.finite:
+            constrained.append("finite cluster capacity")
+        if self.cold_start.delay_s > 0.0:
+            constrained.append("cold starts enabled")
+        if collect_carry:
+            constrained.append("collect_carry requested")
+        if constrained:
+            return {"plane": "constrained", "reasons": constrained}
+        return {"plane": "fast", "reasons": []}
+
+    def batch_eligibility(self, template: Workflow,
+                          config_sets: Sequence[Dict[str, "ResourceConfig"]],
+                          *, collect_carry: bool = False,
+                          probe_candidates: bool = False) -> dict:
+        """Why would (or wouldn't) :meth:`run_many` vectorize this
+        replay? Returns::
+
+            {"plane": "fast" | "constrained" | "planned" | "serial",
+             "vectorized": bool,   # fast/constrained plane
+             "reasons": [...],     # what routed it off the fast plane
+             "serial_candidates": None | [candidate indices]}
+
+        ``reasons`` names the binding constraints (finite cluster, cold
+        starts, carry collection, backend gate, pricing model). With
+        ``probe_candidates=True`` the response surface is evaluated
+        (one ``invoke_config_batch``/``config_surface`` call — counts
+        against backend invocation tallies) to also report which
+        candidates have unbounded (inf-runtime) failures; on the fast
+        plane those cells replay per-cell off the precomputed plan
+        instead of the longest-path sweep. Purely diagnostic — no
+        fleet is run."""
+        config_sets = list(config_sets)
+        plan = self._plan_replay(template, collect_carry)
+        out = {"plane": plan["plane"],
+               "vectorized": plan["plane"] in ("fast", "constrained"),
+               "reasons": list(plan["reasons"]),
+               "serial_candidates": None}
+        if (probe_candidates and config_sets
+                and plan["plane"] != "serial"):
+            nodes, _, cpu, mem = self._candidate_arrays(template, config_sets)
+            if getattr(self.backend, "deterministic", False):
+                runtimes, _ = self.backend.invoke_config_batch(
+                    nodes, cpu, mem)
+            else:
+                runtimes, _ = self.backend.config_surface(nodes, cpu, mem)
+            bad = [int(i) for i in np.flatnonzero(
+                ~np.isfinite(np.asarray(runtimes)).all(axis=1))]
+            out["serial_candidates"] = bad
+            if bad and plan["plane"] == "fast":
+                out["reasons"].append(
+                    f"candidates {bad} have unbounded (inf-runtime) "
+                    "failures; their cells replay per-cell off the "
+                    "precomputed plan")
+        return out
+
+    def _candidate_arrays(self, template, config_sets):
+        """(nodes, names, cpu, mem): the shared node list plus (C, V)
+        config arrays, quantized exactly as ``Workflow.copy`` +
+        ``apply_configs`` hand the scalar path."""
+        nodes = list(template.nodes.values())
+        names = [n.name for n in nodes]
+        n_cand, n_nodes = len(config_sets), len(nodes)
+        cpu = np.empty((n_cand, n_nodes))
+        mem = np.empty((n_cand, n_nodes))
+        for ci, configs in enumerate(config_sets):
+            for vi, node in enumerate(nodes):
+                cfg = configs.get(node.name, node.config).copy()
+                cpu[ci, vi] = cfg.cpu
+                mem[ci, vi] = cfg.mem
+        return nodes, names, cpu, mem
+
+    def _check_candidates_placeable(self, template, config_sets,
+                                    cpu, mem) -> None:
+        """Raise the scalar path's never-placeable ValueError for the
+        first offending candidate (identical message, via the same
+        per-workflow check)."""
+        if not self.cluster.finite:
+            return
+        bad = ((cpu > self.cluster.total_cpu)
+               | (mem > self.cluster.total_mem_mb))
+        for ci in np.flatnonzero(bad.any(axis=1)):
+            wf = template.copy()
+            wf.apply_configs(config_sets[int(ci)])
+            self._check_placeable(wf)
 
     def _run_many_serial(self, template, config_sets, times_list,
                          carry, collect_carry) -> List[FleetReport]:
@@ -648,32 +929,303 @@ class FleetEngine:
             wfs.append(wf)
         return self.run(wfs, times, carry=carry, collect_carry=collect_carry)
 
-    def _run_many_vectorized(self, template, config_sets, times_list,
-                             carry) -> List[FleetReport]:
-        nodes = list(template.nodes.values())
-        names = [n.name for n in nodes]
-        n_cand, n_nodes = len(config_sets), len(nodes)
-        cpu = np.empty((n_cand, n_nodes))
-        mem = np.empty((n_cand, n_nodes))
+    def _run_many_planned(self, template, config_sets, times_list, carry,
+                          collect_carry, names, runtimes, failed,
+                          noise) -> List[FleetReport]:
+        """Pricing model doesn't vectorize: replay every cell through
+        per-instance workflow copies so custom scalar ``function_cost``
+        sees real node objects — but drive the event loops off the
+        caller's ONE response-surface call instead of re-dispatching
+        into the backend per admission round."""
+        counts = [len(t) for t in times_list]
+        offsets = [0]
+        for c in counts:
+            offsets.append(offsets[-1] + c)
+        reports: List[FleetReport] = []
         for ci, configs in enumerate(config_sets):
-            for vi, node in enumerate(nodes):
-                # .copy() so the lattice quantization matches what
-                # Workflow.copy() + apply_configs hand the scalar path
-                cfg = configs.get(node.name, node.config).copy()
-                cpu[ci, vi] = cfg.cpu
-                mem[ci, vi] = cfg.mem
-        runtimes, failed = self.backend.invoke_config_batch(nodes, cpu, mem)
+            for si, times in enumerate(times_list):
+                reports.append(self._run_one_planned(
+                    template, configs, times, carry, collect_carry,
+                    names, runtimes[ci], failed[ci], noise, offsets[si]))
+        return reports
+
+    def _run_one_planned(self, template, configs, times, carry,
+                         collect_carry, names, rt_row, failed_row, noise,
+                         offset) -> FleetReport:
+        """One cell replayed through the exact scalar event loop, with
+        the backend swapped for the precomputed (runtime, failed) plan.
+        Bit-identical to ``_run_one_serial`` for surface backends
+        (elementwise surface => same floats, same event bookkeeping);
+        the vehicle for cells that can't join a vectorized sweep
+        (single-instance cells, unbounded-failure candidates,
+        non-vectorizing pricing)."""
+        col = {name: i for i, name in enumerate(names)}
+        wfs = []
+        plan: Dict[int, Tuple[float, bool]] = {}
+        for i in range(len(times)):
+            wf = template.copy()
+            wf.apply_configs(configs)
+            if noise is None:
+                rt_i = rt_row
+            else:
+                rt_i = np.where(failed_row, rt_row,
+                                rt_row * noise[offset + i])
+            for name, node in wf.nodes.items():
+                v = col[name]
+                plan[id(node)] = (float(rt_i[v]), bool(failed_row[v]))
+            wfs.append(wf)
+        shadow = FleetEngine(_PlannedBackend(plan), pricing=self.pricing,
+                             cluster=self.cluster,
+                             cold_start=self.cold_start)
+        return shadow.run(wfs, times, carry=carry,
+                          collect_carry=collect_carry)
+
+    def _run_many_constrained(self, template, config_sets, times_list,
+                              carry, collect_carry, names, cpu, mem,
+                              runtimes, failed, noise) -> List[FleetReport]:
+        """Finite-capacity / cold-start / carry-collecting cells: the
+        exact scalar event loop, table-driven. The whole plane's
+        runtimes come from the caller's ONE response-surface call and
+        are priced in ONE ``cost_batch`` expression here; the per-cell
+        loops then run pure-Python bookkeeping — zero backend or
+        pricing calls, zero template copies, zero per-instance object
+        churn inside the event loops."""
+        topo = self._topology_tables(template, names)
+        counts = [len(t) for t in times_list]
+        offsets = [0]
+        for c in counts:
+            offsets.append(offsets[-1] + c)
+        if noise is None:
+            cost_plane = self.pricing.cost_batch(runtimes, cpu, mem)
+        else:
+            # failing invocations keep their deterministic thrash time
+            # (the same masking StochasticBackend._noise_batch applies)
+            rt_full = np.where(failed[:, None, :], runtimes[:, None, :],
+                               runtimes[:, None, :] * noise[None, :, :])
+            cost_full = self.pricing.cost_batch(rt_full, cpu[:, None, :],
+                                                mem[:, None, :])
+        reports: List[FleetReport] = []
+        for ci in range(len(config_sets)):
+            cpu_row = cpu[ci].tolist()
+            mem_row = mem[ci].tolist()
+            failed_row = failed[ci].tolist()
+            if noise is None:
+                # instances of one candidate share a row: alias it
+                rt_shared = runtimes[ci].tolist()
+                cost_shared = cost_plane[ci].tolist()
+            for si, times in enumerate(times_list):
+                m = counts[si]
+                if noise is None:
+                    rt_rows = [rt_shared] * m
+                    cost_rows = [cost_shared] * m
+                else:
+                    seg = slice(offsets[si], offsets[si] + m)
+                    rt_rows = rt_full[ci, seg].tolist()
+                    cost_rows = cost_full[ci, seg].tolist()
+                reports.append(self._run_cell_table(
+                    template, times, carry, collect_carry, names, topo,
+                    cpu_row, mem_row, rt_rows, [failed_row] * m,
+                    cost_rows))
+        return reports
+
+    def _topology_tables(self, template, names):
+        """Static per-template tables for the table-driven event loop,
+        column-indexed in node insertion order (the order ``names``
+        lists and the scalar path walks): topological rank per column,
+        successor/predecessor-count/source columns in the exact
+        iteration order the scalar loop uses, and per-function
+        queue-delay keys."""
+        col = {name: i for i, name in enumerate(names)}
+        rank_of = [0] * len(names)
+        for k, name in enumerate(template.topological_order()):
+            rank_of[col[name]] = k
+        succs = [[col[s] for s in template.successors(name)]
+                 for name in names]
+        pred_count = [len(template.predecessors(name)) for name in names]
+        sources = [col[s] for s in template.sources()]
+        fn_keys = [f"{template.name}/{name}" for name in names]
+        return rank_of, succs, pred_count, sources, fn_keys
+
+    def _run_cell_table(self, template, times, carry, collect_carry,
+                        names, topo, cpu_row, mem_row, rt_rows,
+                        failed_rows, cost_rows) -> FleetReport:
+        """One (candidate, arrival-set) cell of the constrained plane:
+        a faithful mirror of :meth:`run`'s event loop — same heap
+        tuples, same tie-breaking sequence numbers, same float
+        accumulation order, same FIFO admission with the same-instant
+        re-admission round — with every backend/pricing dispatch
+        replaced by a table lookup. ``rt_rows``/``failed_rows``/
+        ``cost_rows`` hold one row of Python floats per instance
+        (aliased to one shared row on deterministic planes)."""
+        m = len(times)
+        if m == 0:
+            out = None
+            if collect_carry:
+                out = (carry.pruned(carry.clock) if carry is not None
+                       else FleetCarry())
+            return self._empty_report(carry_out=out)
+        rank_of, succs, pred_count, sources, fn_keys = topo
+        tname = template.name
+        cold_delay_s = self.cold_start.delay_s
+        keep_alive_s = self.cold_start.keep_alive_s
+        total_cpu = self.cluster.total_cpu
+        total_mem = self.cluster.total_mem_mb
+
+        arrival = np.array(times, dtype=np.float64)
+        finish = np.zeros(m)
+        queue_delay = np.zeros(m)
+        cold_delay = np.zeros(m)
+        failed_i = np.zeros(m, dtype=bool)
+        dead = np.zeros(m, dtype=bool)
+        remaining = [list(pred_count) for _ in range(m)]
+        cost_items: List[List[Tuple[int, float]]] = [[] for _ in range(m)]
+
+        seq = itertools.count()
+        events: List[Tuple[float, int, int, int, object]] = [
+            (float(t), next(seq), _ARRIVAL, uid, None)
+            for uid, t in enumerate(times)
+        ]
+        pending: collections.deque = collections.deque()
+        warm: Dict[tuple, List[List[float]]] = collections.defaultdict(list)
+        used_cpu = used_mem = 0.0
+        inv_log: Optional[List[Tuple[float, float, float]]] = \
+            [] if collect_carry else None
+        if carry is not None:
+            t_min = float(arrival.min())
+            for key, pool in carry.warm.items():
+                warm[key] = [list(c) for c in pool]
+            for fin_t, cpu_r, mem_r in carry.busy:
+                if fin_t <= t_min:
+                    continue            # released before this run starts
+                used_cpu += cpu_r
+                used_mem += mem_r
+                events.append((fin_t, next(seq), _RELEASE, -1,
+                               (cpu_r, mem_r)))
+                if inv_log is not None:
+                    inv_log.append((fin_t, cpu_r, mem_r))
+        heapq.heapify(events)
+        t0 = float(events[0][0]) if events else 0.0
+        t_last, cpu_area, mem_area = t0, 0.0, 0.0
+        per_fn_queue: Dict[str, float] = collections.defaultdict(float)
+
+        while events:
+            t = events[0][0]
+            cpu_area += used_cpu * (t - t_last)
+            mem_area += used_mem * (t - t_last)
+            t_last = t
+            while events and events[0][0] == t:
+                _, _, kind, uid, payload = heapq.heappop(events)
+                if kind == _RELEASE:
+                    cpu_r, mem_r = payload
+                    used_cpu -= cpu_r
+                    used_mem -= mem_r
+                    continue
+                if kind == _ARRIVAL:
+                    for v in sources:
+                        pending.append((t, uid, v))
+                else:
+                    v = payload
+                    used_cpu -= cpu_row[v]
+                    used_mem -= mem_row[v]
+                    if cold_delay_s > 0.0 and not failed_rows[uid][v]:
+                        warm[(tname, names[v])].append(
+                            [t, t + keep_alive_s])
+                    finish[uid] = max(finish[uid], t)
+                    if dead[uid]:
+                        continue
+                    rem = remaining[uid]
+                    for s in succs[v]:
+                        rem[s] -= 1
+                        if rem[s] == 0:
+                            pending.append((t, uid, s))
+            # FIFO admission — the _start_pending loop, table-driven
+            while True:
+                startable: List[Tuple[float, int, int]] = []
+                while pending:
+                    ready_t, uid, v = pending[0]
+                    if dead[uid]:
+                        pending.popleft()
+                        continue
+                    if (used_cpu + cpu_row[v] > total_cpu
+                            or used_mem + mem_row[v] > total_mem):
+                        break
+                    pending.popleft()
+                    used_cpu += cpu_row[v]
+                    used_mem += mem_row[v]
+                    startable.append((ready_t, uid, v))
+                if not startable:
+                    break
+                released = False
+                for ready_t, uid, v in startable:
+                    rt = rt_rows[uid][v]
+                    wait = t - ready_t
+                    queue_delay[uid] += wait
+                    per_fn_queue[fn_keys[v]] += wait
+                    if failed_rows[uid][v]:
+                        failed_i[uid] = True
+                    if not math.isfinite(rt):
+                        # unbounded failure: release the slot, trigger
+                        # a same-instant re-admission round
+                        used_cpu -= cpu_row[v]
+                        used_mem -= mem_row[v]
+                        dead[uid] = True
+                        released = True
+                        continue
+                    delay = 0.0
+                    if cold_delay_s > 0.0 and not self._take_warm(
+                            (tname, names[v]), t, warm):
+                        delay = cold_delay_s
+                    cold_delay[uid] += delay
+                    cost_items[uid].append((rank_of[v],
+                                            cost_rows[uid][v]))
+                    if inv_log is not None:
+                        inv_log.append((t + delay + rt, cpu_row[v],
+                                        mem_row[v]))
+                    heapq.heappush(events,
+                                   (t + delay + rt, next(seq), _FINISH,
+                                    uid, v))
+                if not released:
+                    break
+
+        stranded = {uid for _, uid, _ in pending if not dead[uid]}
+        if stranded:
+            raise RuntimeError(
+                f"scheduler stranded work for instances {sorted(stranded)}")
+        carry_out = None
+        if collect_carry:
+            carry_out = FleetCarry(
+                clock=t_last,
+                warm={k: [list(c) for c in pool]
+                      for k, pool in warm.items() if pool},
+                busy=list(inv_log))
+        return self._report_arrays(
+            arrival=arrival, finish=finish, queue_delay=queue_delay,
+            cold_delay=cold_delay, failed=failed_i, dead=dead,
+            costs=_reduce_costs(cost_items, m), t0=t0, t_end=t_last,
+            cpu_area=cpu_area, mem_area=mem_area,
+            per_fn_queue=dict(per_fn_queue), carry_out=carry_out)
+
+    def _run_many_vectorized(self, template, config_sets, times_list,
+                             carry, names, cpu, mem, runtimes, failed,
+                             noise) -> List[FleetReport]:
+        n_cand = len(config_sets)
+        n_seeds = len(times_list)
+        counts = [len(t) for t in times_list]
+        offsets = [0]
+        for c in counts:
+            offsets.append(offsets[-1] + c)
         finite = np.isfinite(runtimes).all(axis=1)
 
-        n_seeds = len(times_list)
         reports: List[Optional[FleetReport]] = [None] * (n_cand * n_seeds)
         # a candidate with an unbounded (inf-runtime) failure kills its
         # instances mid-flight — downstream work never runs, which the
-        # longest-path plane cannot express: serialize those candidates
+        # longest-path plane cannot express: those cells replay the
+        # exact event loop off the precomputed plan (no backend calls)
         for ci in np.flatnonzero(~finite):
             for si, times in enumerate(times_list):
-                reports[ci * n_seeds + si] = self._run_one_serial(
-                    template, config_sets[ci], times, carry, False)
+                reports[ci * n_seeds + si] = self._run_one_planned(
+                    template, config_sets[ci], times, carry, False,
+                    names, runtimes[ci], failed[ci], noise, offsets[si])
         live = np.flatnonzero(finite)
         if not live.size:
             return reports
@@ -681,43 +1233,58 @@ class FleetEngine:
         rt = runtimes[live]                       # (C', V)
         col = {name: i for i, name in enumerate(names)}
         order = template.topological_order()
+        t_all = np.concatenate(times_list) if times_list else \
+            np.empty(0)
+        cand_failed = failed[live].any(axis=1)
+
         # per-candidate cost of one instance: executed invocations
         # summed in topological-rank order — the same left-to-right
-        # float adds _FleetState.instance_costs performs
-        node_cost = self.pricing.cost_batch(rt, cpu[live], mem[live])
-        cand_cost = np.zeros(live.size)
-        for name in order:
-            cand_cost = cand_cost + node_cost[:, col[name]]
-        cand_failed = failed[live].any(axis=1)
+        # float adds _FleetState.instance_costs performs. On the paired
+        # stochastic plane the cost gains an instance axis (noise is
+        # per (instance, function), shared across candidates).
+        if noise is None:
+            node_cost = self.pricing.cost_batch(rt, cpu[live], mem[live])
+            cand_cost = np.zeros(live.size)
+            for name in order:
+                cand_cost = cand_cost + node_cost[:, col[name]]
+            rt_col = lambda name: rt[:, col[name]][:, None]
+        else:
+            rt_eff = np.where(failed[live][:, None, :], rt[:, None, :],
+                              rt[:, None, :] * noise[None, :, :])
+            node_cost = self.pricing.cost_batch(
+                rt_eff, cpu[live][:, None, :], mem[live][:, None, :])
+            cand_cost = np.zeros((live.size, t_all.size))
+            for name in order:
+                cand_cost = cand_cost + node_cost[:, :, col[name]]
+            rt_col = lambda name: rt_eff[:, :, col[name]]
 
         # shared event skeleton: absolute finish of node v for every
         # (candidate, instance) — sources start at the arrival instant,
         # successors at the max of their predecessors' finishes, which
         # is exactly the event-loop recurrence (t + rt per hop)
-        t_all = np.concatenate(times_list) if times_list else \
-            np.empty(0)
-        finish_by_node: Dict[str, np.ndarray] = {}
-        for name in order:
-            preds = template.predecessors(name)
-            if preds:
-                start = finish_by_node[preds[0]]
-                for p in preds[1:]:
-                    start = np.maximum(start, finish_by_node[p])
-            else:
-                start = t_all[None, :]
-            finish_by_node[name] = start + rt[:, col[name]][:, None]
-        inst_finish = None
-        for arr in finish_by_node.values():
-            inst_finish = arr if inst_finish is None \
-                else np.maximum(inst_finish, arr)
+        if self.plane_backend == "jax" and noise is None:
+            inst_finish = self._sweep_jax(template, order, col, t_all, rt)
+        else:
+            finish_by_node: Dict[str, np.ndarray] = {}
+            for name in order:
+                preds = template.predecessors(name)
+                if preds:
+                    start = finish_by_node[preds[0]]
+                    for p in preds[1:]:
+                        start = np.maximum(start, finish_by_node[p])
+                else:
+                    start = t_all[None, :]
+                finish_by_node[name] = start + rt_col(name)
+            inst_finish = None
+            for arr in finish_by_node.values():
+                inst_finish = arr if inst_finish is None \
+                    else np.maximum(inst_finish, arr)
 
         pfq = {f"{template.name}/{name}": 0.0 for name in names}
         busy = carry.busy if carry is not None else []
-        lo = 0
         for si, times in enumerate(times_list):
-            m = len(times)
-            seg = slice(lo, lo + m)
-            lo += m
+            m = counts[si]
+            seg = slice(offsets[si], offsets[si] + m)
             for k, ci in enumerate(live):
                 idx = int(ci) * n_seeds + si
                 if m == 0:
@@ -728,10 +1295,12 @@ class FleetEngine:
                     # path, whose float associations (relative
                     # longest-path shifted by the arrival, cost in
                     # node-insertion order) differ from the absolute-
-                    # time plane in the last bits — serialize to keep
-                    # the bit-identity contract
-                    reports[idx] = self._run_one_serial(
-                        template, config_sets[ci], times, carry, False)
+                    # time plane in the last bits — replay the cell off
+                    # the plan to keep the bit-identity contract
+                    reports[idx] = self._run_one_planned(
+                        template, config_sets[ci], times, carry, False,
+                        names, runtimes[ci], failed[ci], noise,
+                        offsets[si])
                     continue
                 t0 = float(times.min())
                 t_last = float(inst_finish[k, seg].max())
@@ -741,17 +1310,40 @@ class FleetEngine:
                     if f > t0 and f > t_last:
                         t_last = float(f)
                 zeros = np.zeros(m)
+                cost = (np.full(m, cand_cost[k]) if noise is None
+                        else cand_cost[k, seg].copy())
                 reports[idx] = FleetReport.from_arrays(
                     arrival=np.array(times, dtype=np.float64),
                     finish=inst_finish[k, seg].copy(),
                     e2e=inst_finish[k, seg] - times,
                     queue_delay=zeros, cold_delay=zeros.copy(),
-                    cost=np.full(m, cand_cost[k]),
+                    cost=cost,
                     failed=np.full(m, bool(cand_failed[k]), dtype=bool),
                     makespan=max(t_last - t0, 0.0),
                     cpu_utilization=0.0, mem_utilization=0.0,
                     queue_delay_by_function=dict(pfq))
         return reports
+
+    def _sweep_jax(self, template, order, col, t_all, rt) -> np.ndarray:
+        """The fast plane's longest-path sweep as a jitted ``lax.scan``
+        over topological ranks (x64): all C×N×V finish times advance as
+        one device program — the fleet-step end state this repo aims
+        at. Same recurrence, same IEEE add/max per element as the numpy
+        sweep (validated by tests). Requires jax."""
+        enable_x64, sweep = _jax_sweep_fn()
+        order_idx = np.array([col[name] for name in order], dtype=np.int32)
+        max_p = max((len(template.predecessors(n)) for n in order),
+                    default=1)
+        max_p = max(max_p, 1)
+        pred_idx = np.zeros((len(order), max_p), dtype=np.int32)
+        pred_mask = np.zeros((len(order), max_p), dtype=bool)
+        for k, name in enumerate(order):
+            for j, p in enumerate(template.predecessors(name)):
+                pred_idx[k, j] = col[p]
+                pred_mask[k, j] = True
+        with enable_x64():
+            return np.asarray(sweep(t_all, rt, order_idx, pred_idx,
+                                    pred_mask))
 
     # -- internals -----------------------------------------------------
     def _run_degenerate(self, wf: Workflow, arrival: float) -> FleetReport:
@@ -903,9 +1495,22 @@ class FleetEngine:
 
     def _report(self, state: _FleetState, t0, t_end, cpu_area, mem_area,
                 per_fn_queue, carry_out=None) -> FleetReport:
-        dead = state.dead
-        finish = np.where(dead, math.inf, state.finish)
-        e2e = np.where(dead, math.inf, state.finish - state.arrival)
+        return self._report_arrays(
+            arrival=state.arrival, finish=state.finish,
+            queue_delay=state.queue_delay, cold_delay=state.cold_delay,
+            failed=state.failed, dead=state.dead,
+            costs=state.instance_costs(), t0=t0, t_end=t_end,
+            cpu_area=cpu_area, mem_area=mem_area,
+            per_fn_queue=per_fn_queue, carry_out=carry_out)
+
+    def _report_arrays(self, *, arrival, finish, queue_delay, cold_delay,
+                       failed, dead, costs, t0, t_end, cpu_area, mem_area,
+                       per_fn_queue, carry_out=None) -> FleetReport:
+        """Shared report assembly for the scalar event loop and the
+        table-driven cells (identical inf-substitution, utilization and
+        makespan arithmetic)."""
+        finish_out = np.where(dead, math.inf, finish)
+        e2e = np.where(dead, math.inf, finish - arrival)
         makespan = max(t_end - t0, 0.0)
         denom = self.cluster.total_cpu * makespan
         cpu_util = cpu_area / denom if denom > 0 and math.isfinite(denom) \
@@ -914,9 +1519,9 @@ class FleetEngine:
         mem_util = mem_area / denom if denom > 0 and math.isfinite(denom) \
             else 0.0
         return FleetReport.from_arrays(
-            arrival=state.arrival, finish=finish, e2e=e2e,
-            queue_delay=state.queue_delay, cold_delay=state.cold_delay,
-            cost=state.instance_costs(), failed=state.failed | dead,
+            arrival=arrival, finish=finish_out, e2e=e2e,
+            queue_delay=queue_delay, cold_delay=cold_delay,
+            cost=costs, failed=failed | dead,
             makespan=makespan, cpu_utilization=cpu_util,
             mem_utilization=mem_util,
             queue_delay_by_function=per_fn_queue, carry=carry_out)

@@ -433,15 +433,22 @@ class OnlineController:
             cold_start=self._cold_model(cond),
             start=cell.clock, carry=carry)
         env = self._serving_env(cond)
-        if not getattr(env.backend, "deterministic", False):
-            # stateful (stochastic) backend: the swap gate must stay a
-            # *paired* comparison — every candidate gets its own fresh,
-            # identically-seeded env so all see the same noise draws,
-            # exactly like the historical one-env-per-validation path
+        deterministic = getattr(env.backend, "deterministic", False)
+        if not getattr(env.backend, "batch_safe", deterministic):
+            # stateful backend with no paired replay-stream contract:
+            # the swap gate must stay a *paired* comparison — every
+            # candidate gets its own fresh, identically-seeded env so
+            # all see the same noise draws, exactly like the historical
+            # one-env-per-validation path
             return [self._campaign.replay_configs_many(
                 cell.task, [configs], seed,
                 env=self._serving_env(cond), **kwargs)[0]
                 for configs in config_sets]
+        # batch_safe covers the stochastic serving backend too: the
+        # replay plane draws ONE (instance, function) noise tensor
+        # shared by challenger and incumbent, so the C=2 validation is
+        # a paired experiment even on finite clusters with cold starts
+        # and live backlog — one run_many call instead of C
         return self._campaign.replay_configs_many(
             cell.task, config_sets, seed, env=env, **kwargs)
 

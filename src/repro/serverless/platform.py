@@ -148,6 +148,32 @@ class AnalyticBackend(BaseBackend):
                              np.asarray(mem, dtype=np.float64),
                              self._spec_arrays(nodes))
 
+    # -- batched-replay plane contract (FleetEngine.run_many) ----------
+    def config_surface(self, nodes: Sequence[Node], cpu: np.ndarray,
+                       mem: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Noise-*free* response surface for a candidate plane: the
+        deterministic part of :meth:`invoke_config_batch`, with no RNG
+        state advanced — safe for diagnostics
+        (:meth:`FleetEngine.batch_eligibility`) and for the replay
+        plane, which re-applies invocation noise from
+        :meth:`replay_noise` at the (instance, function) coordinate.
+        For the plain analytic backend this *is* ``invoke_config_batch``.
+        """
+        self.invocations += int(np.size(cpu))
+        self._suppress_noise = True
+        try:
+            return self._surface(np.asarray(cpu, dtype=np.float64),
+                                 np.asarray(mem, dtype=np.float64),
+                                 self._spec_arrays(nodes))
+        finally:
+            self._suppress_noise = False
+
+    def replay_noise(self, n_instances: int,
+                     n_nodes: int) -> Optional[np.ndarray]:
+        """Per-(instance, function) noise factors for one batched
+        replay plane; ``None`` means the surface is exact (no noise)."""
+        return None
+
 
 class StochasticBackend(AnalyticBackend):
     """Analytic surface x log-normal invocation noise (§IV validation).
@@ -158,12 +184,27 @@ class StochasticBackend(AnalyticBackend):
     scalar ``invoke`` calls (or C ``invoke_batch`` rows) consumes the
     stream — so batched candidate evaluation is bit-identical to the
     scalar path under a fixed seed (pinned by
-    ``tests/test_backend_parity.py``). The RNG is stateful, so the
-    backend is *not* ``deterministic``: replay-order-sensitive callers
-    (``FleetEngine.run_many``) take their exact serial fallback.
+    ``tests/test_backend_parity.py``).
+
+    The RNG is stateful, so the backend is *not* ``deterministic`` —
+    but it IS ``batch_safe``: it implements the fleet engine's paired
+    replay-stream contract. One :meth:`replay_noise` call per
+    ``FleetEngine.run_many`` plane draws an (instances, functions)
+    noise tensor from the backend's stream (ONE state advance per
+    plane, instance-major), and every invocation of instance *i*'s
+    function *v* — whichever candidate, whichever admission round —
+    pays factor ``noise[i, v]``. Noise keyed by coordinate instead of
+    call order makes batched replays reproducible and **paired**: all
+    candidates see identical draws, so a challenger-vs-incumbent
+    comparison is a paired experiment, and the same configuration in
+    two candidate slots scores identically (pinned by
+    ``tests/test_replay_batch.py``).
     """
 
     deterministic = False
+    #: stateful, but replay-plane-eligible via the paired-stream
+    #: contract (config_surface + replay_noise)
+    batch_safe = True
 
     def __init__(self, *, noise_sigma: float = 0.025, seed: int = 0,
                  input_scale: float = 1.0):
@@ -177,11 +218,23 @@ class StochasticBackend(AnalyticBackend):
         return rt * float(np.exp(self.rng.normal(0.0, self.noise_sigma)))
 
     def _noise_batch(self, rt: np.ndarray, ok: np.ndarray) -> np.ndarray:
-        if self.noise_sigma <= 0.0:
+        if self.noise_sigma <= 0.0 or getattr(self, "_suppress_noise",
+                                              False):
             return rt
         noise = np.exp(self.rng.normal(0.0, self.noise_sigma, size=rt.shape))
         # failing invocations are charged the deterministic thrash time
         return np.where(ok, rt * noise, rt)
+
+    def replay_noise(self, n_instances: int,
+                     n_nodes: int) -> Optional[np.ndarray]:
+        """The paired replay-stream contract: one (instances, functions)
+        log-normal factor tensor per batched replay plane, drawn
+        instance-major from the backend's stream. Candidates share the
+        tensor — see the class docstring."""
+        if self.noise_sigma <= 0.0:
+            return None
+        return np.exp(self.rng.normal(0.0, self.noise_sigma,
+                                      size=(n_instances, n_nodes)))
 
 
 class SimulatedPlatform:

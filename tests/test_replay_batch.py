@@ -4,8 +4,12 @@ The batched replay plane (C candidate config-maps × S arrival seeds
 over a shared topology) must be **bit-identical** to the looped scalar
 path — ``run([template.copy() + configs, ...], times)`` per cell — on
 every compared field, across topology families, finite and infinite
-clusters, cold starts, the carry/backlog path the online challenger
-gate uses, and the serialized unbounded-failure case.
+clusters, cold starts + keep-alive expiry, the carry/backlog path the
+online challenger gate uses (input carries and ``collect_carry``
+output), unbounded-failure candidates, mixed batches, and — under the
+paired replay-stream contract — stochastic backends, where the
+vectorized planes must match the exact event loop replaying the same
+noise plan.
 """
 import math
 
@@ -13,6 +17,7 @@ import numpy as np
 import pytest
 
 from repro.core.backend import CallableBackend
+from repro.core.cost import PricingModel
 from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                FleetEngine, PoissonArrivals)
 from repro.core.resources import ResourceConfig
@@ -100,8 +105,9 @@ def test_run_many_bit_identical_infinite_cluster(kind):
 
 @pytest.mark.parametrize("kind", list(TOPOLOGIES))
 def test_run_many_bit_identical_finite_cluster(kind):
-    """Finite capacity genuinely serializes; the exact fallback must
-    still reproduce the looped run bit-for-bit (queuing included)."""
+    """Finite capacity routes onto the table-driven constrained plane,
+    which must reproduce the looped run bit-for-bit (queuing
+    included)."""
     template = TOPOLOGIES[kind]()
     engine = make_engine(cluster=ClusterModel(total_cpu=12.0,
                                               total_mem_mb=16384.0))
@@ -198,32 +204,113 @@ def test_run_many_uses_the_vectorized_plane():
     assert len(reports) == 12
 
 
-def test_run_many_stochastic_backend_takes_exact_serial_fallback():
-    """A stateful backend must not be vectorized (draw order changes
-    results); the fallback consumes the noise stream exactly like the
-    hand-written loop."""
-    template = TOPOLOGIES["chain"]()
-    cands = candidate_sets(template, 2, seed=6)
+# -- stochastic paired replay-stream contract --------------------------
+
+class _ScalarMirrorPricing(PricingModel):
+    """Overrides scalar ``function_cost`` with the *same* values but no
+    matching ``cost_batch``: routes replays onto the planned plane (the
+    exact per-instance event loop driven off the precomputed runtime
+    plan) without changing any number."""
+
+    def function_cost(self, runtime_s, config):
+        return super().function_cost(runtime_s, config)
+
+
+def _stochastic_engine(seed, *, sigma=0.05, pricing=None, **kw):
+    return FleetEngine(StochasticBackend(noise_sigma=sigma, seed=seed),
+                       pricing=pricing or SimulatedPlatform().pricing, **kw)
+
+
+CONSTRAINED_KW = dict(cluster=ClusterModel(total_cpu=12.0,
+                                           total_mem_mb=16384.0),
+                      cold_start=ColdStartModel(delay_s=1.0,
+                                                keep_alive_s=30.0))
+
+
+@pytest.mark.parametrize("engine_kw", [{}, CONSTRAINED_KW],
+                         ids=["fast_plane", "constrained_plane"])
+def test_run_many_stochastic_same_config_scores_identically(engine_kw):
+    """The paired replay-stream contract: one (instance, function)
+    noise tensor per plane, shared across candidates — so the same
+    configuration in two candidate slots is the same experiment and
+    must score bit-identically (a per-candidate stream would break
+    the challenger gate's paired comparison)."""
+    template = TOPOLOGIES["layered"]()
+    cfg = candidate_sets(template, 1, seed=6)[0]
+    reports = _stochastic_engine(123, **engine_kw).run_many(
+        template, [cfg, cfg], arrival_sets(2))
+    assert_reports_identical(reports[0], reports[2])
+    assert_reports_identical(reports[1], reports[3])
+
+
+@pytest.mark.parametrize("engine_kw", [{}, CONSTRAINED_KW],
+                         ids=["fast_plane", "constrained_plane"])
+def test_run_many_stochastic_matches_planned_event_loop(engine_kw):
+    """Cross-plane bit-identity under noise: the vectorized planes must
+    reproduce the exact per-instance event loop replaying the same
+    plan. ``_ScalarMirrorPricing`` computes identical costs but forces
+    the planned (event-loop) plane; both engines draw the identical
+    noise tensor (same backend seed, ONE replay_noise advance per
+    plane), so every compared field must agree bit-for-bit."""
+    template = TOPOLOGIES["layered"]()
+    cands = candidate_sets(template, 3, seed=7)
     seeds = arrival_sets(2)
+    vec = _stochastic_engine(99, **engine_kw).run_many(
+        template, cands, seeds)
+    ref = _stochastic_engine(99, pricing=_ScalarMirrorPricing(),
+                             **engine_kw).run_many(template, cands, seeds)
+    for got, want in zip(vec, ref):
+        assert_reports_identical(got, want)
 
-    def engine(seed):
-        return FleetEngine(StochasticBackend(noise_sigma=0.05, seed=seed),
-                           pricing=SimulatedPlatform().pricing)
 
-    got = engine(123).run_many(template, cands, seeds)
-    ref_engine = engine(123)
-    k = 0
-    for configs in cands:
-        for times in seeds:
-            assert_reports_identical(
-                got[k], scalar_cell(ref_engine, template, configs, times))
-            k += 1
+def test_run_many_stochastic_replay_is_reproducible_and_noisy():
+    template = TOPOLOGIES["chain"]()
+    cands = candidate_sets(template, 2, seed=8)
+    seeds = arrival_sets(2)
+    a = _stochastic_engine(7).run_many(template, cands, seeds)
+    b = _stochastic_engine(7).run_many(template, cands, seeds)
+    for ra, rb in zip(a, b):                 # same seed => same plane
+        assert_reports_identical(ra, rb)
+    exact = make_engine().run_many(template, cands, seeds)
+    assert any(not np.array_equal(ra.finishes, re.finishes)
+               for ra, re in zip(a, exact))  # noise is actually applied
+    # sigma=0 declares an exact surface: bitwise the analytic plane
+    silent = _stochastic_engine(7, sigma=0.0).run_many(
+        template, cands, seeds)
+    for rs, re in zip(silent, exact):
+        assert_reports_identical(rs, re)
+
+
+def test_run_many_stochastic_consumes_one_noise_draw_per_plane():
+    """The plane must advance the backend's RNG exactly once
+    (replay_noise), never per cell/candidate — that is what makes
+    batched replays paired AND reproducible."""
+    template = TOPOLOGIES["fan"]()
+    backend = StochasticBackend(noise_sigma=0.05, seed=11)
+    draws = {"n": 0}
+    real = backend.replay_noise
+
+    def counting(n_instances, n_nodes):
+        draws["n"] += 1
+        return real(n_instances, n_nodes)
+
+    backend.replay_noise = counting
+    backend.invoke_batch = lambda *a, **k: pytest.fail(
+        "per-cell invoke_batch on the batched replay plane")
+    engine = FleetEngine(backend, pricing=SimulatedPlatform().pricing,
+                         **CONSTRAINED_KW)
+    reports = engine.run_many(template, candidate_sets(template, 3, seed=9),
+                              arrival_sets(2))
+    assert draws["n"] == 1
+    assert len(reports) == 6
 
 
 class _NoClampBackend(AnalyticBackend):
-    """Deterministic surface whose failures are unbounded (+inf): the
-    run_many plane must serialize those candidates — a dead instance
-    never runs its downstream nodes, which longest-path cannot see."""
+    """Deterministic surface whose failures are unbounded (+inf): a
+    dead instance never runs its downstream nodes, which the fast
+    plane's longest-path sweep cannot see — those candidates replay
+    per-cell off the precomputed plan (the constrained plane handles
+    them natively)."""
 
     has_clamped = False
 
@@ -247,6 +334,28 @@ def test_run_many_serializes_unbounded_failure_candidates():
     assert math.isinf(reports[2].p99)
 
 
+def test_run_many_mixed_unbounded_failures_on_finite_cluster():
+    """The production-shaped mixed batch: finite CPU+mem cluster, cold
+    starts, one healthy and one unbounded-failure candidate — the
+    constrained plane replays dead instances natively (slot release +
+    same-instant re-admission round) and must stay bit-identical."""
+    template = TOPOLOGIES["fan"]()
+    healthy = {n.name: ResourceConfig(cpu=4.0, mem=8192.0)
+               for n in template}
+    dying = {n.name: ResourceConfig(cpu=4.0, mem=128.0)
+             for n in template}
+    engine = FleetEngine(_NoClampBackend(),
+                         pricing=SimulatedPlatform().pricing,
+                         cluster=ClusterModel(total_cpu=10.0,
+                                              total_mem_mb=20480.0),
+                         cold_start=ColdStartModel(delay_s=0.5,
+                                                   keep_alive_s=20.0))
+    reports = assert_grid_identical(engine, template, [healthy, dying],
+                                    arrival_sets(2, rate=2.0))
+    assert not reports[0].failed_mask.any()
+    assert reports[2].failed_mask.all()
+
+
 def test_opaque_callable_backend_falls_back_and_matches():
     """Backends without a config-batch surface (bare oracles) keep the
     exact looped semantics."""
@@ -261,7 +370,8 @@ def test_opaque_callable_backend_falls_back_and_matches():
 def test_run_many_single_instance_cell_matches_degenerate_path():
     """A fleet of one goes through ``run``'s degenerate fast path,
     whose float associations differ from the absolute-time plane —
-    run_many must serialize that cell to stay bit-identical. Uses a
+    run_many replays that cell off the precomputed plan (through the
+    same degenerate path) to stay bit-identical. Uses a
     template whose insertion order differs from topological order so
     any accumulation-order divergence would surface."""
     from repro.core.dag import Workflow
@@ -333,6 +443,223 @@ def test_online_stochastic_validation_stays_paired():
     cfg = cells[0].configs
     a, b = ctl._validate_many(cells[0], [cfg, cfg], cond, seed=3)
     assert a == b
+
+
+def test_run_many_cold_start_keep_alive_expiry_bit_identical():
+    """Warm containers must expire mid-replay: a keep-alive shorter
+    than the arrival gaps makes later instances pay the cold delay
+    again, and the table-driven plane must mirror the scalar pool
+    bookkeeping exactly."""
+    template = TOPOLOGIES["chain"]()
+    engine = make_engine(cold_start=ColdStartModel(delay_s=2.0,
+                                                   keep_alive_s=0.75))
+    reports = assert_grid_identical(engine, template,
+                                    candidate_sets(template, 2, seed=12),
+                                    arrival_sets(2, rate=0.05))
+    # sparse arrivals + fast expiry: every instance provisions cold
+    assert all((r.cold_delays >= 2.0).all() for r in reports)
+
+
+def test_run_many_collect_carry_matches_scalar():
+    """``collect_carry=True`` routes onto the constrained plane; each
+    cell's report AND emitted carry (clock, warm pool, reservation log)
+    must equal the scalar run's exactly."""
+    template = TOPOLOGIES["layered"]()
+    engine = make_engine(cluster=ClusterModel(total_cpu=14.0,
+                                              total_mem_mb=20480.0),
+                         cold_start=ColdStartModel(delay_s=0.5,
+                                                   keep_alive_s=120.0))
+    cands = candidate_sets(template, 2, seed=13)
+    seeds = arrival_sets(2, rate=1.0)
+    reports = engine.run_many(template, cands, seeds, collect_carry=True)
+    k = 0
+    for configs in cands:
+        for times in seeds:
+            wfs = []
+            for _ in range(len(times)):
+                wf = template.copy()
+                wf.apply_configs(configs)
+                wfs.append(wf)
+            want = engine.run(wfs, times, collect_carry=True)
+            assert_reports_identical(reports[k], want)
+            assert reports[k].carry == want.carry
+            assert reports[k].carry.busy       # the backlog is real
+            k += 1
+
+
+def test_run_many_one_surface_one_pricing_call_on_constrained_plane():
+    """The constrained plane's whole C×S grid must cost ONE
+    ``invoke_config_batch`` and ONE ``cost_batch`` — the per-cell event
+    loops run off the precomputed tables with zero backend/pricing
+    dispatch."""
+    calls = {"cost": 0}
+
+    class CountingPricing(PricingModel):
+        def cost_batch(self, runtime_s, cpu, mem):
+            calls["cost"] += 1
+            return super().cost_batch(runtime_s, cpu, mem)
+
+    template = TOPOLOGIES["layered"]()
+    env = SimulatedPlatform().environment()
+    surface = {"n": 0}
+    real_cfg = env.backend.invoke_config_batch
+    env.backend.invoke_config_batch = \
+        lambda *a, **k: (surface.__setitem__("n", surface["n"] + 1)
+                         or real_cfg(*a, **k))
+    env.backend.invoke_batch = \
+        lambda *a, **k: pytest.fail("scalar invoke_batch on the "
+                                    "constrained plane")
+    engine = FleetEngine(env.backend, pricing=CountingPricing(),
+                         cluster=ClusterModel(total_cpu=14.0,
+                                              total_mem_mb=20480.0),
+                         cold_start=ColdStartModel(delay_s=0.5,
+                                                   keep_alive_s=60.0))
+    reports = engine.run_many(template, candidate_sets(template, 4, seed=14),
+                              arrival_sets(3, rate=1.0))
+    assert surface["n"] == 1
+    assert calls["cost"] == 1
+    assert len(reports) == 12
+    assert any(r.total_queue_delay > 0.0 for r in reports)
+
+
+# -- batch_eligibility diagnostic --------------------------------------
+
+def test_batch_eligibility_reports_plane_routing():
+    template = TOPOLOGIES["chain"]()
+
+    fast = make_engine().batch_eligibility(template, [])
+    assert fast == {"plane": "fast", "vectorized": True, "reasons": [],
+                    "serial_candidates": None}
+
+    constrained = make_engine(**CONSTRAINED_KW).batch_eligibility(
+        template, [])
+    assert constrained["plane"] == "constrained"
+    assert constrained["vectorized"]
+    joined = " ".join(constrained["reasons"])
+    assert "finite cluster" in joined and "cold starts" in joined
+
+    carry_plane = make_engine().batch_eligibility(template, [],
+                                                  collect_carry=True)
+    assert carry_plane["plane"] == "constrained"
+    assert any("collect_carry" in r for r in carry_plane["reasons"])
+
+    env = SimulatedPlatform().environment()
+    planned = FleetEngine(env.backend,
+                          pricing=_ScalarMirrorPricing()).batch_eligibility(
+        template, [])
+    assert planned["plane"] == "planned"
+    assert not planned["vectorized"]
+    assert any("pricing" in r for r in planned["reasons"])
+
+    opaque = FleetEngine(CallableBackend(lambda node: 0.1),
+                         pricing=env.pricing).batch_eligibility(template, [])
+    assert opaque["plane"] == "serial"
+    assert not opaque["vectorized"]
+    assert any("batch_safe" in r for r in opaque["reasons"])
+
+    from repro.core.dag import Workflow
+    empty = make_engine().batch_eligibility(Workflow("empty"), [])
+    assert empty["plane"] == "serial"
+    assert any("empty template" in r for r in empty["reasons"])
+
+    # a batch_safe stochastic backend rides the plane
+    stoch = _stochastic_engine(0, **CONSTRAINED_KW).batch_eligibility(
+        template, [])
+    assert stoch["plane"] == "constrained" and stoch["vectorized"]
+
+
+def test_batch_eligibility_probes_unbounded_failure_candidates():
+    template = TOPOLOGIES["fan"]()
+    healthy = {n.name: ResourceConfig(cpu=4.0, mem=8192.0)
+               for n in template}
+    dying = {n.name: ResourceConfig(cpu=4.0, mem=128.0)
+             for n in template}
+    engine = FleetEngine(_NoClampBackend(),
+                         pricing=SimulatedPlatform().pricing)
+    elig = engine.batch_eligibility(template, [healthy, dying],
+                                    probe_candidates=True)
+    assert elig["plane"] == "fast"
+    assert elig["serial_candidates"] == [1]
+    assert any("unbounded" in r for r in elig["reasons"])
+    # without probing, no backend call is made and no verdict is given
+    assert engine.batch_eligibility(template, [healthy, dying])[
+        "serial_candidates"] is None
+
+
+def test_campaign_logs_batched_replay_fallback(caplog):
+    """Silent serialization must be visible: Campaign.replay_configs_many
+    logs the eligibility verdict once per distinct cause."""
+    import logging
+
+    from repro.core.campaign import Campaign
+    from repro.core.env import Environment
+
+    campaign = Campaign()
+    task = campaign.tasks()[0]
+    configs = {name: ResourceConfig() for name in task.template.nodes}
+    env = Environment(CallableBackend(lambda node: 0.1))
+    with caplog.at_level(logging.INFO, logger="repro.core.campaign"):
+        campaign.replay_configs_many(task, [configs], 3, env=env,
+                                     n_instances=2)
+        campaign.replay_configs_many(task, [configs], 4, env=env,
+                                     n_instances=2)
+    hits = [r for r in caplog.records if "serial plane" in r.message]
+    assert len(hits) == 1                     # logged once per cause
+    assert "batch_safe" in hits[0].message
+    caplog.clear()
+    with caplog.at_level(logging.INFO, logger="repro.core.campaign"):
+        campaign.replay_configs_many(task, [configs], 5, n_instances=2)
+    assert not [r for r in caplog.records if "plane" in r.message]
+
+
+# -- pricing re-detection (per-pricing-object cache) -------------------
+
+def test_pricing_vectorization_redetects_after_swap_and_mutation():
+    env = SimulatedPlatform().environment()
+    engine = FleetEngine(env.backend)
+    assert engine._pricing_vectorized
+
+    class Mutant(PricingModel):
+        pass
+
+    # swapping the pricing object on a cached engine re-detects
+    engine.pricing = Mutant()
+    assert engine._pricing_vectorized          # nothing overridden yet
+    # mutating the *class* after the verdict was cached re-detects too
+    Mutant.function_cost = lambda self, runtime_s, config: 0.0
+    assert not engine._pricing_vectorized
+    del Mutant.function_cost
+    assert engine._pricing_vectorized
+
+    # and the verdict is honored end to end: the zero-cost mutant
+    # prices every replay at exactly zero via the planned plane
+    Mutant.function_cost = lambda self, runtime_s, config: 0.0
+    template = TOPOLOGIES["chain"]()
+    report = engine.run_many(template, candidate_sets(template, 1, seed=15),
+                             arrival_sets(1))[0]
+    assert report.total_cost == 0.0
+
+
+# -- the jitted lax.scan fleet step ------------------------------------
+
+def test_jax_plane_backend_matches_numpy_bitwise():
+    pytest.importorskip("jax")
+    template = TOPOLOGIES["layered"]()
+    cands = candidate_sets(template, 3, seed=16)
+    seeds = arrival_sets(2)
+    carry = FleetCarry(clock=0.0, warm={}, busy=[(700.0, 2.0, 512.0)])
+    numpy_reports = make_engine().run_many(template, cands, seeds,
+                                           carry=carry)
+    jax_reports = make_engine(plane_backend="jax").run_many(
+        template, cands, seeds, carry=carry)
+    for got, want in zip(jax_reports, numpy_reports):
+        assert_reports_identical(got, want)
+
+
+def test_unknown_plane_backend_rejected():
+    env = SimulatedPlatform().environment()
+    with pytest.raises(ValueError, match="plane_backend"):
+        FleetEngine(env.backend, plane_backend="tpu")
 
 
 # -- SoA report memoization (accessor-waste satellite) -----------------
