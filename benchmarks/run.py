@@ -25,7 +25,7 @@ def main() -> int:
         ("tpu_autotune", tpu_autotune.main),
         ("roofline_table", roofline_table.main),
         ("fleet_throughput", fleet_throughput.main),
-        ("campaign_scale", campaign_scale.main),
+        ("campaign_scale", campaign_scale.bench_main),
         ("adaptive_campaign", adaptive_campaign.bench_main),
         ("online_serving", online_serving.bench_main),
     ]

@@ -51,7 +51,8 @@ from repro.core.campaign import (Campaign, CampaignSpec, CampaignTask,
                                  PortfolioSpec, ReplayMetrics, ReplaySpec)
 from repro.core.env import Environment
 from repro.core.resources import ResourceConfig
-from repro.core.search import SearchResult, Searcher, make_searcher
+from repro.core.search import (GridResume, SearchResult, Searcher,
+                               make_searcher, run_grid_search)
 from repro.serverless.generator import (degree_bucket, topology_signature,
                                         transfer_configs)
 
@@ -125,6 +126,14 @@ class AdaptiveSpec:
     seed_samples: int = 8
     #: samples per adaptive top-up grant
     round_budget: int = 8
+    #: cells granted per allocation round. 1 (the default) is the
+    #: legacy one-grant-per-round scheduler bit-for-bit; larger values
+    #: resume the top-K scored cells *together* through the lockstep
+    #: grid plane (:func:`repro.core.search.run_grid_search`), so one
+    #: settlement round costs one batched evaluation per probe round
+    #: instead of K sequential resumes. The K grants of a round are
+    #: scored against the same pre-round state (batch settlement).
+    grants_per_round: int = 1
     #: cap on adaptive allocation rounds
     max_rounds: int = 64
     #: UCB exploration weight over sqrt(log(1+t) / (1+grants))
@@ -264,6 +273,7 @@ class AdaptiveReport:
                 "seed_rounds": self.spec.seed_rounds,
                 "seed_samples": self.spec.seed_samples,
                 "round_budget": self.spec.round_budget,
+                "grants_per_round": self.spec.grants_per_round,
                 "max_rounds": self.spec.max_rounds,
                 "warm_starts": self.spec.warm_starts,
             },
@@ -467,28 +477,48 @@ class AdaptiveCampaign:
             candidates = [c for c in cells if self._is_candidate(c)]
             if not candidates:
                 break
-            cell = max(candidates, key=lambda c: (self._score(c, t),
-                                                  -c.index))
-            grant = min(spec.round_budget, remaining)
-            before = cell.result.n_samples
-            res = cell.searcher.resume(cell.result.state, grant)
-            used = res.n_samples - before
-            cell.grants += 1
+            k = max(1, int(spec.grants_per_round))
+            picked = sorted(candidates,
+                            key=lambda c: (self._score(c, t), -c.index),
+                            reverse=True)[:k]
+            grants: List[Tuple[CellState, int, int]] = []
+            reserve = remaining
+            for cell in picked:
+                if reserve <= 0:
+                    break
+                g = min(spec.round_budget, reserve)
+                reserve -= g
+                grants.append((cell, g, cell.result.n_samples))
+            if len(grants) == 1:
+                cell, g, _ = grants[0]
+                resumed = [cell.searcher.resume(cell.result.state, g)]
+            else:
+                # batch settlement: the round's grants advance together
+                # through the lockstep grid plane — one fused backend
+                # evaluation per probe round instead of K resumes
+                resumed = run_grid_search(
+                    [GridResume(searcher=cell.searcher,
+                                state=cell.result.state, extra_budget=g)
+                     for cell, g, _ in grants]).results
             rounds += 1
-            if used == 0:
-                # the searcher declined the grant (converged / provably
-                # stuck): nothing spent, cell leaves the pool
-                cell.exhausted = True
-                cell.history.append(cell.attainment)
-                continue
-            cell.spent += used
-            remaining -= used
-            cell.result = res
-            self._settle(cell, used=used)
-            if progress is not None:
-                progress(f"round {t}: {cell.searcher_name} "
-                         f"{cell.task.kind}#{cell.task.index} +{used} "
-                         f"att={cell.attainment:.2f} remaining={remaining}")
+            for (cell, g, before), res in zip(grants, resumed):
+                used = res.n_samples - before
+                cell.grants += 1
+                if used == 0:
+                    # the searcher declined the grant (converged /
+                    # provably stuck): nothing spent, cell leaves the pool
+                    cell.exhausted = True
+                    cell.history.append(cell.attainment)
+                    continue
+                cell.spent += used
+                remaining -= used
+                cell.result = res
+                self._settle(cell, used=used)
+                if progress is not None:
+                    progress(f"round {t}: {cell.searcher_name} "
+                             f"{cell.task.kind}#{cell.task.index} +{used} "
+                             f"att={cell.attainment:.2f} "
+                             f"remaining={remaining}")
 
         spent = sum(c.spent for c in cells)
         return AdaptiveReport(

@@ -89,6 +89,28 @@ class BaseBackend:
         ones must override (and honor the replay-stream contract)."""
         return self.deterministic
 
+    def grid_fusion_key(self) -> Optional[tuple]:
+        """Lockstep grid-search fusion contract (see
+        :mod:`repro.core.gridsearch`).
+
+        Backends whose batch evaluation is a pure *surface* — identical
+        results whether nodes are evaluated per-cell or concatenated
+        across cells — may return a hashable key here; cells whose
+        backends return equal keys have their per-round probe batches
+        fused into one evaluation. A fused backend must also provide
+
+          * ``surface_tables(nodes)``  — per-node surface constants,
+          * ``surface_probe(cpu, mem, tables)`` — noise-free runtimes +
+            failure flags, advancing NO rng/counter state,
+          * ``apply_invocation_noise(rt, ok)`` — the per-call noise the
+            sequential path would have applied, advancing this
+            backend's own stream exactly once per call.
+
+        ``None`` (the default) means requests are served through this
+        backend one cell at a time — always correct, never fused.
+        """
+        return None
+
     def invoke(self, node: Node) -> float:  # pragma: no cover - abstract
         raise NotImplementedError
 

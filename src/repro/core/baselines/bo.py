@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.dag import Workflow
 from repro.core.env import Environment, Sample
+from repro.core.gridsearch import (CandidatesRequest, ExecuteRequest,
+                                   GridPlan, drive_plan)
 from repro.core.resources import (CPU_MAX, CPU_MIN, MEM_MAX_MB, MEM_MIN_MB,
                                   ResourceConfig, quantize_cpu, quantize_mem)
 
@@ -131,9 +133,9 @@ class BayesianOptimizer:
             pen += 3.0
         return sample.cost * (1.0 + self.slo_penalty * pen)
 
-    def _evaluate(self, x: np.ndarray) -> float:
+    def _evaluate_plan(self, x: np.ndarray):
         self._apply(x)
-        sample = self.env.execute(self.wf, slo=self.slo, note="bo")
+        sample = yield ExecuteRequest(wf=self.wf, slo=self.slo, note="bo")
         val = self._objective(sample)
         self.X.append(x.copy())
         self.y.append(val)
@@ -157,11 +159,11 @@ class BayesianOptimizer:
             x[2 * i + 1] = cfg.mem
         return x
 
-    def _evaluate_batch(self, xs: np.ndarray) -> None:
+    def _evaluate_batch_plan(self, xs: np.ndarray):
         """Evaluate a whole acquisition batch in ONE backend call."""
         candidates = [self._config_map(x) for x in xs]
-        samples = self.env.execute_candidates(self.wf, candidates, self.slo,
-                                              note="bo")
+        samples = yield CandidatesRequest(wf=self.wf, candidates=candidates,
+                                          slo=self.slo, note="bo")
         for x, sample in zip(xs, samples):
             # objective depends on the y-history, so append in order
             val = self._objective(sample)
@@ -199,7 +201,16 @@ class BayesianOptimizer:
         Re-entrant: calling ``run`` again with a larger ``n_rounds``
         continues from the current GP state (no re-initialization), so
         a resumed search spends exactly the extra budget.
+
+        Sequential driver over :meth:`run_plan`.
         """
+        return drive_plan(GridPlan(self.env, self.run_plan(n_rounds)))
+
+    def run_plan(self, n_rounds: int = 100):
+        """The BO loop as a sans-IO plan generator (see
+        :mod:`repro.core.gridsearch`): each design point / acquisition
+        batch is requested via ``yield``, so the sequential and
+        lockstep drivers run the identical GP decision sequence."""
         if not self.env.trace.capture_configs:
             raise ValueError(
                 "BO reads the winning configuration back from the trace "
@@ -207,22 +218,22 @@ class BayesianOptimizer:
                 "silently return empty configs")
         if not self._initialized:
             self._initialized = True
-            self._initial_design(n_rounds)
+            yield from self._initial_design_plan(n_rounds)
         while self.evaluated < n_rounds:
             cand = self._random_x(self.n_candidates)
             ei = self._expected_improvement(cand)
             if self.batch_size == 1:
-                self._evaluate(cand[int(np.argmax(ei))])
+                yield from self._evaluate_plan(cand[int(np.argmax(ei))])
             else:
                 q = min(self.batch_size, n_rounds - self.evaluated)
                 top = np.argsort(ei)[::-1][:q]       # best-EI first
-                self._evaluate_batch(cand[top])
+                yield from self._evaluate_batch_plan(cand[top])
         best = self.env.trace.best_feasible()
         if best is not None:
             self.wf.apply_configs(best.configs)
         return best
 
-    def _initial_design(self, n_rounds: int) -> None:
+    def _initial_design_plan(self, n_rounds: int):
         """Evaluate the initial design: the over-provisioned platform
         default (practitioners start from the known-safe config), then
         any transferred ``init_points``, then random points up to
@@ -234,17 +245,17 @@ class BayesianOptimizer:
             for x in ipts:
                 if self.evaluated >= n_rounds:
                     break
-                self._evaluate(x)
+                yield from self._evaluate_plan(x)
             return
         base = np.empty(self.dim)
         base[0::2], base[1::2] = CPU_MAX, MEM_MAX_MB
         if self.batch_size == 1:
-            self._evaluate(base)
+            yield from self._evaluate_plan(base)
             for x in ipts[:max(0, n_rounds - 1)]:
-                self._evaluate(x)
+                yield from self._evaluate_plan(x)
             n_rand = min(self.n_init, n_rounds) - 1 - len(ipts)
             for _ in range(max(0, n_rand)):
-                self._evaluate(self._random_x(1)[0])
+                yield from self._evaluate_plan(self._random_x(1)[0])
         else:
             # batch BO: same design points, evaluated q at a time
             n_init = min(self.n_init, n_rounds)
@@ -254,7 +265,8 @@ class BayesianOptimizer:
                 rows.append(self._random_x(n_rand))
             init = np.concatenate(rows)[:max(1, n_rounds)]
             for lo in range(0, len(init), self.batch_size):
-                self._evaluate_batch(init[lo:lo + self.batch_size])
+                yield from self._evaluate_batch_plan(
+                    init[lo:lo + self.batch_size])
 
 
 def bo_search(wf: Workflow, slo: float, env: Environment,

@@ -17,6 +17,7 @@ from typing import Dict, Optional
 from repro.core.cost import workflow_cost
 from repro.core.dag import Workflow
 from repro.core.env import Environment, Sample
+from repro.core.gridsearch import ExecuteRequest, GridPlan, drive_plan
 from repro.core.resources import (MEM_MIN_MB, MEM_MAX_MB, ResourceConfig,
                                   coupled_config, quantize_mem)
 
@@ -42,7 +43,25 @@ def maff_search(wf: Workflow, slo: float, env: Environment, *,
     surface falls back to the coupled base rather than aborting.
     ``fallback_to_base=False`` disables that retry (and its extra base
     sample) — resumed searches use it to keep a hard sample budget.
+
+    Sequential driver over :func:`maff_plan`.
     """
+    return drive_plan(GridPlan(env, maff_plan(
+        wf, slo, env, shrink=shrink, min_rel_step=min_rel_step,
+        max_samples=max_samples, start_configs=start_configs,
+        fallback_to_base=fallback_to_base)))
+
+
+def maff_plan(wf: Workflow, slo: float, env: Environment, *,
+              shrink: float = 0.4, min_rel_step: float = 0.02,
+              max_samples: int = 200,
+              start_configs: Optional[Dict[str, ResourceConfig]] = None,
+              fallback_to_base: bool = True):
+    """The MAFF descent as a sans-IO plan generator (see
+    :mod:`repro.core.gridsearch`): every workflow execution is
+    requested via ``yield``, so the sequential and lockstep drivers run
+    the identical descent. ``env`` is consulted read-only (trace sample
+    counters and the final ``best_feasible`` lookup)."""
     if not env.trace.capture_configs:
         raise ValueError(
             "MAFF reads the winning configuration back from the trace "
@@ -54,12 +73,12 @@ def maff_search(wf: Workflow, slo: float, env: Environment, *,
         # start from the coupled base configuration
         for node in wf:
             node.config = coupled_config(MEM_MAX_MB)
-    sample = env.execute(wf, slo=slo, note="maff:base")
+    sample = yield ExecuteRequest(wf=wf, slo=slo, note="maff:base")
     if not sample.feasible and start_configs is not None and fallback_to_base:
         # transferred start infeasible here — retry from the base
         for node in wf:
             node.config = coupled_config(MEM_MAX_MB)
-        sample = env.execute(wf, slo=slo, note="maff:base")
+        sample = yield ExecuteRequest(wf=wf, slo=slo, note="maff:base")
     if not sample.feasible:
         return None
     prev_cost = sample.cost
@@ -74,7 +93,7 @@ def maff_search(wf: Workflow, slo: float, env: Environment, *,
             if new_mem >= node.config.mem - 1e-9:       # at the lattice floor
                 break
             node.config = coupled_config(new_mem)
-            sample = env.execute(wf, slo=slo, note=f"maff:{name}")
+            sample = yield ExecuteRequest(wf=wf, slo=slo, note=f"maff:{name}")
             if (sample.error
                     or not math.isfinite(sample.e2e_runtime)
                     or sample.e2e_runtime > slo

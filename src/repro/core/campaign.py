@@ -39,7 +39,8 @@ from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                FleetEngine, INFINITE_CLUSTER, NO_COLD_START,
                                PoissonArrivals)
 from repro.core.env import Environment
-from repro.core.search import SearchResult, Searcher, make_searcher
+from repro.core.search import (GridCell, SearchResult, Searcher,
+                               make_searcher, run_grid_search)
 
 logger = logging.getLogger(__name__)
 
@@ -362,31 +363,53 @@ class Campaign:
 
     # -- the pipeline --------------------------------------------------
     def run(self, *, with_replay: bool = True,
-            progress: Optional[Callable[[str], None]] = None
-            ) -> CampaignReport:
+            progress: Optional[Callable[[str], None]] = None,
+            search_plane: str = "grid") -> CampaignReport:
+        """Search every (task, searcher) cell, then replay.
+
+        ``search_plane="grid"`` (the default) advances all cells in
+        lockstep through :func:`repro.core.search.run_grid_search`,
+        fusing each round's probes across cells into single backend
+        evaluations; per-cell traces are bit-identical to
+        ``search_plane="sequential"`` (the legacy one-cell-at-a-time
+        loop), which remains available for A/B timing.
+        """
+        if search_plane not in ("grid", "sequential"):
+            raise ValueError(
+                f"unknown search_plane {search_plane!r}; "
+                "choose 'grid' or 'sequential'")
         t0 = time.perf_counter()
         tasks = self.tasks()
         searchers = self.searchers()
         arrival_seeds = self.arrival_seeds(len(tasks))
-        results: List[TaskResult] = []
+        cells: List[GridCell] = []
+        owners: List[Tuple[CampaignTask, Searcher]] = []
         for task in tasks:
             for searcher in searchers:
-                wf = task.template.copy()
-                res = searcher.search(wf, task.slo)
-                replay = (self.replay(task, res, int(arrival_seeds[task.index]))
-                          if with_replay else None)
-                results.append(TaskResult(task=task, search=res,
-                                          replay=replay))
-                if progress is not None:
-                    progress(f"{searcher.name} {task.kind}#{task.index} "
-                             f"feasible={res.feasible} "
-                             f"samples={res.n_samples}")
+                cells.append(GridCell(searcher=searcher,
+                                      wf=task.template.copy(), slo=task.slo))
+                owners.append((task, searcher))
+        if search_plane == "grid":
+            search_results = run_grid_search(cells).results
+        else:
+            search_results = [c.searcher.search(c.wf, c.slo) for c in cells]
+        results: List[TaskResult] = []
+        for (task, searcher), res in zip(owners, search_results):
+            replay = (self.replay(task, res, int(arrival_seeds[task.index]))
+                      if with_replay else None)
+            results.append(TaskResult(task=task, search=res, replay=replay))
+            if progress is not None:
+                progress(f"{searcher.name} {task.kind}#{task.index} "
+                         f"feasible={res.feasible} "
+                         f"samples={res.n_samples}")
         return CampaignReport(spec=self.spec, results=results,
                               wall_time_s=time.perf_counter() - t0)
 
 
 def run_campaign(spec: CampaignSpec = CampaignSpec(), *,
                  env_factory: Optional[Callable[[], Environment]] = None,
-                 with_replay: bool = True) -> CampaignReport:
+                 with_replay: bool = True,
+                 search_plane: str = "grid") -> CampaignReport:
     """Functional entry point: ``run_campaign(CampaignSpec(...))``."""
-    return Campaign(spec, env_factory=env_factory).run(with_replay=with_replay)
+    return Campaign(spec, env_factory=env_factory).run(
+        with_replay=with_replay, search_plane=search_plane)

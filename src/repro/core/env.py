@@ -223,35 +223,45 @@ class Environment:
         i = 0
         for wf, s, note in zip(wfs, slos, notes):
             k = len(wf)
-            rts, bad = runtimes[i:i + k], failed[i:i + k]
+            samples.append(self.execute_prepared(
+                wf, runtimes[i:i + k], failed[i:i + k], s, note=note))
             i += k
-            cost = 0.0
-            for node, rt, b in zip(wf, rts, bad):
-                node.runtime = float(rt)
-                node.failed = bool(b)
-                if not node.failed:
-                    node.fail_reason = ""
-                if math.isfinite(node.runtime):
-                    cost += self.pricing.function_cost(node.runtime,
-                                                       node.config)
-            e2e = wf.end_to_end_latency()
-            if bad.any():
-                msg = "; ".join(n.fail_reason or n.name for n in wf
-                                if n.failed)
-                if not self.backend.has_clamped:
-                    cost = sum(self.pricing.rate(n.config) for n in wf)
-                    samples.append(self.trace.record(
-                        math.inf, cost, wf, feasible=False, error=True,
-                        note=f"error:{msg}"))
-                else:
-                    samples.append(self.trace.record(
-                        e2e, cost, wf, feasible=False, error=True,
-                        note=f"error:{msg}"))
-            else:
-                samples.append(self.trace.record(e2e, cost, wf,
-                                                 feasible=e2e <= s,
-                                                 note=note))
         return samples
+
+    def execute_prepared(self, wf: Workflow, runtimes: np.ndarray,
+                         failed: np.ndarray, slo: float,
+                         note: str = "") -> Sample:
+        """Commit pre-measured per-node runtimes as one whole-workflow
+        sample — the per-workflow half of :meth:`execute_batch`, exposed
+        so callers that already hold a (fused) ``invoke_batch`` result
+        can skip the backend dispatch. Runtimes are written onto the
+        nodes, cost is summed in node order, and failures follow the
+        same branch :meth:`execute` takes, so the recorded sample is
+        bit-identical to an :meth:`execute` call measuring the same
+        values."""
+        cost = 0.0
+        for node, rt, b in zip(wf, runtimes, failed):
+            node.runtime = float(rt)
+            node.failed = bool(b)
+            if not node.failed:
+                node.fail_reason = ""
+            if math.isfinite(node.runtime):
+                cost += self.pricing.function_cost(node.runtime,
+                                                   node.config)
+        e2e = wf.end_to_end_latency()
+        if failed.any():
+            msg = "; ".join(n.fail_reason or n.name for n in wf
+                            if n.failed)
+            if not self.backend.has_clamped:
+                cost = sum(self.pricing.rate(n.config) for n in wf)
+                return self.trace.record(
+                    math.inf, cost, wf, feasible=False, error=True,
+                    note=f"error:{msg}")
+            return self.trace.record(
+                e2e, cost, wf, feasible=False, error=True,
+                note=f"error:{msg}")
+        return self.trace.record(e2e, cost, wf, feasible=e2e <= slo,
+                                 note=note)
 
     def execute_candidates(self, wf: Workflow,
                            candidates: Sequence[Dict[str, ResourceConfig]],
@@ -267,11 +277,41 @@ class Environment:
         is a pure evaluation used by batched BO rounds and campaign
         sweeps.
         """
-        names = [n.name for n in wf.nodes.values()]
-        nodes = list(wf.nodes.values())
         n_cand = len(candidates)
         if n_cand == 0:
             return []
+        names, nodes, cpu, mem, items = self._candidate_arrays(wf, candidates)
+
+        if hasattr(self.backend, "invoke_config_batch"):
+            runtimes, failed = self.backend.invoke_config_batch(
+                nodes, cpu, mem)
+        else:                       # generic fallback: one row at a time
+            runtimes = np.empty((n_cand, len(nodes)))
+            failed = np.zeros((n_cand, len(nodes)), dtype=bool)
+            saved = [n.config for n in nodes]
+            try:
+                for ci, cand in enumerate(candidates):
+                    for node, name in zip(nodes, names):
+                        node.config = cand[name]
+                    runtimes[ci], failed[ci] = self.backend.invoke_batch(nodes)
+            finally:
+                for node, cfg in zip(nodes, saved):
+                    node.config = cfg
+
+        return self._candidates_commit(wf, names, cpu, mem, items,
+                                       runtimes, failed, slo, note)
+
+    def _candidate_arrays(self, wf: Workflow,
+                          candidates: Sequence[Dict[str, ResourceConfig]]
+                          ) -> Tuple[List[str], List[Node], np.ndarray,
+                                     np.ndarray, List[ConfigItems]]:
+        """Validate candidate config maps against ``wf`` and gather them
+        into ``(C, n)`` cpu/mem arrays plus per-candidate config-item
+        captures — the pure input half of :meth:`execute_candidates`,
+        shared with the fused grid-search plane."""
+        names = [n.name for n in wf.nodes.values()]
+        nodes = list(wf.nodes.values())
+        n_cand = len(candidates)
         name_set = set(names)
         cpu = np.empty((n_cand, len(nodes)))
         mem = np.empty((n_cand, len(nodes)))
@@ -291,23 +331,19 @@ class Environment:
                 mem[ci, ni] = cfg.mem
                 row.append((name, cfg.cpu, cfg.mem))
             items.append(tuple(row))
+        return names, nodes, cpu, mem, items
 
-        if hasattr(self.backend, "invoke_config_batch"):
-            runtimes, failed = self.backend.invoke_config_batch(
-                nodes, cpu, mem)
-        else:                       # generic fallback: one row at a time
-            runtimes = np.empty((n_cand, len(nodes)))
-            failed = np.zeros((n_cand, len(nodes)), dtype=bool)
-            saved = [n.config for n in nodes]
-            try:
-                for ci, cand in enumerate(candidates):
-                    for node, name in zip(nodes, names):
-                        node.config = cand[name]
-                    runtimes[ci], failed[ci] = self.backend.invoke_batch(nodes)
-            finally:
-                for node, cfg in zip(nodes, saved):
-                    node.config = cfg
-
+    def _candidates_commit(self, wf: Workflow, names: List[str],
+                           cpu: np.ndarray, mem: np.ndarray,
+                           items: List[ConfigItems], runtimes: np.ndarray,
+                           failed: np.ndarray, slo: float,
+                           note: str) -> List[Sample]:
+        """Record measured ``(C, n)`` candidate runtimes — the pure
+        output half of :meth:`execute_candidates` (vectorized
+        longest-path, pricing, failure branches), shared with the fused
+        grid-search plane so fused and per-cell evaluation produce
+        bit-identical samples."""
+        n_cand = runtimes.shape[0]
         # vectorized longest-path over all candidates at once
         col = {name: i for i, name in enumerate(names)}
         finish: Dict[str, np.ndarray] = {}

@@ -74,8 +74,9 @@ from repro.core.engine import (ColdStartModel, FleetCarry, FleetEngine,
                                PoissonArrivals)
 from repro.core.env import Environment
 from repro.core.resources import ResourceConfig
-from repro.core.search import (SearchResult, Searcher, make_searcher,
-                               retune_state)
+from repro.core.search import (GridCell, SearchResult, Searcher,
+                               make_searcher, retune_state,
+                               run_grid_search)
 from repro.serverless.generator import DriftSchedule, EpochConditions
 
 #: control policies (see module docstring)
@@ -318,11 +319,17 @@ class OnlineController:
                 arrival_seeds: List[int]) -> List[ServingCell]:
         spec = self.spec
         cells: List[ServingCell] = []
-        for task in tasks:
-            searcher = make_searcher(
-                spec.searcher, self.env_factory,
-                **spec.searcher_kwargs.get(spec.searcher, {}))
-            res = searcher.search(task.template.copy(), task.slo)
+        # deploy-time search runs all cells in lockstep — one fused
+        # backend evaluation per probe round across the whole portfolio
+        # (traces bit-identical to per-task sequential searches)
+        searchers = [make_searcher(spec.searcher, self.env_factory,
+                                   **spec.searcher_kwargs.get(
+                                       spec.searcher, {}))
+                     for _ in tasks]
+        grid = run_grid_search(
+            [GridCell(searcher=s, wf=task.template.copy(), slo=task.slo)
+             for s, task in zip(searchers, tasks)])
+        for task, searcher, res in zip(tasks, searchers, grid.results):
             validated = self._campaign.replay(task, res,
                                               arrival_seeds[task.index])
             cell = ServingCell(

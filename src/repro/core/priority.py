@@ -22,7 +22,19 @@ functions** can be measured together — one
 reverted one at a time in pop order, preserving revert-per-op
 semantics: each trial's accept/reject sees every earlier decision of
 the same round, exactly as the scalar loop would. ``batch_size=1``
-takes the original scalar path bit-for-bit.
+takes the original scalar path bit-for-bit. Narrow rounds (common
+after round one, when realized cost reductions make priorities
+distinct) skip the probe machinery and take the scalar invoke path —
+the array round-trip costs more than it saves until the round is wide
+enough to amortize it. The crossover width is backend-owned
+(``scalar_round_max``): simulated backends advertise their measured
+break-even point; unknown backends collapse singleton rounds only,
+and only when deterministic.
+
+The loop body is implemented once, as :func:`priority_plan` — a
+sans-IO generator yielding :mod:`repro.core.gridsearch` requests —
+so the sequential entry point below and the lockstep grid driver
+execute the identical decision sequence.
 """
 from __future__ import annotations
 
@@ -30,11 +42,13 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.cost import workflow_cost
 from repro.core.dag import Node, Workflow
 from repro.core.env import Environment
+from repro.core.gridsearch import (GridPlan, InvokeRequest, ProbeRequest,
+                                   TrialRequest, drive_plan)
 from repro.core.resources import ResourceConfig, quantize_cpu, quantize_mem
 
 #: per-op exponential-backoff budget (paper: FUNC_TRIAL)
@@ -43,6 +57,14 @@ FUNC_TRIAL = 3
 MAX_TRAIL = 64
 #: initial deallocation portion: remove half of the resource
 INITIAL_STEP = 0.5
+#: default batch-size crossover when the backend declares none: only
+#: singleton rounds collapse to the scalar invoke path, and only on
+#: deterministic backends (the pre-crossover behavior). Simulated
+#: backends advertise a wider ``scalar_round_max`` — a one-call numpy
+#: probe only beats N python invocations once the round is wide enough
+#: to amortize the array round-trip (see the ``priority_batched`` case
+#: in ``benchmarks/campaign_scale.py``).
+SCALAR_ROUND_DEFAULT = 1
 
 
 @dataclasses.dataclass
@@ -105,6 +127,36 @@ def priority_configuration(
     its sub-SLO). ``batch_size`` ops on distinct functions at equal
     priority are probed per backend call (see module docstring);
     ``batch_size=1`` is the scalar loop unchanged.
+
+    This is the sequential driver over :func:`priority_plan`.
+    """
+    return drive_plan(GridPlan(env, priority_plan(
+        wf, path, slo, env, global_slo=global_slo, max_trail=max_trail,
+        func_trial=func_trial, initial_step=initial_step,
+        batch_size=batch_size)))
+
+
+def priority_plan(
+    wf: Workflow,
+    path: Sequence[str],
+    slo: float,
+    env: Environment,
+    *,
+    global_slo: Optional[float] = None,
+    max_trail: int = MAX_TRAIL,
+    func_trial: int = FUNC_TRIAL,
+    initial_step: float = INITIAL_STEP,
+    batch_size: int = 1,
+) -> Iterator:
+    """Algorithm 2 as a sans-IO plan generator.
+
+    Yields :class:`~repro.core.gridsearch.InvokeRequest` /
+    :class:`~repro.core.gridsearch.ProbeRequest` /
+    :class:`~repro.core.gridsearch.TrialRequest` and receives the
+    corresponding samples. ``env`` is consulted read-only (pricing and
+    the backend's ``deterministic`` flag) — all sampling goes through
+    the yielded requests, so the sequential and lockstep drivers run
+    this exact decision sequence.
     """
     if global_slo is None:
         global_slo = slo
@@ -146,6 +198,21 @@ def priority_configuration(
             pq.push(op, priority=reduced)
         return prev_cost
 
+    # batch-size crossover: rounds at or below this width are served by
+    # per-op scalar invokes instead of one probe. Backends own the
+    # threshold (``scalar_round_max``) because the break-even point is
+    # a property of their invoke cost; unknown backends fall back to
+    # singleton-only collapse, and only when deterministic — the scalar
+    # path and the probe path consume a stochastic backend's rng stream
+    # differently, so flipping the route changes which noise each trial
+    # sees (statistically equivalent, bitwise different), a choice a
+    # backend must opt into explicitly.
+    scalar_round_max = getattr(env.backend, "scalar_round_max", None)
+    if scalar_round_max is None:
+        scalar_round_max = (SCALAR_ROUND_DEFAULT
+                            if getattr(env.backend, "deterministic", False)
+                            else 0)
+
     count = 0
     if batch_size <= 1:
         while len(pq) > 0 and count < max_trail:    # Alg 2 line 11
@@ -163,8 +230,8 @@ def priority_configuration(
             node.config = new_cfg                   # deallocate(op)
             # AARC re-invokes only the re-configured function; the rest
             # of the path keeps its cached (deterministic) runtimes.
-            sample = env.execute_function(
-                wf, node, slo=global_slo,
+            sample = yield InvokeRequest(
+                wf=wf, node=node, slo=global_slo,
                 note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
             decide(op, node, sample, saved)
     else:
@@ -196,14 +263,29 @@ def priority_configuration(
             if not round_ops:
                 continue
 
+            if len(round_ops) <= scalar_round_max:
+                # narrow round: the probe's array round-trip costs more
+                # than it saves — take scalar invokes in pop order,
+                # which commit the same trials (invoke ≡ invoke_batch
+                # row on deterministic backends, and a function's
+                # runtime depends only on its own config, so per-op
+                # invocation equals the round's joint probe)
+                for op, node, new_cfg, saved in round_ops:
+                    node.config = new_cfg           # deallocate(op)
+                    sample = yield InvokeRequest(
+                        wf=wf, node=node, slo=global_slo,
+                        note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
+                    decide(op, node, sample, saved)
+                continue
+
             # ONE vectorized probe for the whole round. Configs are
             # applied only for the probe and restored right after: a
             # trial's sample must price every *other* function at its
             # last-accepted config, exactly as the scalar loop does.
             for _, node, new_cfg, _ in round_ops:
                 node.config = new_cfg
-            runtimes, failed = env.probe_function_batch(
-                [node for _, node, _, _ in round_ops])
+            runtimes, failed = yield ProbeRequest(
+                nodes=[node for _, node, _, _ in round_ops])
             for _, node, _, saved in round_ops:
                 node.config = saved[0]
 
@@ -212,8 +294,9 @@ def priority_configuration(
             for (op, node, new_cfg, saved), rt, bad in zip(round_ops,
                                                            runtimes, failed):
                 node.config = new_cfg               # deallocate(op)
-                sample = env.apply_function_trial(
-                    wf, node, float(rt), bool(bad), slo=global_slo,
+                sample = yield TrialRequest(
+                    wf=wf, node=node, rt=float(rt), error=bool(bad),
+                    slo=global_slo,
                     note=f"aarc:{op.func}:{op.type}:-{op.step:.3f}")
                 decide(op, node, sample, saved)
 

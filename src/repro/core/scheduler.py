@@ -20,8 +20,9 @@ from repro.core.critical_path import (find_critical_path, find_detour_subpath,
                                       runtime_sum)
 from repro.core.dag import Workflow
 from repro.core.env import Environment
+from repro.core.gridsearch import (ExecuteRequest, GridPlan, drive_plan)
 from repro.core.priority import (FUNC_TRIAL, INITIAL_STEP, MAX_TRAIL,
-                                 priority_configuration)
+                                 priority_plan)
 from repro.core.resources import BASE_CONFIG, ResourceConfig
 
 
@@ -50,6 +51,14 @@ class GraphCentricScheduler:
         self.batch_size = batch_size
 
     def schedule(self, wf: Workflow, slo: float) -> ScheduleResult:
+        """Sequential driver over :meth:`schedule_plan`."""
+        return drive_plan(GridPlan(self.env, self.schedule_plan(wf, slo)))
+
+    def schedule_plan(self, wf: Workflow, slo: float):
+        """Algorithm 1 as a sans-IO plan generator (see
+        :mod:`repro.core.gridsearch`): every sample is requested via
+        ``yield``, so the sequential and lockstep drivers execute the
+        identical decision sequence."""
         env = self.env
         # -- assign base configuration (Alg 1 line 2-4)
         for node in wf:
@@ -57,7 +66,7 @@ class GraphCentricScheduler:
         wf.reset_flags()
 
         # -- execute to find critical path (Alg 1 line 5-6)
-        base_sample = env.execute(wf, slo=slo, note="aarc:base")
+        base_sample = yield ExecuteRequest(wf=wf, slo=slo, note="aarc:base")
         if not base_sample.feasible:
             raise ValueError(
                 f"SLO {slo}s infeasible even at base config "
@@ -67,7 +76,7 @@ class GraphCentricScheduler:
         g_configs: Dict[str, ResourceConfig] = {}
 
         # -- configure the critical path (Alg 1 line 7-9)
-        configs = priority_configuration(
+        configs = yield from priority_plan(
             wf, critical_path, slo, env, global_slo=slo,
             max_trail=self.max_trail, func_trial=self.func_trial,
             initial_step=self.initial_step, batch_size=self.batch_size)
@@ -86,7 +95,7 @@ class GraphCentricScheduler:
                     pending.append(name)
             if not pending:
                 continue
-            configs = priority_configuration(
+            configs = yield from priority_plan(
                 wf, pending, sub_slo, env, global_slo=slo,
                 max_trail=self.max_trail, func_trial=self.func_trial,
                 initial_step=self.initial_step, batch_size=self.batch_size)
@@ -96,7 +105,7 @@ class GraphCentricScheduler:
         for node in wf:
             g_configs.setdefault(node.name, node.config.copy())
 
-        final = env.execute(wf, slo=slo, note="aarc:final")
+        final = yield ExecuteRequest(wf=wf, slo=slo, note="aarc:final")
         return ScheduleResult(configs=g_configs, critical_path=critical_path,
                               e2e_runtime=final.e2e_runtime, cost=final.cost,
                               n_samples=env.trace.n_samples)

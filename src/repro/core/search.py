@@ -49,15 +49,26 @@ from typing import (Callable, Dict, Optional, Protocol, Type, Union,
                     runtime_checkable)
 
 from repro.core.baselines.bo import BayesianOptimizer
-from repro.core.baselines.maff import maff_search
+from repro.core.baselines.maff import maff_plan
 from repro.core.cost import workflow_cost
 from repro.core.critical_path import find_critical_path
 from repro.core.dag import Workflow
 from repro.core.env import Environment, Sample, SearchTrace
+from repro.core.gridsearch import (CellEligibility, GridCell, GridPlan,
+                                   GridReport, GridResume, drive_plan,
+                                   grid_eligibility, run_grid_search)
 from repro.core.priority import (FUNC_TRIAL, INITIAL_STEP, MAX_TRAIL,
-                                 priority_configuration)
+                                 priority_plan)
 from repro.core.resources import BASE_CONFIG, ResourceConfig
 from repro.core.scheduler import GraphCentricScheduler
+
+__all__ = [
+    "SearchResult", "ResumeState", "Searcher", "AARCSearcher", "BOSearcher",
+    "MAFFSearcher", "SEARCHERS", "make_searcher", "retune_state",
+    # re-exported lockstep grid plane (implemented in core.gridsearch)
+    "run_grid_search", "grid_eligibility", "GridCell", "GridResume",
+    "GridReport", "CellEligibility",
+]
 
 
 @dataclasses.dataclass
@@ -184,13 +195,22 @@ class AARCSearcher(_EnvSearcher):
         self.batch_size = batch_size
 
     def search(self, wf: Workflow, slo: float) -> SearchResult:
+        return drive_plan(self.plan(wf, slo))
+
+    def plan(self, wf: Workflow, slo: float) -> GridPlan:
+        """The search as a lockstep-drivable plan (see
+        :mod:`repro.core.gridsearch`); :meth:`search` drives it
+        sequentially, so both drivers run one decision sequence."""
         env = self._fresh_env()
+        return GridPlan(env, self._search_plan(env, wf, slo))
+
+    def _search_plan(self, env: Environment, wf: Workflow, slo: float):
         t0 = time.perf_counter()
+        scheduler = GraphCentricScheduler(
+            env, max_trail=self.max_trail, func_trial=self.func_trial,
+            initial_step=self.initial_step, batch_size=self.batch_size)
         try:
-            res = GraphCentricScheduler(
-                env, max_trail=self.max_trail, func_trial=self.func_trial,
-                initial_step=self.initial_step,
-                batch_size=self.batch_size).schedule(wf, slo)
+            res = yield from scheduler.schedule_plan(wf, slo)
         except ValueError as exc:       # SLO infeasible even at base config
             return self._attach(
                 self._result(env, wf, slo, _base_configs(wf),
@@ -209,6 +229,13 @@ class AARCSearcher(_EnvSearcher):
         under the deallocations already accepted), spending at most
         ``extra_budget`` samples. Deallocation is monotone-cost: the
         resumed configuration is never worse than the state's."""
+        return drive_plan(self.plan_resume(state, extra_budget))
+
+    def plan_resume(self, state: ResumeState,
+                    extra_budget: int) -> GridPlan:
+        return GridPlan(state.env, self._resume_plan(state, extra_budget))
+
+    def _resume_plan(self, state: ResumeState, extra_budget: int):
         if extra_budget <= 0:
             return state.result
         prior = state.result
@@ -219,7 +246,7 @@ class AARCSearcher(_EnvSearcher):
         env, wf, slo = state.env, state.wf, state.slo
         t0 = time.perf_counter()
         path = find_critical_path(wf)
-        priority_configuration(
+        yield from priority_plan(
             wf, path, slo, env, global_slo=slo, max_trail=extra_budget,
             func_trial=self.func_trial, initial_step=self.initial_step,
             batch_size=self.batch_size)
@@ -245,11 +272,17 @@ class BOSearcher(_EnvSearcher):
         self.bo_kwargs = bo_kwargs
 
     def search(self, wf: Workflow, slo: float) -> SearchResult:
+        return drive_plan(self.plan(wf, slo))
+
+    def plan(self, wf: Workflow, slo: float) -> GridPlan:
         env = self._fresh_env()
+        return GridPlan(env, self._search_plan(env, wf, slo))
+
+    def _search_plan(self, env: Environment, wf: Workflow, slo: float):
         t0 = time.perf_counter()
         opt = BayesianOptimizer(wf, slo, env, seed=self.seed,
                                 batch_size=self.batch_size, **self.bo_kwargs)
-        best = opt.run(self.n_rounds)
+        best = yield from opt.run_plan(self.n_rounds)
         wall = time.perf_counter() - t0
         return self._attach(self._bo_result(env, wf, slo, best, wall),
                             env, wf, slo, payload=opt)
@@ -267,12 +300,19 @@ class BOSearcher(_EnvSearcher):
         """Continue the GP/EI loop for ``extra_budget`` more evaluated
         samples — the surrogate keeps its whole history, so resumed
         rounds start from the posterior the budget already paid for."""
+        return drive_plan(self.plan_resume(state, extra_budget))
+
+    def plan_resume(self, state: ResumeState,
+                    extra_budget: int) -> GridPlan:
+        return GridPlan(state.env, self._resume_plan(state, extra_budget))
+
+    def _resume_plan(self, state: ResumeState, extra_budget: int):
         if extra_budget <= 0:
             return state.result
         opt: BayesianOptimizer = state.payload
         env, wf, slo = state.env, state.wf, state.slo
         t0 = time.perf_counter()
-        best = opt.run(opt.evaluated + extra_budget)
+        best = yield from opt.run_plan(opt.evaluated + extra_budget)
         wall = state.result.wall_time_s + (time.perf_counter() - t0)
         return self._attach(self._bo_result(env, wf, slo, best, wall),
                             env, wf, slo, payload=opt)
@@ -298,12 +338,18 @@ class MAFFSearcher(_EnvSearcher):
         self.start_configs = start_configs
 
     def search(self, wf: Workflow, slo: float) -> SearchResult:
+        return drive_plan(self.plan(wf, slo))
+
+    def plan(self, wf: Workflow, slo: float) -> GridPlan:
         env = self._fresh_env()
+        return GridPlan(env, self._search_plan(env, wf, slo))
+
+    def _search_plan(self, env: Environment, wf: Workflow, slo: float):
         t0 = time.perf_counter()
-        best = maff_search(wf, slo, env, shrink=self.shrink,
-                           min_rel_step=self.min_rel_step,
-                           max_samples=self.max_samples,
-                           start_configs=self.start_configs)
+        best = yield from maff_plan(wf, slo, env, shrink=self.shrink,
+                                    min_rel_step=self.min_rel_step,
+                                    max_samples=self.max_samples,
+                                    start_configs=self.start_configs)
         wall = time.perf_counter() - t0
         return self._attach(self._maff_result(env, wf, slo, best, wall),
                             env, wf, slo)
@@ -323,6 +369,13 @@ class MAFFSearcher(_EnvSearcher):
         ``extra_budget`` samples (one is reserved for the re-anchoring
         base execution). The cumulative trace keeps the global best, so
         the resumed result is never worse than the state's."""
+        return drive_plan(self.plan_resume(state, extra_budget))
+
+    def plan_resume(self, state: ResumeState,
+                    extra_budget: int) -> GridPlan:
+        return GridPlan(state.env, self._resume_plan(state, extra_budget))
+
+    def _resume_plan(self, state: ResumeState, extra_budget: int):
         if extra_budget <= 0 or not state.result.feasible:
             # infeasible means the coupled base violates the SLO — on a
             # deterministic backend no amount of budget changes that
@@ -333,11 +386,11 @@ class MAFFSearcher(_EnvSearcher):
         # no fallback retry: the re-anchoring base execution is the one
         # sample reserved out of the grant, so resume spends at most
         # extra_budget samples even on a stochastic backend
-        best = maff_search(wf, slo, env, shrink=self.shrink,
-                           min_rel_step=self.min_rel_step,
-                           max_samples=max(0, extra_budget - 1),
-                           start_configs=prior.configs,
-                           fallback_to_base=False)
+        best = yield from maff_plan(wf, slo, env, shrink=self.shrink,
+                                    min_rel_step=self.min_rel_step,
+                                    max_samples=max(0, extra_budget - 1),
+                                    start_configs=prior.configs,
+                                    fallback_to_base=False)
         wall = prior.wall_time_s + (time.perf_counter() - t0)
         if best is None:
             # only possible when stochastic noise made the incumbent

@@ -1,0 +1,201 @@
+"""Lockstep grid-search plane: bit-identity and eligibility.
+
+Pins the vectorized campaign search plane's contract
+(:func:`repro.core.search.run_grid_search`):
+
+  * per-cell traces are **bit-identical** to the sequential
+    ``Searcher.search`` / ``resume`` loops — across topologies,
+    searchers, analytic and stochastic backends, tight and loose SLOs
+    (tight slack drives OOM/error samples through the fused failure
+    branches), and duplicate-seed cells that share one structure
+    group,
+  * ineligible cells serialize with explainable reasons
+    (mirroring ``FleetEngine.batch_eligibility``) and still return
+    their plain sequential results,
+  * the Algorithm-2 batch-size crossover (scalar invokes for narrow
+    rounds) commits the same trials as the batched probe path on
+    deterministic backends,
+  * ``BENCH_campaign.json`` rows carry no wall-clock-derived keys.
+"""
+import itertools
+
+import pytest
+
+from repro.core.campaign import _build_workflow
+from repro.core.priority import priority_configuration
+from repro.core.resources import BASE_CONFIG
+from repro.core.search import (GridCell, GridResume, grid_eligibility,
+                               make_searcher, run_grid_search)
+from repro.serverless.generator import suggest_slo
+from repro.serverless.platform import make_env
+
+KINDS = ("chain", "fan", "diamond", "layered")
+SEARCHER_KWARGS = {"aarc": {"batch_size": 4},
+                   "bo": {"n_rounds": 6, "n_init": 8, "batch_size": 4},
+                   "maff": {}}
+
+
+def _key(sample):
+    return (sample.e2e_runtime, sample.cost, sample.feasible, sample.error,
+            sample.trial_time, sample.note,
+            tuple(sample.config_items or ()))
+
+
+def _make_cell(kind, sname, sigma, slack, seed):
+    wf = _build_workflow(kind, 8, seed)
+    env = make_env(noise_sigma=sigma, seed=1000 + seed)
+    searcher = make_searcher(sname, lambda e=env: e,
+                             **SEARCHER_KWARGS[sname])
+    return env, searcher, wf, suggest_slo(wf, slack=slack)
+
+
+def _grid_specs(sigma):
+    specs = []
+    for kind, sname, slack in itertools.product(
+            KINDS, sorted(SEARCHER_KWARGS), [1.05, 2.0]):
+        specs.append((kind, sname, sigma, slack, 7))
+        if kind == "chain" and slack == 1.05:
+            # duplicate-seed cells: identical workflows share one
+            # structure group in the fused commit folds
+            specs.append((kind, sname, sigma, slack, 7))
+            specs.append((kind, sname, sigma, slack, 11))
+    return specs
+
+
+@pytest.mark.parametrize("sigma", [0.0, 0.05],
+                         ids=["analytic", "stochastic"])
+def test_grid_traces_bit_identical_to_sequential(sigma):
+    specs = _grid_specs(sigma)
+
+    seq_traces, seq_invocations = [], []
+    for spec in specs:
+        env, searcher, wf, slo = _make_cell(*spec)
+        res = searcher.search(wf, slo)
+        seq_traces.append([_key(s) for s in res.trace.samples])
+        seq_invocations.append(env.backend.invocations)
+    # tight slack must exercise the fused failure branches
+    assert any(k[3] for trace in seq_traces for k in trace)  # k[3]=error
+
+    envs, cells = [], []
+    for spec in specs:
+        env, searcher, wf, slo = _make_cell(*spec)
+        envs.append(env)
+        cells.append((searcher, wf, slo))
+    report = run_grid_search(cells)
+
+    assert report.serialized_cells == 0
+    assert all(e.eligible for e in report.eligibility)
+    assert report.fused_evaluations > 0
+    for i, res in enumerate(report.results):
+        assert [_key(s) for s in res.trace.samples] == seq_traces[i], \
+            f"trace diverged for cell {specs[i]}"
+        assert envs[i].backend.invocations == seq_invocations[i], \
+            f"invocation count diverged for cell {specs[i]}"
+
+
+@pytest.mark.parametrize("sname", sorted(SEARCHER_KWARGS))
+def test_grid_resume_bit_identical_to_sequential(sname):
+    extra = 8
+
+    env_s, searcher_s, wf_s, slo = _make_cell("chain", sname, 0.0, 1.2, 7)
+    first = searcher_s.search(wf_s, slo)
+    resumed = searcher_s.resume(first.state, extra)
+    seq_trace = [_key(s) for s in resumed.trace.samples]
+
+    env_g, searcher_g, wf_g, _ = _make_cell("chain", sname, 0.0, 1.2, 7)
+    first_g = run_grid_search([(searcher_g, wf_g, slo)]).results[0]
+    report = run_grid_search(
+        [GridResume(searcher=searcher_g, state=first_g.state,
+                    extra_budget=extra)])
+    grid_trace = [_key(s) for s in report.results[0].trace.samples]
+
+    assert grid_trace == seq_trace
+    assert env_g.backend.invocations == env_s.backend.invocations
+
+
+class _OpaqueSearcher:
+    """A searcher without ``plan()`` — no lockstep support."""
+
+    name = "opaque"
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def search(self, wf, slo):
+        return self._inner.search(wf, slo)
+
+
+def test_mixed_eligibility_serializes_with_reasons():
+    env_a, searcher_a, wf_a, slo_a = _make_cell("chain", "maff", 0.0, 1.2, 7)
+    env_b, searcher_b, wf_b, slo_b = _make_cell("fan", "maff", 0.0, 1.2, 8)
+
+    # two cells on ONE Environment interleave a single trace: serialize
+    shared_env, _, _, _ = _make_cell("chain", "maff", 0.0, 1.2, 9)
+    shared_1 = make_searcher("maff", lambda: shared_env)
+    shared_2 = make_searcher("maff", lambda: shared_env)
+    wf_s1 = _build_workflow("chain", 8, 9)
+    wf_s2 = _build_workflow("chain", 8, 10)
+
+    env_o, _, wf_o, slo_o = _make_cell("diamond", "maff", 0.0, 1.2, 11)
+    opaque = _OpaqueSearcher(make_searcher("maff", lambda e=env_o: e))
+
+    cells = [
+        (searcher_a, wf_a, slo_a),
+        (shared_1, wf_s1, suggest_slo(wf_s1, slack=1.2)),
+        (shared_2, wf_s2, suggest_slo(wf_s2, slack=1.2)),
+        GridCell(searcher=opaque, wf=wf_o, slo=slo_o),
+        (searcher_b, wf_b, slo_b),
+    ]
+
+    # the dry run reports without sampling
+    dry = grid_eligibility(cells)
+    assert [e.eligible for e in dry] == [True, False, False, False, True]
+    assert env_a.backend.invocations == 0
+
+    report = run_grid_search(cells)
+    assert [e.eligible for e in report.eligibility] == \
+        [True, False, False, False, True]
+    assert report.serialized_cells == 3
+    assert any("Environment" in r for r in report.eligibility[1].reasons)
+    assert any("plan" in r for r in report.eligibility[3].reasons)
+
+    # serialized cells still return their plain sequential result
+    env_ref, _, _, _ = _make_cell("diamond", "maff", 0.0, 1.2, 11)
+    ref = make_searcher("maff", lambda e=env_ref: e).search(
+        _build_workflow("diamond", 8, 11), slo_o)
+    got = report.results[3]
+    assert [_key(s) for s in got.trace.samples] == \
+        [_key(s) for s in ref.trace.samples]
+
+
+def test_priority_crossover_matches_probe_path():
+    """Narrow rounds served by scalar invokes (the batch-size
+    crossover) commit the identical trial sequence the batched probe
+    path would — pinned by forcing the threshold to zero."""
+    def run(scalar_round_max):
+        wf = _build_workflow("layered", 12, 3)
+        env = make_env(seed=42)
+        if scalar_round_max is not None:
+            env.backend.scalar_round_max = scalar_round_max
+        for node in wf:
+            node.config = BASE_CONFIG.copy()
+        wf.execute(env.oracle)
+        path = [node.name for node in wf]
+        slo = suggest_slo(wf, slack=1.3)
+        priority_configuration(wf, path, slo, env, batch_size=8)
+        return [_key(s) for s in env.trace.samples]
+
+    assert run(None) == run(0)      # backend default vs probe-only
+
+
+def test_bench_campaign_payload_is_timing_free():
+    from benchmarks.campaign_scale import deterministic_payload
+
+    row = {"case": "grid_search_batch", "n_cells": 96,
+           "traces_identical": True, "wall_s": 1.0,
+           "sequential_wall_s": 3.0, "grid_wall_s": 1.0,
+           "grid_cells_per_s": 96.0, "grid_speedup": 3.0,
+           "probe_wall_ratio": 1.1}
+    assert deterministic_payload(row) == {
+        "case": "grid_search_batch", "n_cells": 96,
+        "traces_identical": True}
