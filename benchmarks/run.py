@@ -13,7 +13,7 @@ def main() -> int:
     from benchmarks import (adaptive_campaign, campaign_scale,
                             fig2_decoupling, fig3_bo, fig5_search,
                             fig67_convergence, fig8_input_aware,
-                            fleet_throughput, online_serving,
+                            fleet_throughput, online_serving, placement,
                             roofline_table, table2_optimal, tpu_autotune)
     benches = [
         ("fig2_decoupling", fig2_decoupling.main),
@@ -28,6 +28,7 @@ def main() -> int:
         ("campaign_scale", campaign_scale.bench_main),
         ("adaptive_campaign", adaptive_campaign.bench_main),
         ("online_serving", online_serving.bench_main),
+        ("placement", placement.bench_main),
     ]
     failures = 0
     for name, fn in benches:

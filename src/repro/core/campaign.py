@@ -246,10 +246,19 @@ class Campaign:
             kind = p.kinds[i % len(p.kinds)]
             wf = _build_workflow(kind, p.size, int(wf_seeds[i]))
             for slack in p.slo_slacks:
+                # generated names (f"{kind}-{seed}") are NOT unique
+                # across the grid: the same workflow appears once per
+                # SLO slack, and seed collisions are possible. Each
+                # cell gets its own template copy with a grid-unique
+                # tenant id, so cells packed into one shared engine
+                # can never alias each other's warm containers or
+                # queue ledgers (Workflow.identity keys both).
+                tpl = wf.copy()
+                tpl.tenant = f"cell{idx}.{wf.name}"
                 tasks.append(CampaignTask(
                     index=idx, kind=kind, wf_seed=int(wf_seeds[i]),
                     slo=suggest_slo(wf, slack=slack), slack=slack,
-                    n_nodes=len(wf), template=wf))
+                    n_nodes=len(wf), template=tpl))
                 idx += 1
         return tasks
 

@@ -51,8 +51,18 @@ class Node:
 class Workflow:
     """A DAG of named nodes with adjacency maintained both ways."""
 
-    def __init__(self, name: str = "workflow"):
+    def __init__(self, name: str = "workflow", *,
+                 tenant: Optional[str] = None):
         self.name = name
+        #: tenant id for shared-cluster serving. Generated workflow
+        #: names (``f"{kind}-{seed}"``) are not unique across the cells
+        #: of a campaign grid — two (workflow, SLO) cells can serve the
+        #: same template at different configurations. Anything keyed by
+        #: workflow inside a *shared* engine (warm-container pools,
+        #: per-function queue ledgers) must therefore key on
+        #: :attr:`identity`, which is the tenant id when set and the
+        #: name otherwise.
+        self.tenant = tenant
         self.nodes: Dict[str, Node] = {}
         self._succ: Dict[str, List[str]] = {}
         self._pred: Dict[str, List[str]] = {}
@@ -223,8 +233,17 @@ class Workflow:
             node.failed = False
             node.fail_reason = ""
 
+    @property
+    def identity(self) -> str:
+        """Warm-pool / placement identity: the tenant id when set, else
+        the workflow name. Two cells of a shared cluster serving the
+        same generated template at different configurations must carry
+        distinct tenants, or they would silently share warm containers
+        sized for different configs."""
+        return self.tenant if self.tenant is not None else self.name
+
     def copy(self) -> "Workflow":
-        wf = Workflow(self.name)
+        wf = Workflow(self.name, tenant=self.tenant)
         for node in self.nodes.values():
             wf.add_node(Node(name=node.name, config=node.config.copy(),
                              runtime=node.runtime, scheduled=node.scheduled,

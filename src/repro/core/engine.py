@@ -59,7 +59,8 @@ import heapq
 import itertools
 import math
 import weakref
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -157,8 +158,13 @@ class FleetCarry:
     things a real platform keeps:
 
       * ``warm`` — the warm-container pool keyed by
-        ``(workflow template, function)``, entries ``[deposit_t,
-        expire_t]`` in absolute simulated time,
+        ``(tenant identity, function)`` — ``Workflow.identity``, i.e.
+        the tenant id when set and the template name otherwise —
+        entries ``[deposit_t, expire_t]`` in absolute simulated time.
+        Keying on the tenant identity (not the raw name) is what keeps
+        two cells of a packed multi-tenant cluster that serve the same
+        generated template name at different configurations from
+        silently sharing containers sized for different configs,
       * ``busy`` — ``(finish_t, cpu, mem)`` capacity reservations. On a
         carry returned from a ``collect_carry`` run this is the run's
         *full* invocation log; :meth:`pruned` reduces it to the set
@@ -185,7 +191,18 @@ class FleetCarry:
         """The state visible to an epoch starting at ``t``: unexpired
         warm containers (including ones deposited later than ``t`` by
         still-draining invocations — they become claimable mid-epoch)
-        and capacity reservations that outlive ``t``."""
+        and capacity reservations that outlive ``t``.
+
+        Boundary semantics (pinned by tests): a warm container whose
+        ``expire_t == t`` is *kept* — it is still claimable at exactly
+        ``t``, mirroring the engine's claim condition (``expire >=
+        t``); a reservation whose ``finish_t == t`` is *dropped* — its
+        capacity is released at ``t`` (the engine equally ignores
+        carried reservations with ``finish <= first arrival``), while
+        the warm container that invocation deposited survives in
+        ``warm``. A container is therefore never double-counted as
+        both expired and warm, and never holds phantom capacity across
+        a boundary. Pruning preserves the per-tenant keys unchanged."""
         warm = {}
         for key, pool in self.warm.items():
             live = [list(c) for c in pool if c[1] >= t]
@@ -229,13 +246,14 @@ class FleetReport:
                  makespan: float = 0.0, cpu_utilization: float = 0.0,
                  mem_utilization: float = 0.0,
                  queue_delay_by_function: Optional[Dict[str, float]] = None,
-                 carry: Optional[FleetCarry] = None):
+                 carry: Optional[FleetCarry] = None,
+                 tenants: Optional[List[str]] = None):
         rows = list(instances) if instances else []
         self._init_common(
             makespan=makespan, cpu_utilization=cpu_utilization,
             mem_utilization=mem_utilization,
             queue_delay_by_function=queue_delay_by_function or {},
-            carry=carry)
+            carry=carry, tenants=tenants)
         self.arrivals = np.asarray([r.arrival for r in rows], dtype=np.float64)
         self.finishes = np.asarray([r.finish for r in rows], dtype=np.float64)
         self._e2e = np.asarray([r.e2e for r in rows], dtype=np.float64)
@@ -248,14 +266,18 @@ class FleetReport:
         self._instances: Optional[List[InstanceResult]] = rows
 
     def _init_common(self, *, makespan, cpu_utilization, mem_utilization,
-                     queue_delay_by_function, carry) -> None:
+                     queue_delay_by_function, carry, tenants=None) -> None:
         self.makespan = makespan             # last event - first arrival
         self.cpu_utilization = cpu_utilization
         self.mem_utilization = mem_utilization
-        #: Σ queue delay keyed by "<workflow template>/<function name>"
+        #: Σ queue delay keyed by "<tenant identity>/<function name>"
         self.queue_delay_by_function = queue_delay_by_function
         #: end-of-run warm/busy state (only when ``collect_carry=True``)
         self.carry = carry
+        #: per-instance tenant identity (uid order) when the engine ran
+        #: a tagged fleet; ``None`` on reports with no tenant tags
+        self.tenants: Optional[List[str]] = (list(tenants)
+                                             if tenants is not None else None)
         self._sorted: Optional[np.ndarray] = None
         self._total_cost: Optional[float] = None
         self._total_queue_delay: Optional[float] = None
@@ -268,14 +290,16 @@ class FleetReport:
                     failed: np.ndarray, makespan: float,
                     cpu_utilization: float, mem_utilization: float,
                     queue_delay_by_function: Dict[str, float],
-                    carry: Optional[FleetCarry] = None) -> "FleetReport":
+                    carry: Optional[FleetCarry] = None,
+                    tenants: Optional[List[str]] = None) -> "FleetReport":
         """Build a report directly from aligned per-instance arrays
         (uid order) without materializing ``InstanceResult`` objects."""
         self = cls.__new__(cls)
         self._init_common(
             makespan=makespan, cpu_utilization=cpu_utilization,
             mem_utilization=mem_utilization,
-            queue_delay_by_function=queue_delay_by_function, carry=carry)
+            queue_delay_by_function=queue_delay_by_function, carry=carry,
+            tenants=tenants)
         self.arrivals = np.asarray(arrival, dtype=np.float64)
         self.finishes = np.asarray(finish, dtype=np.float64)
         self._e2e = np.asarray(e2e, dtype=np.float64)
@@ -368,6 +392,57 @@ class FleetReport:
         if self.makespan > 0:
             return done / self.makespan
         return float("inf") if done else 0.0
+
+    # -- per-tenant views ----------------------------------------------
+    def tenant_slice(self, tenant: str) -> "FleetReport":
+        """One tenant's view of a packed multi-tenant run.
+
+        Instance arrays are masked to the tenant's instances (uid order
+        preserved) and ``queue_delay_by_function`` is filtered to keys
+        prefixed ``"<tenant>/"``, so per-tenant slices partition the
+        packed report exactly: concatenating the slices' arrays (and
+        summing their queue ledgers) recovers the packed totals.
+        Two packed-cluster quantities are *not* attributable per
+        tenant and are handled explicitly:
+
+          * ``cpu_utilization``/``mem_utilization`` are copied from the
+            packed report — they describe the shared cluster,
+          * ``makespan`` is recomputed as the tenant's own span (last
+            finite finish − first arrival; 0.0 for an empty or fully
+            dead slice), and ``carry`` stays on the packed report
+            (warm pools are already tenant-keyed there).
+
+        Raises ``ValueError`` on a report with no tenant tags."""
+        if self.tenants is None:
+            raise ValueError(
+                "report has no tenant tags (engine ran an untagged fleet)")
+        mask = np.asarray([t == tenant for t in self.tenants], dtype=bool)
+        arrival = self.arrivals[mask]
+        finish = self.finishes[mask]
+        finite_fin = finish[np.isfinite(finish)]
+        makespan = (float(finite_fin.max()) - float(arrival.min())
+                    if arrival.size and finite_fin.size else 0.0)
+        prefix = tenant + "/"
+        pfq = {k: v for k, v in self.queue_delay_by_function.items()
+               if k.startswith(prefix)}
+        return FleetReport.from_arrays(
+            arrival=arrival, finish=finish, e2e=self._e2e[mask],
+            queue_delay=self.queue_delays[mask],
+            cold_delay=self.cold_delays[mask], cost=self.costs[mask],
+            failed=self.failed_mask[mask], makespan=max(makespan, 0.0),
+            cpu_utilization=self.cpu_utilization,
+            mem_utilization=self.mem_utilization,
+            queue_delay_by_function=pfq,
+            tenants=[t for t in self.tenants if t == tenant])
+
+    def by_tenant(self) -> Dict[str, "FleetReport"]:
+        """``{tenant: tenant_slice(tenant)}`` in first-appearance
+        (uid) order. Raises ``ValueError`` on untagged reports."""
+        if self.tenants is None:
+            raise ValueError(
+                "report has no tenant tags (engine ran an untagged fleet)")
+        return {t: self.tenant_slice(t)
+                for t in dict.fromkeys(self.tenants)}
 
 
 # --------------------------------------------------------------------------
@@ -554,7 +629,9 @@ class FleetEngine:
                  pricing: PricingModel = DEFAULT_PRICING,
                  cluster: ClusterModel = INFINITE_CLUSTER,
                  cold_start: ColdStartModel = NO_COLD_START,
-                 plane_backend: str = "numpy"):
+                 plane_backend: str = "numpy",
+                 interference: Optional[
+                     Mapping[Tuple[str, str], float]] = None):
         self.backend = as_backend(backend)
         self.pricing = pricing
         self.cluster = cluster
@@ -568,6 +645,25 @@ class FleetEngine:
         #: ``lax.scan`` over topological ranks (x64) instead of the
         #: numpy loop — same recurrence, device-compiled
         self.plane_backend = plane_backend
+        #: optional per-invocation runtime multipliers keyed by
+        #: ``(tenant identity, function name)`` — the placement layer's
+        #: co-location/noisy-neighbour model (see
+        #: :mod:`repro.core.placement`). Applied to every invocation's
+        #: runtime *before* pricing, so slower execution is also billed
+        #: longer. ``None``/empty leaves the engine bit-identical to an
+        #: interference-free run; a non-empty map routes ``run_many``
+        #: to the serial plane (multipliers are an event-loop concept).
+        if interference:
+            bad = [k for k, v in interference.items()
+                   if not (math.isfinite(v) and v > 0.0)]
+            if bad:
+                raise ValueError(
+                    f"interference multipliers must be finite and "
+                    f"positive; offending keys: {sorted(bad)}")
+            self.interference: Dict[Tuple[str, str], float] = \
+                dict(interference)
+        else:
+            self.interference = {}
 
     @property
     def _pricing_vectorized(self) -> bool:
@@ -667,11 +763,13 @@ class FleetEngine:
                     used_mem -= node.config.mem
                     # an OOM-killed invocation leaves no reusable
                     # container behind; containers are per *function*
-                    # (workflow template name + node name), shared
-                    # across instances but never across unrelated
-                    # functions that happen to repeat a node name
+                    # (tenant identity + node name), shared across
+                    # instances of one tenant but never across
+                    # unrelated functions that happen to repeat a node
+                    # name — nor across tenants whose containers are
+                    # sized for different configs
                     if self.cold_start.delay_s > 0.0 and not node.failed:
-                        warm[(wf.name, name)].append(
+                        warm[(wf.identity, name)].append(
                             [t, t + self.cold_start.keep_alive_s])
                     state.finish[uid] = max(state.finish[uid], t)
                     if state.dead[uid]:
@@ -805,6 +903,10 @@ class FleetEngine:
         reasons: List[str] = []
         if len(template) == 0:
             reasons.append("empty template (trivial scalar runs)")
+        if self.interference:
+            reasons.append(
+                "interference multipliers active (applied per "
+                "invocation inside the event loop)")
         if not batch_safe:
             reasons.append(
                 "backend is not batch_safe (stateful/opaque with no "
@@ -1043,7 +1145,7 @@ class FleetEngine:
                  for name in names]
         pred_count = [len(template.predecessors(name)) for name in names]
         sources = [col[s] for s in template.sources()]
-        fn_keys = [f"{template.name}/{name}" for name in names]
+        fn_keys = [f"{template.identity}/{name}" for name in names]
         return rank_of, succs, pred_count, sources, fn_keys
 
     def _run_cell_table(self, template, times, carry, collect_carry,
@@ -1065,7 +1167,7 @@ class FleetEngine:
                        else FleetCarry())
             return self._empty_report(carry_out=out)
         rank_of, succs, pred_count, sources, fn_keys = topo
-        tname = template.name
+        tname = template.identity
         cold_delay_s = self.cold_start.delay_s
         keep_alive_s = self.cold_start.keep_alive_s
         total_cpu = self.cluster.total_cpu
@@ -1203,7 +1305,8 @@ class FleetEngine:
             cold_delay=cold_delay, failed=failed_i, dead=dead,
             costs=_reduce_costs(cost_items, m), t0=t0, t_end=t_last,
             cpu_area=cpu_area, mem_area=mem_area,
-            per_fn_queue=dict(per_fn_queue), carry_out=carry_out)
+            per_fn_queue=dict(per_fn_queue), carry_out=carry_out,
+            tenants=[tname] * m)
 
     def _run_many_vectorized(self, template, config_sets, times_list,
                              carry, names, cpu, mem, runtimes, failed,
@@ -1280,7 +1383,7 @@ class FleetEngine:
                 inst_finish = arr if inst_finish is None \
                     else np.maximum(inst_finish, arr)
 
-        pfq = {f"{template.name}/{name}": 0.0 for name in names}
+        pfq = {f"{template.identity}/{name}": 0.0 for name in names}
         busy = carry.busy if carry is not None else []
         for si, times in enumerate(times_list):
             m = counts[si]
@@ -1321,7 +1424,8 @@ class FleetEngine:
                     failed=np.full(m, bool(cand_failed[k]), dtype=bool),
                     makespan=max(t_last - t0, 0.0),
                     cpu_utilization=0.0, mem_utilization=0.0,
-                    queue_delay_by_function=dict(pfq))
+                    queue_delay_by_function=dict(pfq),
+                    tenants=[template.identity] * m)
         return reports
 
     def _sweep_jax(self, template, order, col, t_all, rt) -> np.ndarray:
@@ -1351,6 +1455,10 @@ class FleetEngine:
         to the event loop (verified by tests) at scalar-path speed."""
         nodes = list(wf)
         runtimes, failed = self.backend.invoke_batch(nodes)
+        if self.interference:
+            runtimes = np.asarray(runtimes, dtype=np.float64) * \
+                np.asarray([self.interference.get((wf.identity, n.name), 1.0)
+                            for n in nodes])
         cost = 0.0
         for node, rt, bad in zip(nodes, runtimes, failed):
             node.runtime = float(rt)
@@ -1368,7 +1476,7 @@ class FleetEngine:
             failed=np.array([bool(failed.any())]),
             makespan=e2e if math.isfinite(e2e) else 0.0,
             cpu_utilization=0.0, mem_utilization=0.0,
-            queue_delay_by_function={})
+            queue_delay_by_function={}, tenants=[wf.identity])
 
     def _check_placeable(self, wf: Workflow) -> None:
         for node in wf:
@@ -1425,6 +1533,14 @@ class FleetEngine:
             nodes = [state.wfs[uid].nodes[name]
                      for _, uid, name in startable]
             runtimes, failed = self.backend.invoke_batch(nodes)
+            if self.interference:
+                # placement-derived runtime multipliers (co-location /
+                # noisy-neighbour), applied before pricing so slowed
+                # invocations are billed for their real occupancy
+                runtimes = np.asarray(runtimes, dtype=np.float64) * \
+                    np.asarray([self.interference.get(
+                        (state.wfs[uid].identity, name), 1.0)
+                        for _, uid, name in startable])
             costs = self._price_batch(nodes, runtimes)
 
             released = False
@@ -1439,7 +1555,7 @@ class FleetEngine:
                 state.queue_delay[uid] += wait
                 # same scoping as warm containers: heterogeneous fleets
                 # must not merge unrelated functions sharing a node name
-                per_fn_queue[f"{state.wfs[uid].name}/{name}"] += wait
+                per_fn_queue[f"{state.wfs[uid].identity}/{name}"] += wait
                 if bad:
                     state.failed[uid] = True
                 if not math.isfinite(rt):
@@ -1453,8 +1569,8 @@ class FleetEngine:
                     continue
                 delay = 0.0
                 if self.cold_start.delay_s > 0.0 and \
-                        not self._take_warm((state.wfs[uid].name, name), t,
-                                            warm):
+                        not self._take_warm((state.wfs[uid].identity, name),
+                                            t, warm):
                     delay = self.cold_start.delay_s
                 state.cold_delay[uid] += delay
                 state.cost_items[uid].append((state.rank[uid][name],
@@ -1501,11 +1617,13 @@ class FleetEngine:
             failed=state.failed, dead=state.dead,
             costs=state.instance_costs(), t0=t0, t_end=t_end,
             cpu_area=cpu_area, mem_area=mem_area,
-            per_fn_queue=per_fn_queue, carry_out=carry_out)
+            per_fn_queue=per_fn_queue, carry_out=carry_out,
+            tenants=[wf.identity for wf in state.wfs])
 
     def _report_arrays(self, *, arrival, finish, queue_delay, cold_delay,
                        failed, dead, costs, t0, t_end, cpu_area, mem_area,
-                       per_fn_queue, carry_out=None) -> FleetReport:
+                       per_fn_queue, carry_out=None,
+                       tenants=None) -> FleetReport:
         """Shared report assembly for the scalar event loop and the
         table-driven cells (identical inf-substitution, utilization and
         makespan arithmetic)."""
@@ -1524,7 +1642,8 @@ class FleetEngine:
             cost=costs, failed=failed | dead,
             makespan=makespan, cpu_utilization=cpu_util,
             mem_utilization=mem_util,
-            queue_delay_by_function=per_fn_queue, carry=carry_out)
+            queue_delay_by_function=per_fn_queue, carry=carry_out,
+            tenants=tenants)
 
 
 def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],

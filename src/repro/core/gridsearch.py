@@ -260,10 +260,12 @@ def _structure_key(wf: Workflow) -> tuple:
 
 
 def _cell_label(item: Union[GridCell, GridResume]) -> Tuple[str, str]:
+    # identity (tenant id when set, else name) keeps eligibility rows
+    # unambiguous when a campaign grid repeats one generated template
     if isinstance(item, GridResume):
-        return (item.state.searcher, item.state.wf.name)
+        return (item.state.searcher, item.state.wf.identity)
     return (getattr(item.searcher, "name", type(item.searcher).__name__),
-            item.wf.name)
+            item.wf.identity)
 
 
 def grid_eligibility(cells: Sequence[Union[GridCell, GridResume, tuple]]

@@ -73,6 +73,8 @@ from repro.core.campaign import (Campaign, CampaignSpec, CampaignTask,
 from repro.core.engine import (ColdStartModel, FleetCarry, FleetEngine,
                                PoissonArrivals)
 from repro.core.env import Environment
+from repro.core.placement import (PlacementPlan, PlacementSpec, TenantCell,
+                                  plan_placement, scale_cluster)
 from repro.core.resources import ResourceConfig
 from repro.core.search import (GridCell, SearchResult, Searcher,
                                make_searcher, retune_state,
@@ -98,6 +100,15 @@ class OnlineSpec:
     n_epochs: int = 8
     drift: DriftSchedule = DriftSchedule()
     mode: str = "drift"
+    #: shared-cluster serving: pack every cell into ONE fleet engine
+    #: behind an affinity-aware placement (see
+    #: :mod:`repro.core.placement`). ``None`` keeps the historical
+    #: per-cell private-quota serving. When set, the packed cluster is
+    #: ``placement.cluster`` or the per-cell ``replay.cluster`` scaled
+    #: by the number of cells (equal total capacity), and challenger
+    #: validation replays *inside* the packed cluster so cross-cell
+    #: interference gates every swap.
+    placement: Optional[PlacementSpec] = None
     # -- drift detection ----------------------------------------------
     #: sliding-window length (served instances) per cell
     window: int = 48
@@ -226,6 +237,9 @@ class OnlineReport:
     deploy_spent: int
     n_validations: int
     wall_time_s: float
+    #: packed-serving audit (only when ``spec.placement`` is set):
+    #: solver method/score, heavy spread, multiplier count, cluster
+    placement: Optional[Dict[str, object]] = None
 
     def epoch_attainment(self) -> List[float]:
         """Mean live attainment across cells, per epoch."""
@@ -246,7 +260,7 @@ class OnlineReport:
         the master seed (wall-clock is excluded), so two runs of one
         spec emit byte-identical payloads."""
         s = self.spec
-        return {
+        payload: Dict[str, object] = {
             "spec": {
                 "mode": s.mode, "searcher": s.searcher, "seed": s.seed,
                 "n_epochs": s.n_epochs,
@@ -271,6 +285,19 @@ class OnlineReport:
             "reconfigs": [r.row() for r in self.reconfigs],
             "cells": [c.row() for c in self.cells],
         }
+        if s.placement is not None:
+            p = s.placement
+            payload["spec"]["placement"] = {
+                "n_bins": p.n_bins, "affinity": p.affinity,
+                "chatty_io_s": p.chatty_io_s,
+                "colocate_bonus": p.colocate_bonus,
+                "remote_penalty": p.remote_penalty,
+                "interference_penalty": p.interference_penalty,
+                "heavy_profile": p.heavy_profile,
+                "local_moves": p.local_moves, "seed": p.seed,
+            }
+            payload["placement"] = dict(self.placement or {})
+        return payload
 
 
 class OnlineController:
@@ -293,6 +320,14 @@ class OnlineController:
                          seed=spec.seed),
             env_factory=env_factory)
         self.env_factory = self._campaign.env_factory
+        # -- shared-cluster (packed) serving state --------------------
+        #: the accepted placement (None => per-cell private quotas)
+        self._plan: Optional[PlacementPlan] = None
+        #: the packed fleet's cross-epoch state and clock (per-cell
+        #: ``carry``/``clock`` are unused in packed mode)
+        self._packed_carry: Optional[FleetCarry] = None
+        self._packed_clock: float = 0.0
+        self._cells: List[ServingCell] = []
 
     # -- conditions ----------------------------------------------------
     def _serving_env(self, cond: EpochConditions) -> Environment:
@@ -392,6 +427,155 @@ class OnlineController:
             "input_scale": cond.input_scale,
         }
 
+    # -- shared-cluster (packed) serving -------------------------------
+    def _build_plan(self, cells: List[ServingCell]) -> PlacementPlan:
+        """Place all cells into the packed cluster at deploy time.
+        The campaign grid already gives every cell's template a unique
+        tenant id; :func:`plan_placement` re-validates (duplicate
+        identities raise — the warm-pool collision guard) and scores
+        the placement off the deploy-time incumbent configurations."""
+        pspec = self.spec.placement
+        assert pspec is not None
+        cluster = pspec.cluster if pspec.cluster is not None else \
+            scale_cluster(self.spec.replay.cluster, max(1, len(cells)))
+        tenant_cells = [TenantCell(template=cell.task.template,
+                                   configs=cell.configs,
+                                   slo=cell.task.slo)
+                        for cell in cells]
+        return plan_placement(tenant_cells, pspec, cluster)
+
+    def _packed_engine(self, cond: EpochConditions,
+                       env: Optional[Environment] = None) -> FleetEngine:
+        env = env if env is not None else self._serving_env(cond)
+        plan = self._plan
+        return FleetEngine(env.backend, pricing=env.pricing,
+                           cluster=plan.cluster,
+                           cold_start=self._cold_model(cond),
+                           interference=plan.multipliers)
+
+    def _packed_fleet(self, cells: List[ServingCell], seeds: List[int],
+                      n: int, rate: float, start: float,
+                      override: Optional[Tuple[int, Dict[str,
+                                               ResourceConfig]]] = None
+                      ) -> Tuple[List[Workflow], np.ndarray]:
+        """One instance fleet spanning every tenant: ``n`` arrivals per
+        cell at ``rate`` from ``seeds[i]``, templates stamped with the
+        incumbent configs (``override`` swaps cell ``index``'s configs
+        for a challenger's). uid order is cell-major, which is the
+        order the per-tenant report slices recover."""
+        wfs: List[Workflow] = []
+        times: List[np.ndarray] = []
+        for cell, seed in zip(cells, seeds):
+            t = PoissonArrivals(rate, n, seed=seed, start=start).times()
+            configs = cell.configs
+            if override is not None and cell.index == override[0]:
+                configs = override[1]
+            for _ in range(n):
+                wf = cell.task.template.copy()
+                wf.apply_configs(configs)
+                wfs.append(wf)
+            times.append(t)
+        return wfs, np.concatenate(times)
+
+    def _packed_baseline(self, cells: List[ServingCell]) -> None:
+        """Re-validate deploy baselines *inside* the packed cluster:
+        one packed replay on the deploy arrival seeds, sliced per
+        tenant. The per-cell private-quota replay that ``_deploy`` ran
+        is the wrong detection target under shared capacity — a cell
+        would be flagged as drifted at epoch 0 just for sharing."""
+        r = self.spec.replay
+        report = self._packed_engine(EpochConditions()).run(
+            *self._packed_fleet(cells, [c.arrival_seed for c in cells],
+                                r.n_instances, r.rate, 0.0))
+        for cell in cells:
+            sub = report.tenant_slice(cell.task.template.identity)
+            cell.baseline = sub.slo_attainment(cell.task.slo)
+            cell.baseline_cost = sub.total_cost
+            cell.validated = cell.baseline
+            cell.validated_cost = cell.baseline_cost
+
+    def _serve_epoch_packed(self, cells: List[ServingCell], epoch: int,
+                            cond: EpochConditions,
+                            epoch_seeds: np.ndarray
+                            ) -> List[Dict[str, object]]:
+        """The packed analogue of :meth:`_serve_epoch`: ONE engine run
+        serves every tenant's arrivals against the shared cluster
+        (placement interference applied per invocation), resumed from
+        the packed :class:`FleetCarry`. Per-tenant report slices feed
+        the same sliding windows and emit the same epoch-row schema as
+        isolated serving, so detection and downstream consumers are
+        mode-agnostic."""
+        spec = self.spec
+        r = spec.replay
+        rate = r.rate * cond.rate_scale
+        seeds = [int(epoch_seeds[cell.task.index][epoch])
+                 for cell in cells]
+        engine = self._packed_engine(cond)
+        wfs, times = self._packed_fleet(cells, seeds, r.n_instances,
+                                        rate, self._packed_clock)
+        report = engine.run(wfs, times, carry=self._packed_carry,
+                            collect_carry=True)
+        self._packed_clock += r.n_instances / rate
+        self._packed_carry = report.carry.pruned(self._packed_clock)
+        rows: List[Dict[str, object]] = []
+        for cell in cells:
+            sub = report.tenant_slice(cell.task.template.identity)
+            slo = cell.task.slo
+            hits = (~sub.failed_mask) & (sub.latencies <= slo)
+            overheads = sub.queue_delays + sub.cold_delays
+            for hit, overhead in zip(hits.tolist(), overheads.tolist()):
+                cell.window.append(hit)
+                cell.overheads.append(overhead if math.isfinite(overhead)
+                                      else slo)
+            cell.clock = self._packed_clock
+            rows.append({
+                "epoch": epoch, "cell": cell.index,
+                "attainment": sub.slo_attainment(slo),
+                "p50_s": sub.p50, "p99_s": sub.p99,
+                "cost": sub.total_cost,
+                "queue_delay_s": sub.total_queue_delay,
+                "cold_delay_s": float(sum(sub.cold_delays.tolist())),
+                "rate_scale": cond.rate_scale,
+                "input_scale": cond.input_scale,
+            })
+        return rows
+
+    def _validate_many_packed(self, cell: ServingCell,
+                              config_sets: List[Dict[str, ResourceConfig]],
+                              cond: EpochConditions, seed: int
+                              ) -> List[ReplayMetrics]:
+        """Challenger validation *inside* the packed cluster: each
+        candidate config-map for ``cell`` is replayed with every other
+        tenant serving its incumbent, from the pruned packed carry —
+        so a challenger only swaps in if it survives the cross-cell
+        interference it will actually face. All candidate runs share
+        the same per-tenant arrival seeds (``seed`` offset by cell
+        index), keeping the incumbent-vs-challenger gate a paired
+        comparison."""
+        spec = self.spec
+        r = spec.replay
+        n = spec.validation_instances if spec.validation_instances \
+            is not None else 2 * r.n_instances
+        rate = r.rate * cond.rate_scale
+        clock = self._packed_clock
+        carry = self._packed_carry.pruned(clock) \
+            if self._packed_carry is not None else None
+        seeds = [int(seed) + other.index for other in self._cells]
+        out: List[ReplayMetrics] = []
+        for configs in config_sets:
+            engine = self._packed_engine(cond)
+            wfs, times = self._packed_fleet(
+                self._cells, seeds, n, rate, clock,
+                override=(cell.index, configs))
+            report = engine.run(wfs, times, carry=carry)
+            sub = report.tenant_slice(cell.task.template.identity)
+            out.append(ReplayMetrics(
+                slo_attainment=sub.slo_attainment(cell.task.slo),
+                p50_s=sub.p50, p99_s=sub.p99,
+                total_cost=sub.total_cost,
+                total_queue_delay_s=sub.total_queue_delay))
+        return out
+
     # -- detection -----------------------------------------------------
     def _triggered(self, cell: ServingCell) -> bool:
         """Is the cell below target with statistical confidence? Uses
@@ -429,7 +613,12 @@ class OnlineController:
         batched :meth:`Campaign.replay_configs_many` /
         :meth:`FleetEngine.run_many` evaluation (challenger and
         incumbent share the event skeleton whenever the live state
-        permits vectorization)."""
+        permits vectorization). Packed mode reroutes to
+        :meth:`_validate_many_packed` — the gate's evidence is then the
+        shared cluster, not an isolated quota."""
+        if self._plan is not None:
+            return self._validate_many_packed(cell, config_sets, cond,
+                                              seed)
         r = self.spec.replay
         carry = cell.carry.pruned(cell.clock) if cell.carry is not None \
             else None
@@ -547,6 +736,12 @@ class OnlineController:
         epoch_seeds = np.random.default_rng(spec.seed + 5).integers(
             0, 2**31 - 1, size=(max(1, len(tasks)), max(1, spec.n_epochs)))
         cells = self._deploy(tasks, arrival_seeds)
+        self._cells = cells
+        if spec.placement is not None:
+            # pack the portfolio into one shared cluster and make the
+            # packed replay (not the private-quota one) the baseline
+            self._plan = self._build_plan(cells)
+            self._packed_baseline(cells)
         total = int(spec.total_budget)
         remaining = total
         epochs: List[Dict[str, object]] = []
@@ -566,8 +761,13 @@ class OnlineController:
                     cell.overheads.clear()
                 if spec.mode == "every_epoch" and epoch > 0:
                     self._research_cell(cell, cond)
-                seed = int(epoch_seeds[cell.task.index][epoch])
-                epochs.append(self._serve_epoch(cell, epoch, cond, seed))
+                if self._plan is None:
+                    seed = int(epoch_seeds[cell.task.index][epoch])
+                    epochs.append(self._serve_epoch(cell, epoch, cond,
+                                                    seed))
+            if self._plan is not None:
+                epochs.extend(self._serve_epoch_packed(cells, epoch,
+                                                       cond, epoch_seeds))
 
             granted_now = set()
             if spec.mode == "drift":
@@ -623,11 +823,27 @@ class OnlineController:
             # never: nothing spent; every_epoch: unbounded by design —
             # the ledger records the realized spend either way
             budget = {"total": spent, "spent": spent, "remaining": 0}
+        placement_info = None
+        if self._plan is not None:
+            plan = self._plan
+            placement_info = {
+                "method": plan.solution.method,
+                "score": plan.solution.score,
+                "n_bins": plan.solution.n_bins,
+                "heavy_per_bin": plan.solution.heavy_per_bin(
+                    plan.constraints),
+                "n_chatty": len(plan.constraints.chatty),
+                "n_heavy": len(plan.constraints.heavy),
+                "n_multipliers": len(plan.multipliers),
+                "cluster_cpu": plan.cluster.total_cpu,
+                "cluster_mem_mb": plan.cluster.total_mem_mb,
+            }
         return OnlineReport(
             spec=spec, cells=cells, epochs=epochs, reconfigs=reconfigs,
             budget=budget, deploy_spent=sum(c.deploy_spent for c in cells),
             n_validations=n_validations,
-            wall_time_s=time.perf_counter() - t0)
+            wall_time_s=time.perf_counter() - t0,
+            placement=placement_info)
 
 
 def run_online(spec: OnlineSpec = OnlineSpec(), *,

@@ -98,8 +98,12 @@ def random_spec(name: str, rng: np.random.Generator,
     return AFFINITY_PROFILES[profile].sample(name, rng)
 
 
-def _new_workflow(kind: str, seed: int) -> Tuple[Workflow, np.random.Generator]:
-    return Workflow(f"{kind}-{seed}"), np.random.default_rng(seed)
+def _new_workflow(kind: str, seed: int, tenant: Optional[str] = None
+                  ) -> Tuple[Workflow, np.random.Generator]:
+    # names are only unique per (kind, seed): two cells serving the same
+    # generated template in a shared cluster must set distinct tenants
+    return Workflow(f"{kind}-{seed}", tenant=tenant), \
+        np.random.default_rng(seed)
 
 
 def _add(wf: Workflow, name: str, rng: np.random.Generator,
@@ -109,22 +113,24 @@ def _add(wf: Workflow, name: str, rng: np.random.Generator,
 
 
 def chain_workflow(n: int = 6, *, seed: int = 0,
-                   profile: Optional[str] = None) -> Workflow:
+                   profile: Optional[str] = None,
+                   tenant: Optional[str] = None) -> Workflow:
     """A sequential pipeline of ``n`` functions."""
     if n < 1:
         raise ValueError("chain needs n >= 1")
-    wf, rng = _new_workflow("chain", seed)
+    wf, rng = _new_workflow("chain", seed, tenant)
     names = [_add(wf, f"f{i:03d}", rng, profile) for i in range(n)]
     wf.chain(*names)
     return wf
 
 
 def fan_workflow(width: int = 4, *, seed: int = 0,
-                 profile: Optional[str] = None) -> Workflow:
+                 profile: Optional[str] = None,
+                 tenant: Optional[str] = None) -> Workflow:
     """Scatter/gather: source -> ``width`` parallel branches -> sink."""
     if width < 1:
         raise ValueError("fan needs width >= 1")
-    wf, rng = _new_workflow("fan", seed)
+    wf, rng = _new_workflow("fan", seed, tenant)
     src = _add(wf, "scatter", rng, "io_bound" if profile is None else profile)
     branches = [_add(wf, f"branch{i:03d}", rng, profile)
                 for i in range(width)]
@@ -136,11 +142,12 @@ def fan_workflow(width: int = 4, *, seed: int = 0,
 
 
 def diamond_workflow(n_diamonds: int = 2, *, seed: int = 0,
-                     profile: Optional[str] = None) -> Workflow:
+                     profile: Optional[str] = None,
+                     tenant: Optional[str] = None) -> Workflow:
     """``n_diamonds`` chained a -> {b, c} -> d blocks."""
     if n_diamonds < 1:
         raise ValueError("diamond needs n_diamonds >= 1")
-    wf, rng = _new_workflow("diamond", seed)
+    wf, rng = _new_workflow("diamond", seed, tenant)
     prev_join: Optional[str] = None
     for d in range(n_diamonds):
         top = _add(wf, f"d{d}_open", rng, profile)
@@ -158,7 +165,8 @@ def diamond_workflow(n_diamonds: int = 2, *, seed: int = 0,
 
 def layered_workflow(n_nodes: int = 16, *, n_layers: int = 4,
                      p_edge: float = 0.3, seed: int = 0,
-                     profile: Optional[str] = None) -> Workflow:
+                     profile: Optional[str] = None,
+                     tenant: Optional[str] = None) -> Workflow:
     """Random layered DAG. Nodes are split across ``n_layers`` layers
     (each layer non-empty); consecutive-layer edges appear with
     probability ``p_edge``, then every node is guaranteed >= 1
@@ -167,7 +175,7 @@ def layered_workflow(n_nodes: int = 16, *, n_layers: int = 4,
     if n_nodes < 2:
         raise ValueError("layered needs n_nodes >= 2")
     n_layers = max(1, min(n_layers, n_nodes))
-    wf, rng = _new_workflow("layered", seed)
+    wf, rng = _new_workflow("layered", seed, tenant)
     # non-empty layer sizes summing to n_nodes
     cuts = np.sort(rng.choice(np.arange(1, n_nodes), size=n_layers - 1,
                               replace=False)) if n_layers > 1 else np.array([], int)

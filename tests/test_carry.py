@@ -1,0 +1,89 @@
+"""``FleetCarry.pruned`` boundary semantics, pinned.
+
+The contract (documented on :meth:`FleetCarry.pruned`): at an epoch
+boundary ``t``, a warm container with ``expire_t == t`` is KEPT (still
+claimable at exactly ``t``, mirroring the engine's ``expire >= t``
+claim condition), a capacity reservation with ``finish_t == t`` is
+DROPPED (released at ``t``; the engine equally ignores carried
+reservations with ``finish <= first arrival``) — and the two rules
+together never double-count a container as both busy and warm, nor
+leak phantom capacity across the boundary."""
+import pytest
+
+from repro.core.backend import CallableBackend
+from repro.core.dag import Workflow
+from repro.core.engine import ColdStartModel, FleetCarry, FleetEngine
+
+CONST = CallableBackend(lambda node: 1.0)
+
+
+def _svc(tenant):
+    wf = Workflow("svc", tenant=tenant)
+    wf.add_function("f")
+    return wf
+
+
+def test_carry_pruned_keeps_warm_expiring_exactly_at_boundary():
+    carry = FleetCarry(clock=5.0,
+                       warm={("A", "f"): [[0.0, 10.0], [0.0, 4.0]]})
+    out = carry.pruned(10.0)
+    assert out.clock == 10.0
+    assert out.warm == {("A", "f"): [[0.0, 10.0]]}   # expire == t kept
+
+
+def test_carry_pruned_drops_reservation_finishing_at_boundary():
+    carry = FleetCarry(busy=[(10.0, 2.0, 1024.0), (10.5, 1.0, 512.0)])
+    out = carry.pruned(10.0)
+    assert out.busy == [(10.5, 1.0, 512.0)]          # finish == t dropped
+
+
+def test_carry_pruned_drops_empty_pools_and_keeps_tenant_keys():
+    carry = FleetCarry(warm={("A", "f"): [[0.0, 50.0]],
+                             ("B", "f"): [[0.0, 1.0]]})
+    out = carry.pruned(10.0)
+    assert set(out.warm) == {("A", "f")}   # B's pool fully expired
+    # pruning copies — mutating the pruned pool must not leak back
+    out.warm[("A", "f")][0][1] = 0.0
+    assert carry.warm[("A", "f")] == [[0.0, 50.0]]
+
+
+def test_carry_boundary_container_claimable_not_double_counted():
+    """An invocation finishing exactly at the boundary ``t``: its
+    capacity reservation is released (dropped from ``busy``) while the
+    warm container it deposited survives — and a next-epoch instance
+    arriving at exactly ``t`` claims it without a cold start."""
+    engine = FleetEngine(
+        CONST, cold_start=ColdStartModel(delay_s=5.0, keep_alive_s=600.0))
+    first = engine.run([_svc("A")], [0.0], collect_carry=True)
+    finish = float(first.finishes[0])                # 0 + 5 cold + 1 run
+    assert finish == 6.0
+
+    carry = first.carry.pruned(finish)
+    # released: no reservation survives its own finish time
+    assert all(f > finish for f, _, _ in carry.busy)
+    assert carry.busy == []
+    # ...but the container it deposited is in the warm pool, live
+    assert ("A", "f") in carry.warm
+    deposit_t, expire_t = carry.warm[("A", "f")][0]
+    assert deposit_t == finish and expire_t == finish + 600.0
+
+    second = engine.run([_svc("A")], [finish], carry=carry)
+    assert float(second.cold_delays[0]) == 0.0       # claimed warm
+    # the claim is tenant-scoped: another tenant at the same boundary
+    # still pays its own cold start from the same carry
+    other = engine.run([_svc("B")], [finish], carry=carry)
+    assert float(other.cold_delays[0]) == 5.0
+
+
+def test_carry_warm_expired_before_boundary_is_not_claimable():
+    engine = FleetEngine(
+        CONST, cold_start=ColdStartModel(delay_s=5.0, keep_alive_s=2.0))
+    first = engine.run([_svc("A")], [0.0], collect_carry=True)
+    finish = float(first.finishes[0])
+    # keep-alive 2s: container expires at finish + 2
+    carry = first.carry.pruned(finish + 2.0)
+    assert ("A", "f") in carry.warm                  # expire == t: kept
+    late = engine.run([_svc("A")], [finish + 2.5], carry=carry)
+    assert float(late.cold_delays[0]) == 5.0         # expired by 2.5
+    exact = engine.run([_svc("A")], [finish + 2.0], carry=carry)
+    assert float(exact.cold_delays[0]) == 0.0        # claimable AT t

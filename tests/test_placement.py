@@ -1,0 +1,219 @@
+"""Placement layer: constraint derivation, the hard anti-affinity cap,
+ablation scoring, interference multipliers, packed-cluster arithmetic,
+and the packed online serving plane built on top of it."""
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core.campaign import PortfolioSpec, ReplaySpec
+from repro.core.engine import ClusterModel
+from repro.core.dag import Workflow
+from repro.core.online import OnlineSpec, run_online
+from repro.core.placement import (PlacementConstraints, PlacementSolution,
+                                  PlacementSpec, TenantCell,
+                                  derive_constraints, heavy_cap,
+                                  interference_multipliers, pack_cells,
+                                  plan_placement, round_robin_placement,
+                                  scale_cluster, solve_placement)
+from repro.serverless.function import FunctionSpec
+from repro.serverless.generator import (chain_workflow, fan_workflow,
+                                        load_shift_schedule)
+
+
+def _fn(name, io=0.5, profile="", floor=256.0):
+    return FunctionSpec(name=name, cpu_work=2.0, parallel_frac=0.5,
+                        mem_floor=floor, mem_knee=2.0 * floor,
+                        io_time=io, profile=profile)
+
+
+def _gen_cells(n, size=6, n_bins=3, seed0=0):
+    cells = []
+    for i in range(n):
+        mk = chain_workflow if i % 2 == 0 else fan_workflow
+        wf = mk(size, seed=seed0 + i, tenant=f"t{i}")
+        cells.append(TenantCell(template=wf, configs={}))
+    return cells
+
+
+# --------------------------------------------------------------------------
+# constraints
+# --------------------------------------------------------------------------
+
+def test_placement_chatty_and_heavy_derivation():
+    wf = Workflow("w", tenant="T")
+    wf.add_function("a", payload=_fn("a", io=2.0))
+    wf.add_function("b", payload=_fn("b", io=1.5))
+    wf.add_function("c", payload=_fn("c", io=0.1))
+    wf.add_function("h1", payload=_fn("h1", profile="mem_bound"))
+    wf.add_function("h2", payload=_fn("h2", profile="", floor=4096.0))
+    wf.add_function("nh", payload=_fn("nh", profile="cpu_bound",
+                                      floor=4096.0))
+    for src, dst in (("a", "b"), ("b", "c"), ("c", "h1"), ("h1", "h2"),
+                     ("h2", "nh")):
+        wf.add_edge(src, dst)
+    cons = derive_constraints([TenantCell(template=wf, configs={})],
+                              PlacementSpec(n_bins=2))
+    # a->b combined io 3.5 >= 3.0 is chatty; b->c at 1.6 is not
+    assert (("T", "a"), ("T", "b")) in cons.chatty
+    assert (("T", "b"), ("T", "c")) not in cons.chatty
+    # profile match and the working-set fallback are heavy; a *set*
+    # profile that is not mem_bound is not, whatever its floor
+    assert cons.heavy_set == {("T", "h1"), ("T", "h2")}
+
+
+def test_placement_heavy_cap_formula():
+    assert heavy_cap(0, 4) == 0
+    assert heavy_cap(1, 4) == 1
+    assert heavy_cap(4, 4) == 1
+    assert heavy_cap(5, 4) == 2
+    assert heavy_cap(9, 2) == 5
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_placement_anti_affinity_cap_never_violated(seed):
+    """No accepted placement — greedy or any local-search move — may
+    put more than ``ceil(n_heavy / n_bins)`` heavy functions in a bin."""
+    spec = PlacementSpec(n_bins=3, seed=seed)
+    cells = _gen_cells(5, size=7, seed0=10 * seed)
+    cons = derive_constraints(cells, spec)
+    sol = solve_placement(cells, spec)
+    counts = sol.heavy_per_bin(cons)
+    assert sum(counts) == len(cons.heavy)
+    assert max(counts, default=0) <= heavy_cap(len(cons.heavy), 3)
+
+
+def test_placement_duplicate_identity_rejected():
+    a = TenantCell(template=chain_workflow(4, seed=1, tenant="same"),
+                   configs={})
+    b = TenantCell(template=fan_workflow(4, seed=2, tenant="same"),
+                   configs={})
+    with pytest.raises(ValueError, match="same"):
+        pack_cells([a, b])
+    with pytest.raises(ValueError, match="unique tenant"):
+        plan_placement([a, b], PlacementSpec())
+
+
+def test_placement_scale_cluster():
+    c = scale_cluster(ClusterModel(total_cpu=10.0, total_mem_mb=1024.0), 4)
+    assert c.total_cpu == 40.0 and c.total_mem_mb == 4096.0
+    inf = scale_cluster(ClusterModel(), 4)
+    assert math.isinf(inf.total_cpu) and math.isinf(inf.total_mem_mb)
+    with pytest.raises(ValueError):
+        scale_cluster(ClusterModel(), 0)
+
+
+# --------------------------------------------------------------------------
+# solver vs ablation
+# --------------------------------------------------------------------------
+
+def test_placement_affinity_scores_no_worse_than_round_robin():
+    spec = PlacementSpec(n_bins=4)
+    cluster = ClusterModel(total_cpu=200.0, total_mem_mb=200.0 * 1024.0)
+    cells = _gen_cells(4, size=6)
+    aff = solve_placement(cells, spec, cluster)
+    rr = round_robin_placement(cells, spec, cluster)
+    assert aff.method == "affinity" and rr.method == "round_robin"
+    assert aff.score <= rr.score + 1e-12
+
+
+def test_placement_plan_is_deterministic():
+    spec = PlacementSpec(n_bins=3, seed=7)
+    cells = _gen_cells(4)
+    p1 = plan_placement(cells, spec)
+    p2 = plan_placement(cells, spec)
+    assert p1.solution.assignment == p2.solution.assignment
+    assert p1.multipliers == p2.multipliers
+    assert p1.solution.score == p2.solution.score
+
+
+# --------------------------------------------------------------------------
+# interference multipliers
+# --------------------------------------------------------------------------
+
+def test_placement_interference_multipliers():
+    cons = PlacementConstraints(
+        chatty=((("A", "p"), ("A", "c")),     # co-located below
+                (("B", "p"), ("B", "c"))),    # split below
+        heavy=(("A", "h1"), ("B", "h2")))
+    sol = PlacementSolution(
+        assignment={("A", "p"): 0, ("A", "c"): 0,
+                    ("B", "p"): 0, ("B", "c"): 1,
+                    ("A", "h1"): 2, ("B", "h2"): 2},
+        n_bins=3, score=0.0, method="affinity")
+    spec = PlacementSpec(n_bins=3)
+    mult = interference_multipliers(sol, cons, spec)
+    # co-located chatty pair: both endpoints speed up
+    assert mult[("A", "p")] == pytest.approx(1.0 - spec.colocate_bonus)
+    assert mult[("A", "c")] == pytest.approx(1.0 - spec.colocate_bonus)
+    # split chatty edge: only the consumer pays the remote transfer
+    assert mult[("B", "c")] == pytest.approx(1.0 + spec.remote_penalty)
+    assert ("B", "p") not in mult
+    # two co-resident heavies slow each other down
+    expected = 1.0 + spec.interference_penalty
+    assert mult[("A", "h1")] == pytest.approx(expected)
+    assert mult[("B", "h2")] == pytest.approx(expected)
+
+
+def test_placement_spec_validation():
+    with pytest.raises(ValueError):
+        PlacementSpec(n_bins=0)
+    with pytest.raises(ValueError):
+        PlacementSpec(remote_penalty=1.0)
+    with pytest.raises(ValueError):
+        PlacementSpec(colocate_bonus=-0.1)
+
+
+# --------------------------------------------------------------------------
+# the packed online serving plane
+# --------------------------------------------------------------------------
+
+SMALL = OnlineSpec(
+    portfolio=PortfolioSpec(n_workflows=2, size=4, kinds=("chain",),
+                            slo_slacks=(1.6,)),
+    replay=ReplaySpec(n_instances=8, rate=0.2,
+                      cluster=ClusterModel(total_cpu=80.0,
+                                           total_mem_mb=80.0 * 1024.0)),
+    n_epochs=3, drift=load_shift_schedule(1, 2.0), seed=0, mode="never")
+
+
+def test_placement_packed_online_payload_is_deterministic():
+    spec = dataclasses.replace(SMALL, placement=PlacementSpec(n_bins=2))
+    r1, r2 = run_online(spec), run_online(spec)
+    p1 = json.dumps(r1.to_payload(), sort_keys=True)
+    p2 = json.dumps(r2.to_payload(), sort_keys=True)
+    assert p1 == p2
+    assert r1.placement["method"] == "affinity"
+    assert r1.placement["cluster_cpu"] == pytest.approx(2 * 80.0)
+    assert 0.0 <= r1.mean_attainment() <= 1.0
+    assert len(r1.epochs) == 3 * len(r1.cells)
+
+
+def test_placement_keys_absent_from_non_packed_payload():
+    """``placement=None`` must leave the payload byte-compatible with
+    pre-placement artifacts: no placement keys anywhere."""
+    payload = run_online(SMALL).to_payload()
+    assert "placement" not in payload
+    assert "placement" not in payload["spec"]
+
+
+def test_placement_packed_reconfiguration_loop_runs():
+    """Challenger validation inside the packed cluster (the
+    ``mode="every_epoch"`` path) completes and keeps per-tenant
+    accounting sound."""
+    spec = dataclasses.replace(SMALL, mode="every_epoch", n_epochs=2,
+                               total_budget=64,
+                               placement=PlacementSpec(n_bins=2))
+    rep = run_online(spec)
+    assert 0.0 <= rep.mean_attainment() <= 1.0
+    assert rep.placement["n_bins"] == 2
+    for row in rep.epochs:
+        assert row["cost"] >= 0.0
+
+
+def test_placement_bench_payload_strips_wall_clock():
+    from benchmarks.placement import deterministic_payload
+    row = {"case": "x", "packed_attainment": 1.0, "wall_s": 1.23}
+    assert deterministic_payload(row) == {"case": "x",
+                                          "packed_attainment": 1.0}

@@ -1,0 +1,154 @@
+"""Tenant identity end-to-end: warm-pool keying (this PR's headline
+bugfix), per-tenant report slices, interference multipliers, campaign
+cell disambiguation, cross-tenant capacity conservation."""
+import math
+
+import pytest
+
+from repro.core.backend import CallableBackend
+from repro.core.campaign import Campaign, CampaignSpec, PortfolioSpec
+from repro.core.dag import Workflow
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               FleetReport)
+from repro.core.resources import ResourceConfig
+
+CONST = CallableBackend(lambda node: 1.0)
+COLD = ColdStartModel(delay_s=5.0, keep_alive_s=600.0)
+
+
+def _svc(tenant, cpu=None, mem=None):
+    """A one-function service named ``svc`` — the *name* collides by
+    construction; only the tenant id distinguishes instances."""
+    wf = Workflow("svc", tenant=tenant)
+    cfg = (ResourceConfig(cpu=cpu, mem=mem)
+           if cpu is not None else None)
+    wf.add_function("f", config=cfg)
+    return wf
+
+
+# --------------------------------------------------------------------------
+# the warm-pool identity regression
+# --------------------------------------------------------------------------
+
+def test_warm_pool_is_tenant_keyed_not_name_keyed():
+    """THE regression pinned by this PR: two tenants serving the same
+    template *name* must not share warm containers. The pool used to be
+    keyed ``(wf.name, fn)`` — tenant B claimed tenant A's container
+    (sized for A's configuration) and skipped its cold start. This test
+    fails under that keying: B would report ``cold_delay == 0``."""
+    engine = FleetEngine(CONST, cold_start=COLD)
+    rep = engine.run([_svc("tenantA"), _svc("tenantB")], [0.0, 10.0])
+    # A finishes (and deposits its container) at t=6, well before B
+    # arrives — yet B must still pay its own cold start
+    assert list(rep.cold_delays) == [5.0, 5.0]
+
+
+def test_same_identity_still_reuses_warm_containers():
+    """Same identity (``tenant=None`` ⇒ identity == name) keeps the
+    reuse the keep-alive model promises — the fix scopes sharing, it
+    does not disable it."""
+    engine = FleetEngine(CONST, cold_start=COLD)
+    rep = engine.run([_svc(None), _svc(None)], [0.0, 10.0])
+    assert list(rep.cold_delays) == [5.0, 0.0]
+
+
+# --------------------------------------------------------------------------
+# per-tenant report slices
+# --------------------------------------------------------------------------
+
+def test_tenant_slices_partition_the_packed_report():
+    engine = FleetEngine(CONST, cluster=ClusterModel(64.0, 64 * 1024.0))
+    wfs = [_svc("A", 4.0, 2048.0), _svc("B", 4.0, 2048.0),
+           _svc("A", 4.0, 2048.0), _svc("B", 4.0, 2048.0)]
+    rep = engine.run(wfs, [0.0, 0.5, 1.0, 1.5])
+    assert rep.tenants == ["A", "B", "A", "B"]
+    parts = rep.by_tenant()
+    assert list(parts) == ["A", "B"]           # first-appearance order
+    assert sum(p.arrivals.size for p in parts.values()) == 4
+    assert (sum(p.total_cost for p in parts.values())
+            == pytest.approx(rep.total_cost))
+    for tenant, part in parts.items():
+        assert part.tenants == [tenant, tenant]
+        # per-function queue ledger is filtered to the tenant's prefix
+        assert all(k.startswith(tenant + "/")
+                   for k in part.queue_delay_by_function)
+
+
+def test_tenant_slice_requires_tagged_report():
+    with pytest.raises(ValueError, match="no tenant tags"):
+        FleetReport().tenant_slice("A")
+
+
+# --------------------------------------------------------------------------
+# interference multipliers (the placement -> engine coupling)
+# --------------------------------------------------------------------------
+
+def test_interference_multiplier_slows_and_bills_the_tenant():
+    base = FleetEngine(CONST).run([_svc("A")], [0.0])
+    slow = FleetEngine(CONST, interference={("A", "f"): 1.5}).run(
+        [_svc("A")], [0.0])
+    # untargeted tenant is untouched
+    other = FleetEngine(CONST, interference={("B", "f"): 1.5}).run(
+        [_svc("A")], [0.0])
+    assert slow.latencies[0] == pytest.approx(1.5 * base.latencies[0])
+    assert slow.total_cost == pytest.approx(1.5 * base.total_cost)
+    assert other.latencies[0] == base.latencies[0]
+
+
+def test_interference_validation_rejects_bad_multipliers():
+    for bad in (0.0, -1.0, math.inf, math.nan):
+        with pytest.raises(ValueError, match="finite and positive"):
+            FleetEngine(CONST, interference={("A", "f"): bad})
+
+
+# --------------------------------------------------------------------------
+# cross-tenant capacity conservation
+# --------------------------------------------------------------------------
+
+class _AuditedEngine(FleetEngine):
+    """Spies every admission round: the shared capacity ledger must
+    never overdraw the cluster, whatever mix of tenants is queued."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.rounds = 0
+
+    def _start_pending(self, t, pending, state, warm, used_cpu,
+                       used_mem, events, seq, per_fn_queue, inv_log=None):
+        cpu, mem = super()._start_pending(
+            t, pending, state, warm, used_cpu, used_mem, events, seq,
+            per_fn_queue, inv_log)
+        self.rounds += 1
+        assert cpu <= self.cluster.total_cpu + 1e-9
+        assert mem <= self.cluster.total_mem_mb + 1e-9
+        return cpu, mem
+
+
+def test_cross_tenant_capacity_conservation():
+    engine = _AuditedEngine(CONST, cluster=ClusterModel(8.0, 8192.0))
+    wfs = [_svc(f"t{i % 3}", 4.0, 2048.0) for i in range(6)]
+    rep = engine.run(wfs, [0.0] * 6)
+    assert engine.rounds > 0
+    # only two 4-vCPU functions fit at once: the burst must queue
+    assert rep.total_queue_delay > 0.0
+    assert rep.tenants == [f"t{i % 3}" for i in range(6)]
+
+
+# --------------------------------------------------------------------------
+# campaign cells sharing one engine
+# --------------------------------------------------------------------------
+
+def test_campaign_cell_tenants_are_grid_unique():
+    """Generated names collide across the grid (same workflow at two
+    SLO slacks); the campaign must hand every cell a template with a
+    grid-unique tenant identity so packed engines never alias."""
+    spec = CampaignSpec(portfolio=PortfolioSpec(
+        n_workflows=3, size=4, kinds=("chain",), slo_slacks=(1.3, 1.8)))
+    tasks = Campaign(spec).tasks()
+    assert len(tasks) == 6
+    names = [t.template.name for t in tasks]
+    idents = [t.template.identity for t in tasks]
+    assert len(set(names)) < len(names)          # names DO collide
+    assert len(set(idents)) == len(idents)       # identities never do
+    assert all(ident == f"cell{t.index}.{t.template.name}"
+               for ident, t in zip(idents, tasks))
