@@ -11,7 +11,13 @@ Serves the *same* portfolio under the *same* seeded
     arrival seeds, atomic swaps (``mode="drift"``),
   * **naive**       — full re-search of every cell at every epoch
     boundary, swapped unconditionally (``mode="every_epoch"``), the
-    probe-budget comparator.
+    probe-budget comparator. The re-search runs under the same
+    observed-overhead-tightened effective SLO as drift grants (a raw
+    SLO re-search ships wall-hugging configs that miss under the very
+    queueing/cold overhead that was observed — the footgun fixed with
+    the autoscale PR, which lifted the contended ``naive_post`` rows:
+    load_shift 0.81 -> 0.95, cold_start 0.0 -> 1.0; static/online rows
+    unchanged byte-for-byte).
 
 The acceptance bar (checked by ``--smoke`` and pinned in the emitted
 JSON), per the load-shift and input-mix scenarios: **drift-triggered

@@ -10,7 +10,7 @@ import time
 
 
 def main() -> int:
-    from benchmarks import (adaptive_campaign, campaign_scale,
+    from benchmarks import (adaptive_campaign, autoscale, campaign_scale,
                             fig2_decoupling, fig3_bo, fig5_search,
                             fig67_convergence, fig8_input_aware,
                             fleet_throughput, online_serving, placement,
@@ -29,6 +29,7 @@ def main() -> int:
         ("adaptive_campaign", adaptive_campaign.bench_main),
         ("online_serving", online_serving.bench_main),
         ("placement", placement.bench_main),
+        ("autoscale", autoscale.bench_main),
     ]
     failures = 0
     for name, fn in benches:

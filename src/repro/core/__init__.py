@@ -11,6 +11,7 @@ workflow instances on a finite-capacity cluster) share one backend
 protocol — the single-workflow search path is the engine's degenerate
 case (fleet of 1, infinite capacity, zero cold start).
 """
+from repro.core.autoscale import AutoscaleSpec, ScaleResult, ScaleSearcher
 from repro.core.backend import (BaseBackend, CallableBackend, RuntimeBackend,
                                 as_backend)
 from repro.core.campaign import (Campaign, CampaignReport, CampaignSpec,
@@ -23,7 +24,7 @@ from repro.core.dag import Node, Workflow
 from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                FleetEngine, FleetReport, INFINITE_CLUSTER,
                                InstanceResult, NO_COLD_START,
-                               PoissonArrivals, TraceArrivals,
+                               PoissonArrivals, ReplicaModel, TraceArrivals,
                                arrival_times, run_fleet)
 from repro.core.env import Environment, ExecutionError, Sample, SearchTrace
 from repro.core.input_aware import InputAwareEngine, InputClass
@@ -44,9 +45,11 @@ __all__ = [
     "DEFAULT_PRICING", "PricingModel", "workflow_cost",
     "SubPath", "find_critical_path", "find_detour_subpath", "runtime_sum",
     "Node", "Workflow",
+    "AutoscaleSpec", "ScaleResult", "ScaleSearcher",
     "ClusterModel", "ColdStartModel", "FleetEngine", "FleetReport",
     "INFINITE_CLUSTER", "InstanceResult", "NO_COLD_START",
-    "PoissonArrivals", "TraceArrivals", "arrival_times", "run_fleet",
+    "PoissonArrivals", "ReplicaModel", "TraceArrivals", "arrival_times",
+    "run_fleet",
     "Environment", "ExecutionError", "Sample", "SearchTrace",
     "InputAwareEngine", "InputClass",
     "Operation", "priority_configuration",

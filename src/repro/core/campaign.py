@@ -37,7 +37,7 @@ import numpy as np
 from repro.core.dag import Workflow
 from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                FleetEngine, INFINITE_CLUSTER, NO_COLD_START,
-                               PoissonArrivals)
+                               PoissonArrivals, ReplicaModel)
 from repro.core.env import Environment
 from repro.core.search import (GridCell, SearchResult, Searcher,
                                make_searcher, run_grid_search)
@@ -292,7 +292,9 @@ class Campaign:
                        cold_start: Optional[ColdStartModel] = None,
                        env: Optional[Environment] = None,
                        start: float = 0.0,
-                       carry: Optional["FleetCarry"] = None) -> ReplayMetrics:
+                       carry: Optional["FleetCarry"] = None,
+                       scale: Optional["ReplicaModel"] = None
+                       ) -> ReplayMetrics:
         """Replay an *explicit* per-function configuration — the
         challenger-evaluation hook: the online control plane validates
         a candidate reconfiguration against the live arrival seed (and
@@ -300,11 +302,13 @@ class Campaign:
         and a conditions-tuned ``env``) before atomically swapping it
         in. ``start``/``carry`` replay from a live fleet state (the
         backlog and warm pool the challenger would inherit) instead of
-        an empty cluster. Defaults reproduce :meth:`replay` exactly."""
+        an empty cluster; ``scale`` replays under replica-bounded
+        admission (the joint autoscaling challenger gate). Defaults
+        reproduce :meth:`replay` exactly."""
         return self.replay_configs_many(
             task, [configs], arrival_seed, rate=rate,
             n_instances=n_instances, cluster=cluster, cold_start=cold_start,
-            env=env, start=start, carry=carry)[0]
+            env=env, start=start, carry=carry, scale=scale)[0]
 
     def replay_configs_many(self, task: CampaignTask,
                             config_sets: Sequence[Dict[str, "ResourceConfig"]],
@@ -315,7 +319,8 @@ class Campaign:
                             cold_start: Optional[ColdStartModel] = None,
                             env: Optional[Environment] = None,
                             start: float = 0.0,
-                            carry: Optional["FleetCarry"] = None
+                            carry: Optional["FleetCarry"] = None,
+                            scale: Optional["ReplicaModel"] = None
                             ) -> List[ReplayMetrics]:
         """Replay C candidate config-maps on the same arrival seed as
         one batched :meth:`FleetEngine.run_many` evaluation (the
@@ -325,7 +330,8 @@ class Campaign:
         engine = self._replay_engine(
             env,
             cluster if cluster is not None else r.cluster,
-            cold_start if cold_start is not None else r.cold_start)
+            cold_start if cold_start is not None else r.cold_start,
+            scale)
         n = n_instances if n_instances is not None else r.n_instances
         arrivals = PoissonArrivals(rate if rate is not None else r.rate,
                                    n, seed=arrival_seed, start=start)
@@ -351,21 +357,26 @@ class Campaign:
 
     def _replay_engine(self, env: Optional[Environment],
                        cluster: ClusterModel,
-                       cold_start: ColdStartModel) -> FleetEngine:
+                       cold_start: ColdStartModel,
+                       scale: Optional["ReplicaModel"] = None
+                       ) -> FleetEngine:
         """The engine replays run through. Pricing/backend/cluster are
         fixed per campaign, so the default-spec engine is built ONCE
         and reused across every replay of the run (the engine keeps no
-        state between runs). Overridden conditions get a per-call
-        engine; a *stateful* (stochastic) backend is never cached so
-        each replay still sees a fresh noise stream, exactly like the
-        historical fresh-env-per-replay path."""
-        default = (env is None and cluster == self.spec.replay.cluster
+        state between runs). Overridden conditions — including a
+        :class:`ReplicaModel` (replica assignments change per
+        challenger) — get a per-call engine; a *stateful* (stochastic)
+        backend is never cached so each replay still sees a fresh noise
+        stream, exactly like the historical fresh-env-per-replay path."""
+        default = (env is None and scale is None
+                   and cluster == self.spec.replay.cluster
                    and cold_start == self.spec.replay.cold_start)
         if default and self._engine is not None:
             return self._engine
         env = env if env is not None else self.env_factory()
         engine = FleetEngine(env.backend, pricing=env.pricing,
-                             cluster=cluster, cold_start=cold_start)
+                             cluster=cluster, cold_start=cold_start,
+                             scale=scale)
         if default and getattr(env.backend, "deterministic", False):
             self._engine = engine
         return engine

@@ -41,6 +41,20 @@ class PricingModel:
         planes) is bit-identical to per-invocation calls."""
         return runtime_s * (self.mu0 * cpu + self.mu1 * mem) + self.mu2
 
+    def replica_cost(self, replicas: int, config: ResourceConfig,
+                     duration_s: float, *, frac: float = 1.0,
+                     floor: float = 0.0) -> float:
+        """Provisioning charge for keeping ``replicas`` containers of a
+        function sized at ``config`` resident for ``duration_s``.
+
+        Scale-out is never free: each provisioned replica-second is
+        billed ``frac`` of the function's running rate (idle capacity
+        is cheaper than busy capacity, but reserved) plus a ``floor``
+        per-replica-second fixed charge (the container's own daemon /
+        keep-resident overhead, independent of its size). Subclasses
+        that override :meth:`rate` price replicas consistently."""
+        return replicas * duration_s * (frac * self.rate(config) + floor)
+
 
 DEFAULT_PRICING = PricingModel()
 

@@ -67,6 +67,7 @@ import numpy as np
 from repro.core.backend import BaseBackend, RuntimeBackend, as_backend
 from repro.core.cost import DEFAULT_PRICING, PricingModel
 from repro.core.dag import Workflow
+from repro.core.resources import ResourceConfig
 
 
 # --------------------------------------------------------------------------
@@ -147,6 +148,64 @@ class ColdStartModel:
 
 
 NO_COLD_START = ColdStartModel(delay_s=0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaModel:
+    """Per-function replica pools: the autoscaling actuator.
+
+    ``replicas`` maps a function name — or a ``(tenant identity,
+    function name)`` pair for packed multi-tenant fleets — to its pool
+    size R. A pool bounds the function's *admission concurrency*: at
+    most R invocations of that function run at once; further ready
+    invocations queue FIFO behind the cluster-capacity queue (same
+    stop-at-first-blocked discipline, so there is no overtaking).
+    Functions not named fall back to ``default``.
+
+    Provisioned capacity is charged replica-seconds on top of the
+    per-invocation bill (see :meth:`PricingModel.replica_cost`): each
+    replica of a function sized ``(cpu, mem)`` costs
+    ``provision_frac * rate(cpu, mem) + provision_floor`` per second of
+    fleet makespan, so scale-out is never free and the joint
+    (cpu, mem, replicas) searcher trades fewer-bigger replicas against
+    many-smaller ones under one cost model.
+
+    Warm-container pools shard per replica implicitly: deposits happen
+    only at invocation finish and claims only at admission, so a pool
+    never holds more than R live containers mid-run; a carried-in pool
+    from an epoch with a larger R is trimmed to the R latest-expiring
+    containers at load. Cold starts are charged per replica spin-up —
+    every admission that finds no live warm container pays
+    ``ColdStartModel.delay_s`` exactly as before, replica or not.
+
+    ``FleetEngine(scale=None)`` (the default) disables all of this and
+    is bit-identical to the pre-replica engine on every plane.
+    """
+
+    replicas: Mapping[object, int] = dataclasses.field(default_factory=dict)
+    default: int = 1
+    provision_frac: float = 0.25
+    provision_floor: float = 0.0
+
+    def __post_init__(self):
+        for key, r in self.replicas.items():
+            if int(r) < 1:
+                raise ValueError(
+                    f"replica pool for {key!r} must be >= 1, got {r}")
+        if self.default < 1:
+            raise ValueError(f"default pool must be >= 1, got {self.default}")
+        for fld in ("provision_frac", "provision_floor"):
+            v = getattr(self, fld)
+            if not (math.isfinite(v) and v >= 0.0):
+                raise ValueError(f"{fld} must be finite and >= 0, got {v}")
+
+    def pool(self, identity: str, name: str) -> int:
+        """Pool size for one function: the tenant-qualified key wins
+        over the bare function name, which wins over ``default``."""
+        r = self.replicas.get((identity, name))
+        if r is None:
+            r = self.replicas.get(name, self.default)
+        return int(r)
 
 
 @dataclasses.dataclass
@@ -247,13 +306,21 @@ class FleetReport:
                  mem_utilization: float = 0.0,
                  queue_delay_by_function: Optional[Dict[str, float]] = None,
                  carry: Optional[FleetCarry] = None,
-                 tenants: Optional[List[str]] = None):
+                 tenants: Optional[List[str]] = None,
+                 busy_by_function: Optional[Dict[str, float]] = None,
+                 spinups_by_function: Optional[Dict[str, int]] = None,
+                 provision_by_function: Optional[Dict[str, float]] = None,
+                 replicas_by_function: Optional[Dict[str, int]] = None):
         rows = list(instances) if instances else []
         self._init_common(
             makespan=makespan, cpu_utilization=cpu_utilization,
             mem_utilization=mem_utilization,
             queue_delay_by_function=queue_delay_by_function or {},
-            carry=carry, tenants=tenants)
+            carry=carry, tenants=tenants,
+            busy_by_function=busy_by_function,
+            spinups_by_function=spinups_by_function,
+            provision_by_function=provision_by_function,
+            replicas_by_function=replicas_by_function)
         self.arrivals = np.asarray([r.arrival for r in rows], dtype=np.float64)
         self.finishes = np.asarray([r.finish for r in rows], dtype=np.float64)
         self._e2e = np.asarray([r.e2e for r in rows], dtype=np.float64)
@@ -266,12 +333,27 @@ class FleetReport:
         self._instances: Optional[List[InstanceResult]] = rows
 
     def _init_common(self, *, makespan, cpu_utilization, mem_utilization,
-                     queue_delay_by_function, carry, tenants=None) -> None:
+                     queue_delay_by_function, carry, tenants=None,
+                     busy_by_function=None, spinups_by_function=None,
+                     provision_by_function=None,
+                     replicas_by_function=None) -> None:
         self.makespan = makespan             # last event - first arrival
         self.cpu_utilization = cpu_utilization
         self.mem_utilization = mem_utilization
         #: Σ queue delay keyed by "<tenant identity>/<function name>"
         self.queue_delay_by_function = queue_delay_by_function
+        #: Σ executed runtime keyed like the queue ledger — the busy
+        #: side of the saturation view (see :meth:`saturation`)
+        self.busy_by_function: Dict[str, float] = busy_by_function or {}
+        #: cold-start container spin-ups per function (cold model on)
+        self.spinups_by_function: Dict[str, int] = spinups_by_function or {}
+        #: replica-second provisioning charge per function (only when
+        #: the engine ran with a :class:`ReplicaModel`)
+        self.provision_by_function: Dict[str, float] = \
+            provision_by_function or {}
+        #: provisioned pool size per function (1 when untracked)
+        self.replicas_by_function: Dict[str, int] = \
+            replicas_by_function or {}
         #: end-of-run warm/busy state (only when ``collect_carry=True``)
         self.carry = carry
         #: per-instance tenant identity (uid order) when the engine ran
@@ -281,6 +363,7 @@ class FleetReport:
         self._sorted: Optional[np.ndarray] = None
         self._total_cost: Optional[float] = None
         self._total_queue_delay: Optional[float] = None
+        self._provision_cost: Optional[float] = None
         self._attainment: Dict[float, float] = {}
 
     @classmethod
@@ -291,7 +374,12 @@ class FleetReport:
                     cpu_utilization: float, mem_utilization: float,
                     queue_delay_by_function: Dict[str, float],
                     carry: Optional[FleetCarry] = None,
-                    tenants: Optional[List[str]] = None) -> "FleetReport":
+                    tenants: Optional[List[str]] = None,
+                    busy_by_function: Optional[Dict[str, float]] = None,
+                    spinups_by_function: Optional[Dict[str, int]] = None,
+                    provision_by_function: Optional[Dict[str, float]] = None,
+                    replicas_by_function: Optional[Dict[str, int]] = None,
+                    ) -> "FleetReport":
         """Build a report directly from aligned per-instance arrays
         (uid order) without materializing ``InstanceResult`` objects."""
         self = cls.__new__(cls)
@@ -299,7 +387,10 @@ class FleetReport:
             makespan=makespan, cpu_utilization=cpu_utilization,
             mem_utilization=mem_utilization,
             queue_delay_by_function=queue_delay_by_function, carry=carry,
-            tenants=tenants)
+            tenants=tenants, busy_by_function=busy_by_function,
+            spinups_by_function=spinups_by_function,
+            provision_by_function=provision_by_function,
+            replicas_by_function=replicas_by_function)
         self.arrivals = np.asarray(arrival, dtype=np.float64)
         self.finishes = np.asarray(finish, dtype=np.float64)
         self._e2e = np.asarray(e2e, dtype=np.float64)
@@ -376,8 +467,59 @@ class FleetReport:
         if self._total_cost is None:
             # left-to-right Python-float adds: identical IEEE ops (and
             # bits) to the historical sum over InstanceResult objects
-            self._total_cost = float(sum(self.costs.tolist()))
+            total = float(sum(self.costs.tolist()))
+            if self.provision_by_function:
+                # replica-second bill folded in only when replicas were
+                # provisioned, so replica-free reports stay bitwise
+                # identical to the pre-replica engine
+                total += self.provision_cost
+            self._total_cost = total
         return self._total_cost
+
+    @property
+    def provision_cost(self) -> float:
+        """Σ replica-second charges (sorted-key order, deterministic)."""
+        if self._provision_cost is None:
+            acc = 0.0
+            for key in sorted(self.provision_by_function):
+                acc += self.provision_by_function[key]
+            self._provision_cost = acc
+        return self._provision_cost
+
+    def saturation(self) -> Dict[str, Dict[str, float]]:
+        """Per-function saturation diagnostics, keyed like the queue
+        ledger (``"<tenant identity>/<function name>"``).
+
+        Each row reports ``queue_delay_s`` (Σ admission wait charged to
+        the function), ``queue_share`` (its share of the fleet's total
+        per-function queue delay — the observable the online controller
+        classifies capacity-bound drift with), ``busy_s`` (Σ executed
+        runtime), ``replicas`` (provisioned pool size; 1 when the
+        engine ran without a :class:`ReplicaModel`), ``utilization``
+        (``busy_s / (replicas * makespan)`` — mean busy fraction of the
+        provisioned pool) and ``spinups`` (cold-start container
+        spin-ups). A queue-delay-dominated, high-utilization function
+        is capacity-bound: more replicas help; a low-queue function
+        missing its SLO is config-bound: faster configs help."""
+        keys = set(self.queue_delay_by_function) | set(self.busy_by_function)
+        total_q = 0.0
+        for key in sorted(self.queue_delay_by_function):
+            total_q += self.queue_delay_by_function[key]
+        out: Dict[str, Dict[str, float]] = {}
+        for key in sorted(keys):
+            q = self.queue_delay_by_function.get(key, 0.0)
+            busy = self.busy_by_function.get(key, 0.0)
+            r = int(self.replicas_by_function.get(key, 1))
+            cap = r * self.makespan
+            out[key] = {
+                "queue_delay_s": q,
+                "queue_share": (q / total_q) if total_q > 0.0 else 0.0,
+                "busy_s": busy,
+                "replicas": r,
+                "utilization": (busy / cap) if cap > 0.0 else 0.0,
+                "spinups": int(self.spinups_by_function.get(key, 0)),
+            }
+        return out
 
     @property
     def total_queue_delay(self) -> float:
@@ -423,8 +565,10 @@ class FleetReport:
         makespan = (float(finite_fin.max()) - float(arrival.min())
                     if arrival.size and finite_fin.size else 0.0)
         prefix = tenant + "/"
-        pfq = {k: v for k, v in self.queue_delay_by_function.items()
-               if k.startswith(prefix)}
+
+        def _sub(ledger):
+            return {k: v for k, v in ledger.items() if k.startswith(prefix)}
+
         return FleetReport.from_arrays(
             arrival=arrival, finish=finish, e2e=self._e2e[mask],
             queue_delay=self.queue_delays[mask],
@@ -432,7 +576,11 @@ class FleetReport:
             failed=self.failed_mask[mask], makespan=max(makespan, 0.0),
             cpu_utilization=self.cpu_utilization,
             mem_utilization=self.mem_utilization,
-            queue_delay_by_function=pfq,
+            queue_delay_by_function=_sub(self.queue_delay_by_function),
+            busy_by_function=_sub(self.busy_by_function),
+            spinups_by_function=_sub(self.spinups_by_function),
+            provision_by_function=_sub(self.provision_by_function),
+            replicas_by_function=_sub(self.replicas_by_function),
             tenants=[t for t in self.tenants if t == tenant])
 
     def by_tenant(self) -> Dict[str, "FleetReport"]:
@@ -631,11 +779,16 @@ class FleetEngine:
                  cold_start: ColdStartModel = NO_COLD_START,
                  plane_backend: str = "numpy",
                  interference: Optional[
-                     Mapping[Tuple[str, str], float]] = None):
+                     Mapping[Tuple[str, str], float]] = None,
+                 scale: Optional[ReplicaModel] = None):
         self.backend = as_backend(backend)
         self.pricing = pricing
         self.cluster = cluster
         self.cold_start = cold_start
+        #: per-function replica pools (see :class:`ReplicaModel`);
+        #: ``None`` disables replica bounds/billing entirely — the
+        #: engine is then bit-identical to its pre-replica behaviour
+        self.scale = scale
         if plane_backend not in ("numpy", "jax"):
             raise ValueError(
                 f"plane_backend must be 'numpy' or 'jax', got "
@@ -703,7 +856,8 @@ class FleetEngine:
 
         if (carry is None and not collect_carry
                 and len(workflows) == 1 and not self.cluster.finite
-                and self.cold_start.delay_s == 0.0):
+                and self.cold_start.delay_s == 0.0
+                and self.scale is None):
             # degenerate case (every Environment.execute sample): no
             # contention => runtimes are schedule-independent, so skip
             # the event machinery — ONE batch call + longest path
@@ -719,12 +873,17 @@ class FleetEngine:
         pending: collections.deque = collections.deque()
         warm: Dict[tuple, List[List[float]]] = collections.defaultdict(list)
         used_cpu = used_mem = 0.0
+        #: live admission count per (tenant identity, function) — the
+        #: replica bound's denominator (only tracked when scale is on)
+        running: Optional[Dict[tuple, int]] = \
+            collections.defaultdict(int) if self.scale is not None else None
         inv_log: Optional[List[Tuple[float, float, float]]] = \
             [] if collect_carry else None
         if carry is not None:
             t_min = float(times.min())
             for key, pool in carry.warm.items():
                 warm[key] = [list(c) for c in pool]
+            self._trim_warm(warm)
             for finish, cpu, mem in carry.busy:
                 if finish <= t_min:
                     continue            # released before this run starts
@@ -738,6 +897,8 @@ class FleetEngine:
         t0 = float(events[0][0]) if events else 0.0
         t_last, cpu_area, mem_area = t0, 0.0, 0.0
         per_fn_queue: Dict[str, float] = collections.defaultdict(float)
+        per_fn_busy: Dict[str, float] = collections.defaultdict(float)
+        per_fn_spin: Dict[str, int] = collections.defaultdict(int)
 
         while events:
             t = events[0][0]
@@ -761,6 +922,8 @@ class FleetEngine:
                     node = wf.nodes[name]
                     used_cpu -= node.config.cpu
                     used_mem -= node.config.mem
+                    if running is not None:
+                        running[(wf.identity, name)] -= 1
                     # an OOM-killed invocation leaves no reusable
                     # container behind; containers are per *function*
                     # (tenant identity + node name), shared across
@@ -781,7 +944,8 @@ class FleetEngine:
                             pending.append((t, uid, succ))
             used_cpu, used_mem = self._start_pending(
                 t, pending, state, warm, used_cpu, used_mem,
-                events, seq, per_fn_queue, inv_log)
+                events, seq, per_fn_queue, per_fn_busy, per_fn_spin,
+                inv_log, running)
 
         stranded = {uid for _, uid, _ in pending if not state.dead[uid]}
         if stranded:  # engine invariant: only dead instances leave work behind
@@ -794,8 +958,13 @@ class FleetEngine:
                 warm={k: [list(c) for c in pool]
                       for k, pool in warm.items() if pool},
                 busy=list(inv_log))
+        prov, repl = self._provision_ledgers(
+            self._fleet_function_configs(state.wfs), t0, t_last)
         return self._report(state, t0, t_last, cpu_area, mem_area,
-                            dict(per_fn_queue), carry_out=carry_out)
+                            dict(per_fn_queue), carry_out=carry_out,
+                            per_fn_busy=dict(per_fn_busy),
+                            per_fn_spin=dict(per_fn_spin),
+                            provision_by_fn=prov, replicas_by_fn=repl)
 
     def run_many(self, template: Workflow,
                  config_sets: Sequence[Dict[str, "ResourceConfig"]],
@@ -930,6 +1099,10 @@ class FleetEngine:
             constrained.append("finite cluster capacity")
         if self.cold_start.delay_s > 0.0:
             constrained.append("cold starts enabled")
+        if self.scale is not None:
+            constrained.append(
+                "replica pools active (admission-concurrency bounds "
+                "are an event-loop concept)")
         if collect_carry:
             constrained.append("collect_carry requested")
         if constrained:
@@ -1078,7 +1251,7 @@ class FleetEngine:
             wfs.append(wf)
         shadow = FleetEngine(_PlannedBackend(plan), pricing=self.pricing,
                              cluster=self.cluster,
-                             cold_start=self.cold_start)
+                             cold_start=self.cold_start, scale=self.scale)
         return shadow.run(wfs, times, carry=carry,
                           collect_carry=collect_carry)
 
@@ -1172,6 +1345,12 @@ class FleetEngine:
         keep_alive_s = self.cold_start.keep_alive_s
         total_cpu = self.cluster.total_cpu
         total_mem = self.cluster.total_mem_mb
+        scale = self.scale
+        if scale is not None:
+            pool_of = [scale.pool(tname, name) for name in names]
+            running = [0] * len(names)
+        else:
+            pool_of = running = None
 
         arrival = np.array(times, dtype=np.float64)
         finish = np.zeros(m)
@@ -1196,6 +1375,7 @@ class FleetEngine:
             t_min = float(arrival.min())
             for key, pool in carry.warm.items():
                 warm[key] = [list(c) for c in pool]
+            self._trim_warm(warm)
             for fin_t, cpu_r, mem_r in carry.busy:
                 if fin_t <= t_min:
                     continue            # released before this run starts
@@ -1209,6 +1389,8 @@ class FleetEngine:
         t0 = float(events[0][0]) if events else 0.0
         t_last, cpu_area, mem_area = t0, 0.0, 0.0
         per_fn_queue: Dict[str, float] = collections.defaultdict(float)
+        per_fn_busy: Dict[str, float] = collections.defaultdict(float)
+        per_fn_spin: Dict[str, int] = collections.defaultdict(int)
 
         while events:
             t = events[0][0]
@@ -1229,6 +1411,8 @@ class FleetEngine:
                     v = payload
                     used_cpu -= cpu_row[v]
                     used_mem -= mem_row[v]
+                    if running is not None:
+                        running[v] -= 1
                     if cold_delay_s > 0.0 and not failed_rows[uid][v]:
                         warm[(tname, names[v])].append(
                             [t, t + keep_alive_s])
@@ -1251,6 +1435,10 @@ class FleetEngine:
                     if (used_cpu + cpu_row[v] > total_cpu
                             or used_mem + mem_row[v] > total_mem):
                         break
+                    if running is not None:
+                        if running[v] >= pool_of[v]:
+                            break
+                        running[v] += 1
                     pending.popleft()
                     used_cpu += cpu_row[v]
                     used_mem += mem_row[v]
@@ -1270,13 +1458,17 @@ class FleetEngine:
                         # a same-instant re-admission round
                         used_cpu -= cpu_row[v]
                         used_mem -= mem_row[v]
+                        if running is not None:
+                            running[v] -= 1
                         dead[uid] = True
                         released = True
                         continue
+                    per_fn_busy[fn_keys[v]] += rt
                     delay = 0.0
                     if cold_delay_s > 0.0 and not self._take_warm(
                             (tname, names[v]), t, warm):
                         delay = cold_delay_s
+                        per_fn_spin[fn_keys[v]] += 1
                     cold_delay[uid] += delay
                     cost_items[uid].append((rank_of[v],
                                             cost_rows[uid][v]))
@@ -1300,13 +1492,21 @@ class FleetEngine:
                 warm={k: [list(c) for c in pool]
                       for k, pool in warm.items() if pool},
                 busy=list(inv_log))
+        prov = repl = None
+        if scale is not None:
+            fn_configs = {
+                (tname, name): ResourceConfig(cpu=cpu_row[v], mem=mem_row[v])
+                for v, name in enumerate(names)}
+            prov, repl = self._provision_ledgers(fn_configs, t0, t_last)
         return self._report_arrays(
             arrival=arrival, finish=finish, queue_delay=queue_delay,
             cold_delay=cold_delay, failed=failed_i, dead=dead,
             costs=_reduce_costs(cost_items, m), t0=t0, t_end=t_last,
             cpu_area=cpu_area, mem_area=mem_area,
             per_fn_queue=dict(per_fn_queue), carry_out=carry_out,
-            tenants=[tname] * m)
+            tenants=[tname] * m, per_fn_busy=dict(per_fn_busy),
+            per_fn_spin=dict(per_fn_spin), provision_by_fn=prov,
+            replicas_by_fn=repl)
 
     def _run_many_vectorized(self, template, config_sets, times_list,
                              carry, names, cpu, mem, runtimes, failed,
@@ -1365,6 +1565,7 @@ class FleetEngine:
         # (candidate, instance) — sources start at the arrival instant,
         # successors at the max of their predecessors' finishes, which
         # is exactly the event-loop recurrence (t + rt per hop)
+        start_by_node: Dict[str, np.ndarray] = {}
         if self.plane_backend == "jax" and noise is None:
             inst_finish = self._sweep_jax(template, order, col, t_all, rt)
         else:
@@ -1377,6 +1578,13 @@ class FleetEngine:
                         start = np.maximum(start, finish_by_node[p])
                 else:
                     start = t_all[None, :]
+                if noise is not None:
+                    # start order drives the busy ledger below: the
+                    # scalar loop admits (and accumulates) in
+                    # start-event order, which per-instance noise can
+                    # decouple from arrival order
+                    start_by_node[name] = np.broadcast_to(
+                        start, (live.size, t_all.size))
                 finish_by_node[name] = start + rt_col(name)
             inst_finish = None
             for arr in finish_by_node.values():
@@ -1412,6 +1620,27 @@ class FleetEngine:
                 for f, _, _ in busy:
                     if f > t0 and f > t_last:
                         t_last = float(f)
+                # per-fn busy ledger: the scalar loop's left-to-right
+                # accumulation in admission (= start-event) order. With
+                # noise off every instance contributes the same value,
+                # so repeated addition reproduces any admission order
+                # bit-for-bit; with noise on, instances are summed in
+                # start-time order (stable on ties).
+                fn_busy: Dict[str, float] = {}
+                for name in names:
+                    if noise is None:
+                        val = float(rt[k, col[name]])
+                        acc = 0.0
+                        for _ in range(m):
+                            acc += val
+                    else:
+                        vals = rt_eff[k, seg, col[name]]
+                        starts = start_by_node[name][k, seg]
+                        acc = 0.0
+                        for x in vals[np.argsort(starts,
+                                                 kind="stable")].tolist():
+                            acc += x
+                    fn_busy[f"{template.identity}/{name}"] = acc
                 zeros = np.zeros(m)
                 cost = (np.full(m, cand_cost[k]) if noise is None
                         else cand_cost[k, seg].copy())
@@ -1425,6 +1654,7 @@ class FleetEngine:
                     makespan=max(t_last - t0, 0.0),
                     cpu_utilization=0.0, mem_utilization=0.0,
                     queue_delay_by_function=dict(pfq),
+                    busy_by_function=fn_busy,
                     tenants=[template.identity] * m)
         return reports
 
@@ -1460,6 +1690,7 @@ class FleetEngine:
                 np.asarray([self.interference.get((wf.identity, n.name), 1.0)
                             for n in nodes])
         cost = 0.0
+        busy: Dict[str, float] = {}
         for node, rt, bad in zip(nodes, runtimes, failed):
             node.runtime = float(rt)
             node.failed = bool(bad)
@@ -1467,6 +1698,7 @@ class FleetEngine:
                 node.fail_reason = ""
             if math.isfinite(node.runtime):
                 cost += self.pricing.function_cost(node.runtime, node.config)
+                busy[f"{wf.identity}/{node.name}"] = node.runtime
         e2e = wf.end_to_end_latency()
         fin = arrival + e2e
         return FleetReport.from_arrays(
@@ -1476,7 +1708,8 @@ class FleetEngine:
             failed=np.array([bool(failed.any())]),
             makespan=e2e if math.isfinite(e2e) else 0.0,
             cpu_utilization=0.0, mem_utilization=0.0,
-            queue_delay_by_function={}, tenants=[wf.identity])
+            queue_delay_by_function={}, busy_by_function=busy,
+            tenants=[wf.identity])
 
     def _check_placeable(self, wf: Workflow) -> None:
         for node in wf:
@@ -1486,6 +1719,56 @@ class FleetEngine:
                     f"{wf.name}/{node.name} config {node.config} exceeds "
                     f"cluster capacity ({self.cluster.total_cpu} vCPU, "
                     f"{self.cluster.total_mem_mb} MB) — can never be placed")
+
+    def _trim_warm(self, warm: Dict[tuple, List[List[float]]]) -> None:
+        """Shard a carried-in warm pool to the current replica counts:
+        a pool larger than its function's pool size R (the previous
+        epoch ran with more replicas) keeps only the R latest-expiring
+        containers (ties by deposit time), in expiry order. No-op when
+        the engine runs without a :class:`ReplicaModel` or no pool
+        overflows, so replica-free carries are untouched bit-for-bit."""
+        if self.scale is None:
+            return
+        for key in list(warm):
+            pool = warm[key]
+            r = self.scale.pool(key[0], key[1])
+            if len(pool) > r:
+                pool.sort(key=lambda c: (c[1], c[0]))
+                del pool[:-r]
+
+    def _fleet_function_configs(self, wfs) -> Dict[tuple, object]:
+        """First-seen config per (tenant identity, function) across the
+        fleet — the provisioning ledger's sizing basis (wf order, node
+        insertion order; deterministic)."""
+        seen: Dict[tuple, object] = {}
+        for wf in wfs:
+            for name, node in wf.nodes.items():
+                key = (wf.identity, name)
+                if key not in seen:
+                    seen[key] = node.config
+        return seen
+
+    def _provision_ledgers(self, fn_configs: Dict[tuple, object],
+                           t0: float, t_end: float):
+        """Replica-second billing for one run: each provisioned pool is
+        charged ``pricing.replica_cost`` over the fleet makespan.
+        Returns ``(provision_by_function, replicas_by_function)`` keyed
+        like the queue ledger, or ``(None, None)`` when the engine runs
+        without a :class:`ReplicaModel` (replica-free reports then
+        carry no provisioning fields at all)."""
+        if self.scale is None:
+            return None, None
+        makespan = max(t_end - t0, 0.0)
+        prov: Dict[str, float] = {}
+        repl: Dict[str, int] = {}
+        for (ident, name), cfg in fn_configs.items():
+            r = self.scale.pool(ident, name)
+            fkey = f"{ident}/{name}"
+            repl[fkey] = r
+            prov[fkey] = self.pricing.replica_cost(
+                r, cfg, makespan, frac=self.scale.provision_frac,
+                floor=self.scale.provision_floor)
+        return prov, repl
 
     def _take_warm(self, key, t: float,
                    warm: Dict[tuple, List[List[float]]]) -> bool:
@@ -1503,15 +1786,19 @@ class FleetEngine:
 
     def _start_pending(self, t, pending, state: _FleetState, warm,
                        used_cpu, used_mem, events, seq, per_fn_queue,
-                       inv_log=None):
+                       per_fn_busy, per_fn_spin, inv_log=None,
+                       running=None):
         """FIFO admission: start every queued invocation that fits, stop
         at the first that doesn't (no overtaking => no starvation). All
         admitted invocations are evaluated in ONE backend batch call and
-        priced in one vectorized ``cost_batch`` expression.
-        If an invocation dies on the spot (infinite runtime, no clamped
-        estimate) its freed capacity triggers another admission round at
-        the same instant — otherwise work queued behind it could strand
-        with no future event to wake the scheduler."""
+        priced in one vectorized ``cost_batch`` expression. A
+        :class:`ReplicaModel` adds a second blocking condition with the
+        same discipline: the head waits while its function's pool is
+        fully busy (``running == R``), and everything behind it waits
+        too. If an invocation dies on the spot (infinite runtime, no
+        clamped estimate) its freed capacity triggers another admission
+        round at the same instant — otherwise work queued behind it
+        could strand with no future event to wake the scheduler."""
         while True:
             startable: List[Tuple[float, int, str]] = []
             while pending:
@@ -1523,6 +1810,11 @@ class FleetEngine:
                 if (used_cpu + cfg.cpu > self.cluster.total_cpu
                         or used_mem + cfg.mem > self.cluster.total_mem_mb):
                     break
+                if running is not None:
+                    rkey = (state.wfs[uid].identity, name)
+                    if running[rkey] >= self.scale.pool(*rkey):
+                        break
+                    running[rkey] += 1
                 pending.popleft()
                 used_cpu += cfg.cpu
                 used_mem += cfg.mem
@@ -1555,7 +1847,8 @@ class FleetEngine:
                 state.queue_delay[uid] += wait
                 # same scoping as warm containers: heterogeneous fleets
                 # must not merge unrelated functions sharing a node name
-                per_fn_queue[f"{state.wfs[uid].identity}/{name}"] += wait
+                fkey = f"{state.wfs[uid].identity}/{name}"
+                per_fn_queue[fkey] += wait
                 if bad:
                     state.failed[uid] = True
                 if not math.isfinite(rt):
@@ -1564,14 +1857,18 @@ class FleetEngine:
                     cfg = node.config
                     used_cpu -= cfg.cpu
                     used_mem -= cfg.mem
+                    if running is not None:
+                        running[(state.wfs[uid].identity, name)] -= 1
                     state.dead[uid] = True
                     released = True
                     continue
+                per_fn_busy[fkey] += rt
                 delay = 0.0
                 if self.cold_start.delay_s > 0.0 and \
                         not self._take_warm((state.wfs[uid].identity, name),
                                             t, warm):
                     delay = self.cold_start.delay_s
+                    per_fn_spin[fkey] += 1
                 state.cold_delay[uid] += delay
                 state.cost_items[uid].append((state.rank[uid][name],
                                               float(costs[k])))
@@ -1610,7 +1907,9 @@ class FleetEngine:
             queue_delay_by_function={}, carry=carry_out)
 
     def _report(self, state: _FleetState, t0, t_end, cpu_area, mem_area,
-                per_fn_queue, carry_out=None) -> FleetReport:
+                per_fn_queue, carry_out=None, per_fn_busy=None,
+                per_fn_spin=None, provision_by_fn=None,
+                replicas_by_fn=None) -> FleetReport:
         return self._report_arrays(
             arrival=state.arrival, finish=state.finish,
             queue_delay=state.queue_delay, cold_delay=state.cold_delay,
@@ -1618,12 +1917,16 @@ class FleetEngine:
             costs=state.instance_costs(), t0=t0, t_end=t_end,
             cpu_area=cpu_area, mem_area=mem_area,
             per_fn_queue=per_fn_queue, carry_out=carry_out,
-            tenants=[wf.identity for wf in state.wfs])
+            tenants=[wf.identity for wf in state.wfs],
+            per_fn_busy=per_fn_busy, per_fn_spin=per_fn_spin,
+            provision_by_fn=provision_by_fn, replicas_by_fn=replicas_by_fn)
 
     def _report_arrays(self, *, arrival, finish, queue_delay, cold_delay,
                        failed, dead, costs, t0, t_end, cpu_area, mem_area,
                        per_fn_queue, carry_out=None,
-                       tenants=None) -> FleetReport:
+                       tenants=None, per_fn_busy=None, per_fn_spin=None,
+                       provision_by_fn=None,
+                       replicas_by_fn=None) -> FleetReport:
         """Shared report assembly for the scalar event loop and the
         table-driven cells (identical inf-substitution, utilization and
         makespan arithmetic)."""
@@ -1643,7 +1946,10 @@ class FleetEngine:
             makespan=makespan, cpu_utilization=cpu_util,
             mem_utilization=mem_util,
             queue_delay_by_function=per_fn_queue, carry=carry_out,
-            tenants=tenants)
+            tenants=tenants, busy_by_function=per_fn_busy,
+            spinups_by_function=per_fn_spin,
+            provision_by_function=provision_by_fn,
+            replicas_by_function=replicas_by_fn)
 
 
 def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],

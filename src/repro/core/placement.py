@@ -193,16 +193,19 @@ def pack_cells(cells: Sequence[TenantCell]) -> List[TenantCell]:
     return list(cells)
 
 
-def scale_cluster(per_cell: ClusterModel, n_cells: int) -> ClusterModel:
-    """Aggregate ``n_cells`` per-cell quotas into one packed pool
-    (equal total capacity; infinite dimensions stay infinite)."""
-    if n_cells < 1:
-        raise ValueError("need n_cells >= 1")
+def scale_cluster(per_cell: ClusterModel, factor: float) -> ClusterModel:
+    """Scale a cluster's capacity by ``factor`` (infinite dimensions
+    stay infinite). Integer factors aggregate ``factor`` per-cell
+    quotas into one packed pool (the multi-tenant case); fractional
+    factors >= 1 grow capacity for autoscaling grants — the scale
+    actuator's cluster half (:mod:`repro.core.autoscale`)."""
+    if not factor >= 1:
+        raise ValueError("need factor >= 1")
     cpu = per_cell.total_cpu
     mem = per_cell.total_mem_mb
     return ClusterModel(
-        total_cpu=cpu * n_cells if math.isfinite(cpu) else cpu,
-        total_mem_mb=mem * n_cells if math.isfinite(mem) else mem)
+        total_cpu=cpu * factor if math.isfinite(cpu) else cpu,
+        total_mem_mb=mem * factor if math.isfinite(mem) else mem)
 
 
 # --------------------------------------------------------------------------

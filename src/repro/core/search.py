@@ -461,6 +461,13 @@ def make_searcher(name: str, env: EnvLike, **kwargs) -> Searcher:
     try:
         cls = SEARCHERS[name]
     except KeyError:
-        raise ValueError(
-            f"unknown searcher {name!r}; choose from {sorted(SEARCHERS)}")
+        # the joint sizing+scaling searcher registers itself on import;
+        # importing it here (not at module top) keeps core.search free
+        # of a circular dependency on core.autoscale
+        import repro.core.autoscale  # noqa: F401
+        try:
+            cls = SEARCHERS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown searcher {name!r}; choose from {sorted(SEARCHERS)}")
     return cls(env, **kwargs)

@@ -114,10 +114,11 @@ class _AuditedEngine(FleetEngine):
         self.rounds = 0
 
     def _start_pending(self, t, pending, state, warm, used_cpu,
-                       used_mem, events, seq, per_fn_queue, inv_log=None):
+                       used_mem, events, seq, per_fn_queue, *args,
+                       **kwargs):
         cpu, mem = super()._start_pending(
             t, pending, state, warm, used_cpu, used_mem, events, seq,
-            per_fn_queue, inv_log)
+            per_fn_queue, *args, **kwargs)
         self.rounds += 1
         assert cpu <= self.cluster.total_cpu + 1e-9
         assert mem <= self.cluster.total_mem_mb + 1e-9
