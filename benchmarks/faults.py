@@ -1,0 +1,371 @@
+"""Fault-injection benchmark (``BENCH_faults.json``).
+
+Replays one searched workflow fleet under a *compound* fault schedule
+— per-attempt transient failures plus straggler runtime inflation —
+five ways, every variant on the SAME paired fault stream (one
+:meth:`FaultModel.fault_stream` draw per replay plane, keyed by the
+``(attempt, instance, function)`` coordinate, so differences are
+policy, never luck):
+
+  * **fault_free**    — the same configs with ``faults=None`` (the
+    attainment ceiling, and the engine's pinned no-op path),
+  * **no_retry**      — faults on, no recovery: every failed attempt is
+    a dead instance,
+  * **fixed_retry**   — a blanket 2-retry policy on every function
+    (the naive comparator: retries without timeouts or hedges),
+  * **blanket_hedge** — aggressive blanket hedging: every function
+    hedges at HALF its solo runtime (the hedge fires on essentially
+    every attempt), plus retries and straggler timeouts — the
+    tune-nothing way to buy attainment, at roughly doubled spend,
+  * **searched**      — :class:`repro.core.faults.ResilienceSearcher`:
+    per-function ladder levels searched jointly with the resource
+    configs (failure-guided grants, config retuning, trim).
+
+A sixth, placement-aware row replays a two-tenant fleet through a
+correlated node outage (``outage_fail=1.0`` on one placement bin for a
+window of the arrival span) twice: **coplaced** puts both tenants on
+the failing node (the affinity-only ablation — PR 8's chatty-colocate
+bonus taken to its extreme), **spread** anti-affinity-spreads them
+across two nodes so the outage can only kill one tenant's window.
+
+Acceptance (checked by ``--smoke``, pinned in the emitted JSON):
+
+  * searched attainment >= 0.95x fault-free while no_retry drops below
+    0.8x (the fault schedule has teeth, recovery restores SLO
+    compliance),
+  * attainment is monotone in recovery: searched >= fixed_retry >=
+    no_retry,
+  * searched cost-at-equal-attainment (total cost / attainment)
+    strictly below blanket hedging — targeted recovery beats paying
+    the hedge tax on every invocation,
+  * spread strictly beats coplaced under the correlated outage,
+  * the ``faults=None`` identity row: an engine constructed with
+    explicit ``faults=None, resilience=None`` replays bit-identically
+    to the plain engine on the fast AND constrained planes.
+
+Every row is deterministic (wall-clock keys stay on stdout), so
+``BENCH_faults.json`` is byte-stable across runs of one master seed;
+``--smoke`` gates without writing the artifact.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import (ClusterModel, FleetEngine, PoissonArrivals)
+from repro.core.faults import (FaultModel, OutageWindow, ResilienceModel,
+                               ResiliencePolicy, ResilienceSpec)
+from repro.core.search import make_searcher
+from repro.serverless.generator import chain_workflow, suggest_slo
+from repro.serverless.platform import SimulatedPlatform
+
+from benchmarks.common import emit
+
+#: the pinned bars
+SEARCHED_BAR = 0.95        # searched attainment / fault-free attainment
+NO_RETRY_BAR = 0.80        # no-retry must drop below this ratio
+
+#: the compound fault schedule: per-attempt transients on every
+#: function plus heavy-tailed stragglers — rates set so an unprotected
+#: 5-function chain loses well over a fifth of its instances while a
+#: retried/hedged fleet recovers
+FAULTS = FaultModel(default_transient=0.12, straggler_prob=0.12,
+                    straggler_factor=6.0, seed=5)
+
+#: the shared fleet-evaluation context (also the searched variant's
+#: spec): one arrival set, infinite cluster, no cold starts — failures
+#: and recovery are the only thing the variants disagree on
+SPEC = ResilienceSpec(faults=FAULTS, rate=0.2, n_instances=48,
+                      arrival_seed=3, target_attainment=SEARCHED_BAR,
+                      grant_width=4, max_rounds=24, retune_step=0.9,
+                      config_grant=64)
+
+WF_SEED = 11
+N_NODES = 5
+SLACK = 3.0
+
+#: correlated-outage scenario: node 0 is dead for this window of the
+#: two-tenant fleet's arrival span (no background transients — the
+#: outage is the only fault, so placement is the only lever). The
+#: window outlasts the retry budget: a failed attempt burns its full
+#: runtime, so three attempts span ~150s — admissions deep inside the
+#: window cannot back off past its end and die
+OUTAGE = OutageWindow(node=0, start_s=40.0, end_s=340.0)
+OUTAGE_RETRY = ResiliencePolicy(max_retries=2, backoff_s=0.1)
+
+
+def _fleet(env, template, configs, faults, resilience):
+    engine = FleetEngine(env.backend, pricing=env.pricing,
+                         cluster=SPEC.cluster, cold_start=SPEC.cold_start,
+                         faults=faults, resilience=resilience)
+    times = PoissonArrivals(SPEC.rate, SPEC.n_instances,
+                            seed=SPEC.arrival_seed).times()
+    return engine.run_many(template, [configs], [times])[0]
+
+
+def _solo_runtimes(env, template, configs) -> Dict[str, float]:
+    wf = template.copy()
+    wf.apply_configs(configs)
+    runtimes, _failed = env.backend.invoke_batch(list(wf.nodes.values()))
+    return {name: float(rt) for name, rt in zip(wf.nodes, runtimes)}
+
+
+def recovery_case(case: str) -> Dict:
+    """The five recovery variants on one paired fault stream."""
+    t0 = time.perf_counter()
+    template = chain_workflow(N_NODES, seed=WF_SEED)
+    slo = suggest_slo(template, slack=SLACK)
+
+    # one inner config search shared by every blanket variant — the
+    # comparison isolates the recovery policy, not the configs
+    env = SimulatedPlatform().environment()
+    base = make_searcher("aarc", env).search(template.copy(), slo)
+    runtimes = _solo_runtimes(env, template, base.configs)
+    # hedge at half the solo runtime: fires on every attempt (the
+    # hedge tax), cuts every straggler — attainment without tuning
+    blanket_hedge = ResilienceModel(policies={
+        n: ResiliencePolicy(max_retries=SPEC.max_retries,
+                            timeout_s=SPEC.timeout_factor * runtimes[n],
+                            backoff_s=SPEC.backoff_s,
+                            hedge_delay_s=0.5 * runtimes[n])
+        for n in template.nodes})
+
+    variants: Dict[str, Dict[str, object]] = {}
+
+    def record(name, report, configs, extra_cost=0.0):
+        att = report.slo_attainment(slo)
+        variants[name] = {
+            "attainment": att, "cost": report.total_cost,
+            "search_cost": extra_cost,
+            "retries": report.total_retries,
+            "timeouts": report.total_timeouts,
+            "hedges": report.total_hedges,
+            "failures": report.total_failures,
+            "failed_instances": int(report.failed_mask.sum()),
+        }
+
+    record("fault_free",
+           _fleet(env, template, base.configs, None, None),
+           base.configs)
+    record("no_retry",
+           _fleet(env, template, base.configs, FAULTS, None),
+           base.configs)
+    record("fixed_retry",
+           _fleet(env, template, base.configs, FAULTS,
+                  ResilienceModel(default=ResiliencePolicy(
+                      max_retries=2, backoff_s=SPEC.backoff_s))),
+           base.configs)
+    record("blanket_hedge",
+           _fleet(env, template, base.configs, FAULTS, blanket_hedge),
+           base.configs)
+
+    searched = make_searcher(
+        "resilience", lambda: SimulatedPlatform().environment(),
+        spec=SPEC).search(template.copy(), slo)
+    record("searched",
+           _fleet(env, template, searched.configs, FAULTS,
+                  ResilienceModel(policies=searched.policies)),
+           searched.configs, extra_cost=searched.search_cost)
+
+    ceiling = variants["fault_free"]["attainment"]
+    row: Dict[str, object] = {
+        "case": case, "wf_seed": WF_SEED, "n_nodes": N_NODES,
+        "slo_s": slo, "n_instances": SPEC.n_instances,
+        "transient": FAULTS.default_transient,
+        "straggler_prob": FAULTS.straggler_prob,
+        "fault_seed": FAULTS.seed,
+        "searched_levels": sorted(
+            (n, p.max_retries,
+             p.timeout_s is not None, p.hedge_delay_s is not None)
+            for n, p in searched.policies.items()),
+    }
+    for name, v in variants.items():
+        for k, val in v.items():
+            row[f"{name}_{k}"] = val
+        att = float(v["attainment"])  # type: ignore[arg-type]
+        row[f"{name}_ratio"] = (att / ceiling) if ceiling > 1e-9 \
+            else float("nan")
+        row[f"{name}_cost_at_attainment"] = \
+            (float(v["cost"]) / att) if att > 1e-9 else None
+    row["wall_s"] = time.perf_counter() - t0
+    return row
+
+
+def placement_case(case: str) -> Dict:
+    """Anti-affinity spread vs affinity-only colocation under a
+    correlated node outage: two tenants, one paired fault stream, the
+    only difference is the ``node_of`` placement map."""
+    t0 = time.perf_counter()
+    env = SimulatedPlatform().environment()
+    templates, configs, slos = [], [], []
+    for i, ident in enumerate(("tenantA", "tenantB")):
+        tpl = chain_workflow(N_NODES, seed=WF_SEED + i)
+        tpl.tenant = f"{ident}.{tpl.name}"
+        slo = suggest_slo(tpl, slack=SLACK)
+        res = make_searcher("aarc", env).search(tpl.copy(), slo)
+        templates.append(tpl)
+        configs.append(res.configs)
+        slos.append(slo)
+    idents = [tpl.identity for tpl in templates]
+
+    def run_fleet(node_of: Dict[str, int]):
+        faults = FaultModel(default_transient=0.0, outages=(OUTAGE,),
+                            node_of=node_of, seed=FAULTS.seed)
+        engine = FleetEngine(
+            env.backend, pricing=env.pricing, faults=faults,
+            resilience=ResilienceModel(default=OUTAGE_RETRY))
+        wfs, times = [], []
+        for tpl, cfg in zip(templates, configs):
+            t = PoissonArrivals(SPEC.rate, SPEC.n_instances,
+                                seed=SPEC.arrival_seed).times()
+            for _ in range(SPEC.n_instances):
+                wf = tpl.copy()
+                wf.apply_configs(cfg)
+                wfs.append(wf)
+            times.append(t)
+        report = engine.run(wfs, np.concatenate(times))
+        hits = 0
+        for ident, slo in zip(idents, slos):
+            sub = report.tenant_slice(ident)
+            hits += sub.slo_attainment(slo) * SPEC.n_instances
+        return hits / (len(idents) * SPEC.n_instances), report
+
+    coplaced_att, cop = run_fleet({ident: 0 for ident in idents})
+    spread_att, spr = run_fleet({ident: i for i, ident in
+                                 enumerate(idents)})
+    return {
+        "case": case,
+        "outage": {"node": OUTAGE.node, "start_s": OUTAGE.start_s,
+                   "end_s": OUTAGE.end_s},
+        "coplaced_attainment": coplaced_att,
+        "coplaced_failed": int(cop.failed_mask.sum()),
+        "spread_attainment": spread_att,
+        "spread_failed": int(spr.failed_mask.sum()),
+        "wall_s": time.perf_counter() - t0,
+    }
+
+
+def identity_case(case: str) -> Dict:
+    """``faults=None`` replays bit-identically to the plain engine on
+    the fast and constrained planes (the regression pin the test suite
+    enforces per plane; this row records it in the artifact)."""
+    t0 = time.perf_counter()
+    env = SimulatedPlatform().environment()
+    template = chain_workflow(N_NODES, seed=WF_SEED)
+    slo = suggest_slo(template, slack=SLACK)
+    res = make_searcher("aarc", env).search(template.copy(), slo)
+    times = [PoissonArrivals(SPEC.rate, 16, seed=SPEC.arrival_seed).times()]
+    small = ClusterModel(total_cpu=8.0, total_mem_mb=8192.0)
+
+    def identical(plain, gated) -> bool:
+        a = plain.run_many(template, [res.configs], times)[0]
+        b = gated.run_many(template, [res.configs], times)[0]
+        return bool(np.array_equal(a.latencies, b.latencies)
+                    and np.array_equal(a.costs, b.costs)
+                    and np.array_equal(a.failed_mask, b.failed_mask))
+
+    fast = identical(
+        FleetEngine(env.backend, pricing=env.pricing),
+        FleetEngine(env.backend, pricing=env.pricing,
+                    faults=None, resilience=None))
+    constrained = identical(
+        FleetEngine(env.backend, pricing=env.pricing, cluster=small),
+        FleetEngine(env.backend, pricing=env.pricing, cluster=small,
+                    faults=None, resilience=None))
+    return {"case": case, "fast_identical": fast,
+            "constrained_identical": constrained,
+            "wall_s": time.perf_counter() - t0}
+
+
+def check_acceptance(rows: List[Dict]) -> List[str]:
+    """The pinned bars (module docstring)."""
+    errors: List[str] = []
+    by_case = {r["case"]: r for r in rows}
+
+    row = by_case.get("compound_faults")
+    if row is None:
+        errors.append("compound_faults: scenario missing")
+    else:
+        if not row["searched_ratio"] >= SEARCHED_BAR:
+            errors.append(
+                f"compound_faults: searched attainment ratio "
+                f"{row['searched_ratio']:.3f} < {SEARCHED_BAR} of "
+                "fault-free — recovery did not restore SLO compliance")
+        if not row["no_retry_ratio"] < NO_RETRY_BAR:
+            errors.append(
+                f"compound_faults: no_retry ratio "
+                f"{row['no_retry_ratio']:.3f} >= {NO_RETRY_BAR} — the "
+                "fault schedule has no teeth")
+        if not (row["searched_attainment"]
+                >= row["fixed_retry_attainment"]
+                >= row["no_retry_attainment"]):
+            errors.append(
+                "compound_faults: attainment not monotone in recovery "
+                f"(searched {row['searched_attainment']:.3f}, fixed "
+                f"{row['fixed_retry_attainment']:.3f}, none "
+                f"{row['no_retry_attainment']:.3f})")
+        s = row["searched_cost_at_attainment"]
+        h = row["blanket_hedge_cost_at_attainment"]
+        s = float("inf") if s is None else float(s)
+        h = float("inf") if h is None else float(h)
+        if not s < h:
+            errors.append(
+                f"compound_faults: searched cost-at-attainment {s:.2f} "
+                f"not strictly below blanket hedging ({h:.2f})")
+
+    row = by_case.get("correlated_outage")
+    if row is None:
+        errors.append("correlated_outage: scenario missing")
+    elif not row["spread_attainment"] > row["coplaced_attainment"]:
+        errors.append(
+            f"correlated_outage: spread {row['spread_attainment']:.3f} "
+            f"not strictly above coplaced "
+            f"{row['coplaced_attainment']:.3f}")
+
+    row = by_case.get("faults_none_identity")
+    if row is None:
+        errors.append("faults_none_identity: scenario missing")
+    elif not (row["fast_identical"] and row["constrained_identical"]):
+        errors.append("faults_none_identity: faults=None is not "
+                      "bit-identical to the plain engine")
+    return errors
+
+
+def deterministic_payload(row: Dict) -> Dict:
+    """The row minus its wall-clock keys — byte-identical across runs
+    of the same spec (pinned by ``tests/test_faults.py``)."""
+    return {k: v for k, v in row.items() if not k.endswith("_s")}
+
+
+def bench_main(verbose: bool = True) -> None:
+    """`benchmarks.run` harness entry point — raises when the recovery
+    acceptance bar fails so the harness counts it."""
+    if main([]) != 0:
+        raise RuntimeError("faults acceptance bar failed")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows = [recovery_case("compound_faults"),
+            placement_case("correlated_outage"),
+            identity_case("faults_none_identity")]
+    for row in rows:
+        for k, v in row.items():
+            if k not in ("case", "searched_levels", "outage"):
+                print(f"faults,{row['case']}_{k},{v},")
+    failures = check_acceptance(rows)
+    if not smoke:
+        # the emitted artifact is the *deterministic* payload (wall
+        # clocks stay on stdout); smoke mode only gates, never writes
+        emit([deterministic_payload(r) for r in rows], "BENCH_faults")
+    for f in failures:
+        print(f"FAIL {f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,7 @@ import time
 
 def main() -> int:
     from benchmarks import (adaptive_campaign, autoscale, campaign_scale,
-                            fig2_decoupling, fig3_bo, fig5_search,
+                            faults, fig2_decoupling, fig3_bo, fig5_search,
                             fig67_convergence, fig8_input_aware,
                             fleet_throughput, online_serving, placement,
                             roofline_table, table2_optimal, tpu_autotune)
@@ -30,6 +30,7 @@ def main() -> int:
         ("online_serving", online_serving.bench_main),
         ("placement", placement.bench_main),
         ("autoscale", autoscale.bench_main),
+        ("faults", faults.bench_main),
     ]
     failures = 0
     for name, fn in benches:

@@ -7,11 +7,16 @@
    config,
 3. the discrete-event engine reports tail latency, SLO attainment,
    utilization, and fleet cost for both: right-sizing cuts cost AND
-   (by freeing capacity) queuing delay.
+   (by freeing capacity) queuing delay,
+4. the same fleet replays under a seeded fault schedule (transient
+   failures + stragglers) three ways — no recovery, blanket retries,
+   retries + straggler timeouts — reporting failed-instance counts and
+   the retry/timeout tallies recovery spends to win goodput back.
 
     PYTHONPATH=src python examples/fleet_sim.py
 """
 from repro.core.engine import ClusterModel, ColdStartModel, PoissonArrivals, run_fleet
+from repro.core.faults import FaultModel, ResilienceModel, ResiliencePolicy
 from repro.core.scheduler import GraphCentricScheduler
 from repro.serverless.platform import SimulatedPlatform
 from repro.serverless.workloads import chatbot, workload_slo
@@ -32,6 +37,22 @@ def report_fleet(tag, wf):
     return rep
 
 
+FAULTS = FaultModel(default_transient=0.1, straggler_prob=0.1,
+                    straggler_factor=6.0, seed=5)
+
+
+def report_faulty(tag, wf, resilience):
+    env = SimulatedPlatform().environment()
+    rep = run_fleet(env, wf, ARRIVALS, cluster=CLUSTER, cold_start=COLD,
+                    faults=FAULTS, resilience=resilience)
+    print(f"{tag:12s} goodput={rep.goodput(SLO):5.1%}  "
+          f"failed={int(rep.failed_mask.sum()):3d}  "
+          f"retries={rep.total_retries:3d}  "
+          f"timeouts={rep.total_timeouts:3d}  "
+          f"hedges={rep.total_hedges:2d}  cost=${rep.total_cost:9.2f}")
+    return rep
+
+
 def main():
     # -- single-workflow search (the degenerate fleet case) ------------
     env = SimulatedPlatform().environment()
@@ -49,6 +70,22 @@ def main():
     tuned = chatbot()
     tuned.apply_configs(result.configs)
     report_fleet("aarc-config", tuned)
+
+    # -- the same fleet under injected faults --------------------------
+    print(f"\nfault injection (transient {FAULTS.default_transient:.0%}"
+          f"/attempt, {FAULTS.straggler_prob:.0%} stragglers at "
+          f"x{FAULTS.straggler_factor:.0f}):")
+    runtimes, _ = env.backend.invoke_batch(list(tuned.nodes.values()))
+    solo = {name: float(rt) for name, rt in zip(tuned.nodes, runtimes)}
+    retries = ResilienceModel(default=ResiliencePolicy(max_retries=2,
+                                                       backoff_s=0.1))
+    guarded = ResilienceModel(policies={
+        name: ResiliencePolicy(max_retries=2, backoff_s=0.1,
+                               timeout_s=3.0 * max(rt, 1.0))
+        for name, rt in solo.items()})
+    report_faulty("no-recovery", tuned.copy(), None)
+    report_faulty("retries", tuned.copy(), retries)
+    report_faulty("+timeouts", tuned.copy(), guarded)
 
 
 if __name__ == "__main__":

@@ -172,7 +172,15 @@ def classify_saturation(saturation: Dict[str, Dict[str, float]],
     queue delay's share of the total queue+cold overhead. The caller
     applies its own threshold (and its own overhead-magnitude floor);
     this helper just folds the rows deterministically (sorted keys,
-    left-to-right sums)."""
+    left-to-right sums).
+
+    The third leg of the miss triage — *failure-bound*, read off the
+    same rows' ``failed``/``failure_share`` entries when the engine
+    runs a fault model — lives in
+    :func:`repro.core.faults.classify_failures`; the online controller
+    checks it before the capacity/config split (failed attempts inflate
+    neither queue delay nor cold overhead, so a failure-driven miss
+    looks deceptively config-bound here)."""
     queue = 0.0
     for key in sorted(saturation):
         queue += saturation[key]["queue_delay_s"]

@@ -77,6 +77,17 @@ class BaseBackend:
     order, so batched replays are reproducible paired comparisons.
     Everything else takes the exact serial fallback. False by default
     — opaque callables must not be assumed pure.
+
+    Fault injection follows the same discipline, engine-side: a
+    ``FleetEngine(faults=...)`` draws ONE
+    :meth:`repro.core.faults.FaultModel.fault_stream` tensor per
+    ``run_many`` plane (a single rng advance, mirroring
+    ``replay_noise``) with draws keyed by the ``(attempt, instance,
+    function)`` coordinate — never by call order — and shared across
+    every candidate of the plane. The backend never sees fault state:
+    the paired fault-stream contract is orthogonal to (and composes
+    with) the replay-noise contract, so a stochastic backend under
+    faults still replays as a paired experiment across candidates.
     """
 
     has_clamped: bool = False

@@ -293,7 +293,8 @@ class Campaign:
                        env: Optional[Environment] = None,
                        start: float = 0.0,
                        carry: Optional["FleetCarry"] = None,
-                       scale: Optional["ReplicaModel"] = None
+                       scale: Optional["ReplicaModel"] = None,
+                       faults=None, resilience=None
                        ) -> ReplayMetrics:
         """Replay an *explicit* per-function configuration — the
         challenger-evaluation hook: the online control plane validates
@@ -303,12 +304,15 @@ class Campaign:
         in. ``start``/``carry`` replay from a live fleet state (the
         backlog and warm pool the challenger would inherit) instead of
         an empty cluster; ``scale`` replays under replica-bounded
-        admission (the joint autoscaling challenger gate). Defaults
-        reproduce :meth:`replay` exactly."""
+        admission (the joint autoscaling challenger gate);
+        ``faults``/``resilience`` replay under the live fault stream
+        with the candidate's recovery policies (the failure-bound
+        challenger gate). Defaults reproduce :meth:`replay` exactly."""
         return self.replay_configs_many(
             task, [configs], arrival_seed, rate=rate,
             n_instances=n_instances, cluster=cluster, cold_start=cold_start,
-            env=env, start=start, carry=carry, scale=scale)[0]
+            env=env, start=start, carry=carry, scale=scale,
+            faults=faults, resilience=resilience)[0]
 
     def replay_configs_many(self, task: CampaignTask,
                             config_sets: Sequence[Dict[str, "ResourceConfig"]],
@@ -320,7 +324,8 @@ class Campaign:
                             env: Optional[Environment] = None,
                             start: float = 0.0,
                             carry: Optional["FleetCarry"] = None,
-                            scale: Optional["ReplicaModel"] = None
+                            scale: Optional["ReplicaModel"] = None,
+                            faults=None, resilience=None
                             ) -> List[ReplayMetrics]:
         """Replay C candidate config-maps on the same arrival seed as
         one batched :meth:`FleetEngine.run_many` evaluation (the
@@ -331,7 +336,7 @@ class Campaign:
             env,
             cluster if cluster is not None else r.cluster,
             cold_start if cold_start is not None else r.cold_start,
-            scale)
+            scale, faults, resilience)
         n = n_instances if n_instances is not None else r.n_instances
         arrivals = PoissonArrivals(rate if rate is not None else r.rate,
                                    n, seed=arrival_seed, start=start)
@@ -358,17 +363,20 @@ class Campaign:
     def _replay_engine(self, env: Optional[Environment],
                        cluster: ClusterModel,
                        cold_start: ColdStartModel,
-                       scale: Optional["ReplicaModel"] = None
+                       scale: Optional["ReplicaModel"] = None,
+                       faults=None, resilience=None
                        ) -> FleetEngine:
         """The engine replays run through. Pricing/backend/cluster are
         fixed per campaign, so the default-spec engine is built ONCE
         and reused across every replay of the run (the engine keeps no
         state between runs). Overridden conditions — including a
         :class:`ReplicaModel` (replica assignments change per
-        challenger) — get a per-call engine; a *stateful* (stochastic)
+        challenger) or a fault model / resilience policy set (both
+        change per epoch and per challenger) — get a per-call engine; a *stateful* (stochastic)
         backend is never cached so each replay still sees a fresh noise
         stream, exactly like the historical fresh-env-per-replay path."""
-        default = (env is None and scale is None
+        default = (env is None and scale is None and faults is None
+                   and resilience is None
                    and cluster == self.spec.replay.cluster
                    and cold_start == self.spec.replay.cold_start)
         if default and self._engine is not None:
@@ -376,7 +384,8 @@ class Campaign:
         env = env if env is not None else self.env_factory()
         engine = FleetEngine(env.backend, pricing=env.pricing,
                              cluster=cluster, cold_start=cold_start,
-                             scale=scale)
+                             scale=scale, faults=faults,
+                             resilience=resilience)
         if default and getattr(env.backend, "deterministic", False):
             self._engine = engine
         return engine

@@ -310,7 +310,11 @@ class FleetReport:
                  busy_by_function: Optional[Dict[str, float]] = None,
                  spinups_by_function: Optional[Dict[str, int]] = None,
                  provision_by_function: Optional[Dict[str, float]] = None,
-                 replicas_by_function: Optional[Dict[str, int]] = None):
+                 replicas_by_function: Optional[Dict[str, int]] = None,
+                 retries_by_function: Optional[Dict[str, int]] = None,
+                 timeouts_by_function: Optional[Dict[str, int]] = None,
+                 hedges_by_function: Optional[Dict[str, int]] = None,
+                 failures_by_function: Optional[Dict[str, int]] = None):
         rows = list(instances) if instances else []
         self._init_common(
             makespan=makespan, cpu_utilization=cpu_utilization,
@@ -320,7 +324,11 @@ class FleetReport:
             busy_by_function=busy_by_function,
             spinups_by_function=spinups_by_function,
             provision_by_function=provision_by_function,
-            replicas_by_function=replicas_by_function)
+            replicas_by_function=replicas_by_function,
+            retries_by_function=retries_by_function,
+            timeouts_by_function=timeouts_by_function,
+            hedges_by_function=hedges_by_function,
+            failures_by_function=failures_by_function)
         self.arrivals = np.asarray([r.arrival for r in rows], dtype=np.float64)
         self.finishes = np.asarray([r.finish for r in rows], dtype=np.float64)
         self._e2e = np.asarray([r.e2e for r in rows], dtype=np.float64)
@@ -336,7 +344,10 @@ class FleetReport:
                      queue_delay_by_function, carry, tenants=None,
                      busy_by_function=None, spinups_by_function=None,
                      provision_by_function=None,
-                     replicas_by_function=None) -> None:
+                     replicas_by_function=None,
+                     retries_by_function=None, timeouts_by_function=None,
+                     hedges_by_function=None,
+                     failures_by_function=None) -> None:
         self.makespan = makespan             # last event - first arrival
         self.cpu_utilization = cpu_utilization
         self.mem_utilization = mem_utilization
@@ -354,6 +365,17 @@ class FleetReport:
         #: provisioned pool size per function (1 when untracked)
         self.replicas_by_function: Dict[str, int] = \
             replicas_by_function or {}
+        #: recovery tallies per function (engine ran with a
+        #: :class:`~repro.core.faults.FaultModel`; empty otherwise):
+        #: re-queued attempts, attempt timeouts, hedge duplicates
+        #: fired, and failed *attempts* (fault-model failures only —
+        #: deterministic OOM stays out, it is config-bound)
+        self.retries_by_function: Dict[str, int] = retries_by_function or {}
+        self.timeouts_by_function: Dict[str, int] = \
+            timeouts_by_function or {}
+        self.hedges_by_function: Dict[str, int] = hedges_by_function or {}
+        self.failures_by_function: Dict[str, int] = \
+            failures_by_function or {}
         #: end-of-run warm/busy state (only when ``collect_carry=True``)
         self.carry = carry
         #: per-instance tenant identity (uid order) when the engine ran
@@ -379,6 +401,10 @@ class FleetReport:
                     spinups_by_function: Optional[Dict[str, int]] = None,
                     provision_by_function: Optional[Dict[str, float]] = None,
                     replicas_by_function: Optional[Dict[str, int]] = None,
+                    retries_by_function: Optional[Dict[str, int]] = None,
+                    timeouts_by_function: Optional[Dict[str, int]] = None,
+                    hedges_by_function: Optional[Dict[str, int]] = None,
+                    failures_by_function: Optional[Dict[str, int]] = None,
                     ) -> "FleetReport":
         """Build a report directly from aligned per-instance arrays
         (uid order) without materializing ``InstanceResult`` objects."""
@@ -390,7 +416,11 @@ class FleetReport:
             tenants=tenants, busy_by_function=busy_by_function,
             spinups_by_function=spinups_by_function,
             provision_by_function=provision_by_function,
-            replicas_by_function=replicas_by_function)
+            replicas_by_function=replicas_by_function,
+            retries_by_function=retries_by_function,
+            timeouts_by_function=timeouts_by_function,
+            hedges_by_function=hedges_by_function,
+            failures_by_function=failures_by_function)
         self.arrivals = np.asarray(arrival, dtype=np.float64)
         self.finishes = np.asarray(finish, dtype=np.float64)
         self._e2e = np.asarray(e2e, dtype=np.float64)
@@ -462,6 +492,48 @@ class FleetReport:
             self._attainment[slo] = hit
         return hit
 
+    def goodput(self, slo: float) -> float:
+        """*Successful* work delivered within the SLO — an alias of
+        :meth:`slo_attainment` (which already excludes failed
+        instances), named for the fault-injection plane where the gap
+        to :meth:`completion` is the failure toll."""
+        return self.slo_attainment(slo)
+
+    def completion(self, slo: float) -> float:
+        """Fraction of instances whose wall clock fit the SLO
+        *regardless of failure* (vacuously 1.0 when empty). Under
+        faults, ``completion - goodput`` is the share of instances
+        that were on time but wrong — work a recovery policy (retries,
+        hedging) converts into goodput."""
+        if not len(self):
+            return 1.0
+        return int(np.count_nonzero(self._e2e <= slo)) / len(self)
+
+    @property
+    def total_retries(self) -> int:
+        """Σ re-queued attempts across the fleet (fault plane)."""
+        return sum(self.retries_by_function[k]
+                   for k in sorted(self.retries_by_function))
+
+    @property
+    def total_timeouts(self) -> int:
+        """Σ attempt timeouts across the fleet (fault plane)."""
+        return sum(self.timeouts_by_function[k]
+                   for k in sorted(self.timeouts_by_function))
+
+    @property
+    def total_hedges(self) -> int:
+        """Σ hedge duplicates fired across the fleet (fault plane)."""
+        return sum(self.hedges_by_function[k]
+                   for k in sorted(self.hedges_by_function))
+
+    @property
+    def total_failures(self) -> int:
+        """Σ failed attempts across the fleet (fault-model failures
+        only — deterministic OOM is not counted)."""
+        return sum(self.failures_by_function[k]
+                   for k in sorted(self.failures_by_function))
+
     @property
     def total_cost(self) -> float:
         if self._total_cost is None:
@@ -497,19 +569,42 @@ class FleetReport:
         runtime), ``replicas`` (provisioned pool size; 1 when the
         engine ran without a :class:`ReplicaModel`), ``utilization``
         (``busy_s / (replicas * makespan)`` — mean busy fraction of the
-        provisioned pool) and ``spinups`` (cold-start container
-        spin-ups). A queue-delay-dominated, high-utilization function
-        is capacity-bound: more replicas help; a low-queue function
-        missing its SLO is config-bound: faster configs help."""
-        keys = set(self.queue_delay_by_function) | set(self.busy_by_function)
+        provisioned pool), ``spinups`` (cold-start container
+        spin-ups), plus the failure rows the fault plane adds:
+        ``failed`` (failed attempts under the fault model),
+        ``failure_share`` (the function's share of the fleet's failed
+        attempts), ``retries``, ``timeouts`` and ``hedges``.
+
+        **Triage** — the online controller classifies a missed SLO
+        from these rows:
+
+          * *capacity-bound* — queue-delay-dominated at high pool
+            utilization: more replicas help
+            (:func:`repro.core.autoscale.classify_saturation`),
+          * *config-bound* — low queue, no failures, still slow:
+            faster per-function configs help (route the grant to the
+            inner config searcher),
+          * *failure-bound* — non-zero ``failed`` rows concentrated on
+            a few functions: recovery policy helps (retries, timeouts,
+            hedging via :func:`repro.core.faults.grant_policies`) or,
+            during a detected outage window, graceful degradation of
+            off-critical-path functions
+            (:func:`repro.core.faults.degrade_policies`)."""
+        keys = (set(self.queue_delay_by_function)
+                | set(self.busy_by_function)
+                | set(self.failures_by_function))
         total_q = 0.0
         for key in sorted(self.queue_delay_by_function):
             total_q += self.queue_delay_by_function[key]
+        total_f = 0
+        for key in sorted(self.failures_by_function):
+            total_f += self.failures_by_function[key]
         out: Dict[str, Dict[str, float]] = {}
         for key in sorted(keys):
             q = self.queue_delay_by_function.get(key, 0.0)
             busy = self.busy_by_function.get(key, 0.0)
             r = int(self.replicas_by_function.get(key, 1))
+            f = int(self.failures_by_function.get(key, 0))
             cap = r * self.makespan
             out[key] = {
                 "queue_delay_s": q,
@@ -518,6 +613,11 @@ class FleetReport:
                 "replicas": r,
                 "utilization": (busy / cap) if cap > 0.0 else 0.0,
                 "spinups": int(self.spinups_by_function.get(key, 0)),
+                "failed": f,
+                "failure_share": (f / total_f) if total_f > 0 else 0.0,
+                "retries": int(self.retries_by_function.get(key, 0)),
+                "timeouts": int(self.timeouts_by_function.get(key, 0)),
+                "hedges": int(self.hedges_by_function.get(key, 0)),
             }
         return out
 
@@ -581,6 +681,10 @@ class FleetReport:
             spinups_by_function=_sub(self.spinups_by_function),
             provision_by_function=_sub(self.provision_by_function),
             replicas_by_function=_sub(self.replicas_by_function),
+            retries_by_function=_sub(self.retries_by_function),
+            timeouts_by_function=_sub(self.timeouts_by_function),
+            hedges_by_function=_sub(self.hedges_by_function),
+            failures_by_function=_sub(self.failures_by_function),
             tenants=[t for t in self.tenants if t == tenant])
 
     def by_tenant(self) -> Dict[str, "FleetReport"]:
@@ -597,7 +701,169 @@ class FleetReport:
 # engine internals
 # --------------------------------------------------------------------------
 
-_ARRIVAL, _FINISH, _RELEASE = 0, 1, 2
+_ARRIVAL, _FINISH, _RELEASE, _ABORT, _RETRY = 0, 1, 2, 3, 4
+
+
+def _stranded_error(entries: Sequence[Tuple[int, str, bool, bool]]
+                    ) -> RuntimeError:
+    """Diagnostic for the scheduler invariant: only dead instances may
+    leave queued work behind when the event heap drains. ``entries``
+    rows are ``(uid, function, dead, failed)`` for every stranded queue
+    entry of a live instance."""
+    detail = "; ".join(
+        f"uid {uid} fn {fn!r} (dead={bool(d)}, failed={bool(f)})"
+        for uid, fn, d, f in sorted(entries))
+    return RuntimeError(
+        "scheduler invariant violated: work stranded in the admission "
+        f"queue for live instances — {detail}")
+
+
+class _FaultCtx:
+    """Per-run fault-injection bookkeeping shared by the scalar event
+    loop and the table-driven replay cells.
+
+    Holds the plane's pre-drawn :class:`~repro.core.faults.FaultStream`
+    (draws are keyed by ``(attempt, instance row, function column)`` —
+    never by call order — so any admission interleaving replays the
+    same outcomes), the per-``(uid, column)`` attempt counters, and the
+    recovery tallies that land on :class:`FleetReport`. Both loops
+    resolve one admitted attempt through :meth:`resolve` with identical
+    float operations, which is what keeps the constrained replay plane
+    bit-identical to the scalar loop under faults.
+
+    Pricing is per *leg* through the scalar ``pricing.function_cost``
+    in both loops (identical IEEE ops to ``cost_batch`` for vectorizing
+    models — see :meth:`FleetEngine._price_batch`): every attempt and
+    every hedge leg is billed for the runtime it actually executed
+    before succeeding, failing, timing out, or being cancelled."""
+
+    __slots__ = ("faults", "pricing", "primary", "hedge", "offset",
+                 "cols", "attempts", "retries", "timeouts", "hedges",
+                 "failures", "fault_dead", "_pol", "_policies")
+
+    def __init__(self, faults, resilience, pricing, stream, offset,
+                 cols: Optional[Dict[tuple, int]]):
+        self.faults = faults
+        self.pricing = pricing
+        self.primary = stream.primary       # (3, A, instances, functions)
+        self.hedge = stream.hedge
+        self.offset = int(offset)
+        #: ``(identity, name) -> column`` for the scalar loop; table
+        #: cells index columns directly and pass ``None``
+        self.cols = cols
+        self.attempts: Dict[Tuple[int, int], int] = {}
+        self.retries: Dict[str, int] = collections.defaultdict(int)
+        self.timeouts: Dict[str, int] = collections.defaultdict(int)
+        self.hedges: Dict[str, int] = collections.defaultdict(int)
+        #: failed *attempts* per function (transient / straggler
+        #: timeout / cold-fail / outage — OOM stays config-bound and
+        #: is not counted here)
+        self.failures: Dict[str, int] = collections.defaultdict(int)
+        #: ``(uid, column)`` pairs whose invocation terminally failed
+        #: under the fault model — their finish events must not deposit
+        #: a warm container (the container crashed)
+        self.fault_dead: set = set()
+        self._policies = resilience
+        self._pol: Dict[tuple, tuple] = {}
+
+    def pol(self, identity: str, name: str) -> tuple:
+        """``(max_retries, timeout_s, backoff_s, hedge_delay_s)`` for
+        one function (cached; all-defaults when the engine runs without
+        a ResilienceModel — faults then fail invocations outright)."""
+        key = (identity, name)
+        out = self._pol.get(key)
+        if out is None:
+            if self._policies is None:
+                out = (0, None, 0.0, None)
+            else:
+                p = self._policies.policy(identity, name)
+                out = (int(p.max_retries), p.timeout_s,
+                       float(p.backoff_s), p.hedge_delay_s)
+            self._pol[key] = out
+        return out
+
+    def price(self, exec_s: float, cfg) -> float:
+        return float(self.pricing.function_cost(float(exec_s), cfg))
+
+    def resolve(self, uid: int, v: int, identity: str, name: str,
+                t: float, rt: float, delay: float, cfg):
+        """Outcome of one admitted attempt (primary leg + optional
+        hedge) at admission instant ``t`` with base runtime ``rt`` and
+        cold-start ``delay``.
+
+        Returns ``(dur, ok, legs, n_timeouts, hedged)``: ``dur`` is the
+        wall time from admission until the attempt resolves (includes
+        ``delay``), ``legs`` is ``[(executed_s, cost), ...]`` in
+        primary-then-hedge order (cancel-on-completion: the losing leg
+        is billed only up to the winner's finish)."""
+        k = self.attempts.get((uid, v), 0)
+        a = min(k, self.primary.shape[1] - 1)
+        row = self.offset + uid
+        P = self.primary
+        fm = self.faults
+        mr, timeout_s, backoff_s, hedge_delay_s = self.pol(identity, name)
+        n_timeouts = 0
+        # -- primary leg ----------------------------------------------
+        rt_p = rt
+        if fm.straggler_prob > 0.0 and P[1, a, row, v] < fm.straggler_prob:
+            rt_p = rt * fm.straggler_factor
+        timed_p = False
+        if delay > 0.0 and fm.cold_fail > 0.0 \
+                and P[2, a, row, v] < fm.cold_fail:
+            # the container never came up: provisioning time burned,
+            # zero execution, zero execution cost
+            ok_p, exec_p, end_p = False, 0.0, delay
+        else:
+            p_eff = fm.effective_transient(identity, name, t)
+            ok_p = not (p_eff > 0.0 and P[0, a, row, v] < p_eff)
+            exec_p = rt_p
+            if timeout_s is not None and rt_p > timeout_s:
+                exec_p = timeout_s
+                ok_p = False
+                timed_p = True
+            end_p = delay + exec_p
+        # -- hedge leg (burst capacity: no cluster slot, no replica
+        # slot, no cold delay — a standby duplicate) -------------------
+        if hedge_delay_s is None or not hedge_delay_s < end_p:
+            if timed_p:
+                n_timeouts += 1
+            return end_p, ok_p, [(exec_p, self.price(exec_p, cfg))], \
+                n_timeouts, False
+        H = self.hedge
+        rt_h = rt
+        if fm.straggler_prob > 0.0 and H[1, a, row, v] < fm.straggler_prob:
+            rt_h = rt * fm.straggler_factor
+        p_eff_h = fm.effective_transient(identity, name,
+                                         t + hedge_delay_s)
+        ok_h = not (p_eff_h > 0.0 and H[0, a, row, v] < p_eff_h)
+        exec_h = rt_h
+        timed_h = False
+        if timeout_s is not None and rt_h > timeout_s:
+            exec_h = timeout_s
+            ok_h = False
+            timed_h = True
+        end_h = hedge_delay_s + exec_h
+        if ok_p and (not ok_h or end_p <= end_h):
+            dur, ok = end_p, True
+        elif ok_h:
+            dur, ok = end_h, True
+        else:
+            dur, ok = max(end_p, end_h), False
+        # a leg's timeout only *happened* if it fired before resolution
+        if timed_p and end_p <= dur:
+            n_timeouts += 1
+        if timed_h and end_h <= dur:
+            n_timeouts += 1
+        exec_p_b = min(exec_p, max(dur - delay, 0.0))
+        exec_h_b = min(exec_h, max(dur - hedge_delay_s, 0.0))
+        legs = [(exec_p_b, self.price(exec_p_b, cfg)),
+                (exec_h_b, self.price(exec_h_b, cfg))]
+        return dur, ok, legs, n_timeouts, True
+
+    def ledgers(self):
+        """``(retries, timeouts, hedges, failures)`` as plain dicts."""
+        return (dict(self.retries), dict(self.timeouts),
+                dict(self.hedges), dict(self.failures))
 
 
 #: per-pricing-object detection cache: maps a pricing model to the
@@ -780,7 +1046,8 @@ class FleetEngine:
                  plane_backend: str = "numpy",
                  interference: Optional[
                      Mapping[Tuple[str, str], float]] = None,
-                 scale: Optional[ReplicaModel] = None):
+                 scale: Optional[ReplicaModel] = None,
+                 faults=None, resilience=None):
         self.backend = as_backend(backend)
         self.pricing = pricing
         self.cluster = cluster
@@ -789,6 +1056,22 @@ class FleetEngine:
         #: ``None`` disables replica bounds/billing entirely — the
         #: engine is then bit-identical to its pre-replica behaviour
         self.scale = scale
+        #: seeded fault-injection plane (a
+        #: :class:`repro.core.faults.FaultModel`); ``None`` disables
+        #: fault injection entirely — the engine is then bit-identical
+        #: to its pre-fault behaviour on all four replay planes
+        self.faults = faults
+        #: per-function recovery policies (a
+        #: :class:`repro.core.faults.ResilienceModel`): retry with
+        #: capped attempts + exponential backoff, execution timeout,
+        #: request hedging. Inert without ``faults`` — there is nothing
+        #: to recover from, so ``resilience`` alone changes no bits
+        self.resilience = resilience
+        #: planned-cell hook: ``(FaultStream, row offset)`` installed
+        #: by a parent ``run_many`` so a shadow engine's cells draw
+        #: from the parent plane's ONE fault stream instead of
+        #: re-drawing per cell (the paired fault-stream contract)
+        self._fault_stream: Optional[Tuple[object, int]] = None
         if plane_backend not in ("numpy", "jax"):
             raise ValueError(
                 f"plane_backend must be 'numpy' or 'jax', got "
@@ -857,13 +1140,33 @@ class FleetEngine:
         if (carry is None and not collect_carry
                 and len(workflows) == 1 and not self.cluster.finite
                 and self.cold_start.delay_s == 0.0
-                and self.scale is None):
+                and self.scale is None and self.faults is None):
             # degenerate case (every Environment.execute sample): no
             # contention => runtimes are schedule-independent, so skip
             # the event machinery — ONE batch call + longest path
             return self._run_degenerate(workflows[0], float(times[0]))
 
         state = _FleetState(workflows, times)
+
+        fctx: Optional[_FaultCtx] = None
+        if self.faults is not None:
+            # function columns in first-seen (wf order, node insertion)
+            # order — the exact indexing run_many's candidate arrays
+            # use for a homogeneous fleet, so a planned shadow cell and
+            # the table loop read the same stream coordinates
+            cols: Dict[tuple, int] = {}
+            for wf in workflows:
+                for name in wf.nodes:
+                    key = (wf.identity, name)
+                    if key not in cols:
+                        cols[key] = len(cols)
+            if self._fault_stream is not None:
+                stream, f_offset = self._fault_stream
+            else:
+                stream = self.faults.fault_stream(len(workflows), len(cols))
+                f_offset = 0
+            fctx = _FaultCtx(self.faults, self.resilience, self.pricing,
+                             stream, f_offset, cols)
 
         seq = itertools.count()
         events: List[Tuple[float, int, int, int, object]] = [
@@ -913,6 +1216,19 @@ class FleetEngine:
                     used_mem -= mem
                     continue
                 wf = state.wfs[uid]
+                if kind == _ABORT:
+                    # a failed attempt resolves: its slot frees now;
+                    # the re-queue happens at the backoff-delayed
+                    # _RETRY event
+                    cfg = wf.nodes[name].config
+                    used_cpu -= cfg.cpu
+                    used_mem -= cfg.mem
+                    if running is not None:
+                        running[(wf.identity, name)] -= 1
+                    continue
+                if kind == _RETRY:
+                    pending.append((t, uid, name))
+                    continue
                 if kind == _ARRIVAL:
                     for src in wf.sources():
                         pending.append((t, uid, src))
@@ -945,12 +1261,14 @@ class FleetEngine:
             used_cpu, used_mem = self._start_pending(
                 t, pending, state, warm, used_cpu, used_mem,
                 events, seq, per_fn_queue, per_fn_busy, per_fn_spin,
-                inv_log, running)
+                inv_log, running, fctx)
 
-        stranded = {uid for _, uid, _ in pending if not state.dead[uid]}
-        if stranded:  # engine invariant: only dead instances leave work behind
-            raise RuntimeError(
-                f"scheduler stranded work for instances {sorted(stranded)}")
+        # engine invariant: only dead instances leave work behind
+        stranded = [(uid, name, bool(state.dead[uid]),
+                     bool(state.failed[uid]))
+                    for _, uid, name in pending if not state.dead[uid]]
+        if stranded:
+            raise _stranded_error(stranded)
         carry_out = None
         if collect_carry:
             carry_out = FleetCarry(
@@ -960,11 +1278,14 @@ class FleetEngine:
                 busy=list(inv_log))
         prov, repl = self._provision_ledgers(
             self._fleet_function_configs(state.wfs), t0, t_last)
+        fault_ledgers = fctx.ledgers() if fctx is not None \
+            else (None, None, None, None)
         return self._report(state, t0, t_last, cpu_area, mem_area,
                             dict(per_fn_queue), carry_out=carry_out,
                             per_fn_busy=dict(per_fn_busy),
                             per_fn_spin=dict(per_fn_spin),
-                            provision_by_fn=prov, replicas_by_fn=repl)
+                            provision_by_fn=prov, replicas_by_fn=repl,
+                            fault_ledgers=fault_ledgers)
 
     def run_many(self, template: Workflow,
                  config_sets: Sequence[Dict[str, "ResourceConfig"]],
@@ -1048,16 +1369,26 @@ class FleetEngine:
             noise = self.backend.replay_noise(n_total, len(nodes))
         runtimes = np.asarray(runtimes, dtype=np.float64)
         failed = np.asarray(failed, dtype=bool)
+        fstream = None
+        if self.faults is not None:
+            # paired fault-stream contract, mirroring replay_noise:
+            # ONE rng advance per plane, shared by every candidate and
+            # segmented per arrival set by instance-row offset — the
+            # same configuration in two candidate slots draws the same
+            # faults, so challenger validation is a paired experiment
+            fstream = self.faults.fault_stream(
+                sum(len(t) for t in times_list), len(nodes))
 
         if plane == "planned":
             return self._run_many_planned(template, config_sets, times_list,
                                           carry, collect_carry, names,
-                                          runtimes, failed, noise)
+                                          runtimes, failed, noise, fstream)
         if plane == "constrained":
             return self._run_many_constrained(template, config_sets,
                                               times_list, carry,
                                               collect_carry, names, cpu, mem,
-                                              runtimes, failed, noise)
+                                              runtimes, failed, noise,
+                                              fstream)
         return self._run_many_vectorized(template, config_sets, times_list,
                                          carry, names, cpu, mem,
                                          runtimes, failed, noise)
@@ -1103,6 +1434,10 @@ class FleetEngine:
             constrained.append(
                 "replica pools active (admission-concurrency bounds "
                 "are an event-loop concept)")
+        if self.faults is not None:
+            constrained.append(
+                "fault injection active (attempt outcomes and "
+                "retry/timeout/hedge recovery are an event-loop concept)")
         if collect_carry:
             constrained.append("collect_carry requested")
         if constrained:
@@ -1206,7 +1541,7 @@ class FleetEngine:
 
     def _run_many_planned(self, template, config_sets, times_list, carry,
                           collect_carry, names, runtimes, failed,
-                          noise) -> List[FleetReport]:
+                          noise, fstream=None) -> List[FleetReport]:
         """Pricing model doesn't vectorize: replay every cell through
         per-instance workflow copies so custom scalar ``function_cost``
         sees real node objects — but drive the event loops off the
@@ -1221,12 +1556,13 @@ class FleetEngine:
             for si, times in enumerate(times_list):
                 reports.append(self._run_one_planned(
                     template, configs, times, carry, collect_carry,
-                    names, runtimes[ci], failed[ci], noise, offsets[si]))
+                    names, runtimes[ci], failed[ci], noise, offsets[si],
+                    fstream))
         return reports
 
     def _run_one_planned(self, template, configs, times, carry,
                          collect_carry, names, rt_row, failed_row, noise,
-                         offset) -> FleetReport:
+                         offset, fstream=None) -> FleetReport:
         """One cell replayed through the exact scalar event loop, with
         the backend swapped for the precomputed (runtime, failed) plan.
         Bit-identical to ``_run_one_serial`` for surface backends
@@ -1251,13 +1587,20 @@ class FleetEngine:
             wfs.append(wf)
         shadow = FleetEngine(_PlannedBackend(plan), pricing=self.pricing,
                              cluster=self.cluster,
-                             cold_start=self.cold_start, scale=self.scale)
+                             cold_start=self.cold_start, scale=self.scale,
+                             faults=self.faults,
+                             resilience=self.resilience)
+        if fstream is not None:
+            # the cell reads the parent plane's ONE fault stream at its
+            # own instance-row offset instead of re-drawing per cell
+            shadow._fault_stream = (fstream, offset)
         return shadow.run(wfs, times, carry=carry,
                           collect_carry=collect_carry)
 
     def _run_many_constrained(self, template, config_sets, times_list,
                               carry, collect_carry, names, cpu, mem,
-                              runtimes, failed, noise) -> List[FleetReport]:
+                              runtimes, failed, noise,
+                              fstream=None) -> List[FleetReport]:
         """Finite-capacity / cold-start / carry-collecting cells: the
         exact scalar event loop, table-driven. The whole plane's
         runtimes come from the caller's ONE response-surface call and
@@ -1300,7 +1643,7 @@ class FleetEngine:
                 reports.append(self._run_cell_table(
                     template, times, carry, collect_carry, names, topo,
                     cpu_row, mem_row, rt_rows, [failed_row] * m,
-                    cost_rows))
+                    cost_rows, fstream, offsets[si]))
         return reports
 
     def _topology_tables(self, template, names):
@@ -1323,7 +1666,8 @@ class FleetEngine:
 
     def _run_cell_table(self, template, times, carry, collect_carry,
                         names, topo, cpu_row, mem_row, rt_rows,
-                        failed_rows, cost_rows) -> FleetReport:
+                        failed_rows, cost_rows, fstream=None,
+                        f_offset=0) -> FleetReport:
         """One (candidate, arrival-set) cell of the constrained plane:
         a faithful mirror of :meth:`run`'s event loop — same heap
         tuples, same tie-breaking sequence numbers, same float
@@ -1351,6 +1695,16 @@ class FleetEngine:
             running = [0] * len(names)
         else:
             pool_of = running = None
+        fctx: Optional[_FaultCtx] = None
+        cfg_cols = None
+        if self.faults is not None and fstream is not None:
+            # per-leg pricing needs real config objects; rebuild them
+            # once per cell from the candidate row (the same
+            # quantized floats the scalar path's node.config holds)
+            cfg_cols = [ResourceConfig(cpu=cpu_row[v], mem=mem_row[v])
+                        for v in range(len(names))]
+            fctx = _FaultCtx(self.faults, self.resilience, self.pricing,
+                             fstream, f_offset, None)
 
         arrival = np.array(times, dtype=np.float64)
         finish = np.zeros(m)
@@ -1404,6 +1758,16 @@ class FleetEngine:
                     used_cpu -= cpu_r
                     used_mem -= mem_r
                     continue
+                if kind == _ABORT:
+                    v = payload
+                    used_cpu -= cpu_row[v]
+                    used_mem -= mem_row[v]
+                    if running is not None:
+                        running[v] -= 1
+                    continue
+                if kind == _RETRY:
+                    pending.append((t, uid, payload))
+                    continue
                 if kind == _ARRIVAL:
                     for v in sources:
                         pending.append((t, uid, v))
@@ -1413,7 +1777,9 @@ class FleetEngine:
                     used_mem -= mem_row[v]
                     if running is not None:
                         running[v] -= 1
-                    if cold_delay_s > 0.0 and not failed_rows[uid][v]:
+                    if cold_delay_s > 0.0 and not failed_rows[uid][v] \
+                            and (fctx is None
+                                 or (uid, v) not in fctx.fault_dead):
                         warm[(tname, names[v])].append(
                             [t, t + keep_alive_s])
                     finish[uid] = max(finish[uid], t)
@@ -1463,6 +1829,60 @@ class FleetEngine:
                         dead[uid] = True
                         released = True
                         continue
+                    if fctx is not None:
+                        # fault-injection path — the exact mirror of
+                        # the scalar loop's branch in _start_pending
+                        fkey = fn_keys[v]
+                        delay = 0.0
+                        if cold_delay_s > 0.0 and not self._take_warm(
+                                (tname, names[v]), t, warm):
+                            delay = cold_delay_s
+                            per_fn_spin[fkey] += 1
+                        cold_delay[uid] += delay
+                        rank = rank_of[v]
+                        if failed_rows[uid][v]:
+                            per_fn_busy[fkey] += rt
+                            cost_items[uid].append(
+                                (rank, fctx.price(rt, cfg_cols[v])))
+                            end = t + delay + rt
+                        else:
+                            dur, ok, legs, n_to, hedged = fctx.resolve(
+                                uid, v, tname, names[v], t, rt, delay,
+                                cfg_cols[v])
+                            for exec_s, c in legs:
+                                per_fn_busy[fkey] += exec_s
+                                cost_items[uid].append((rank, c))
+                            if n_to:
+                                fctx.timeouts[fkey] += n_to
+                            if hedged:
+                                fctx.hedges[fkey] += 1
+                            end = t + dur
+                            if not ok:
+                                fctx.failures[fkey] += 1
+                                kk = fctx.attempts.get((uid, v), 0)
+                                mr, _, backoff_s, _ = fctx.pol(
+                                    tname, names[v])
+                                if kk < mr:
+                                    fctx.attempts[(uid, v)] = kk + 1
+                                    fctx.retries[fkey] += 1
+                                    if inv_log is not None:
+                                        inv_log.append((end, cpu_row[v],
+                                                        mem_row[v]))
+                                    heapq.heappush(events,
+                                                   (end, next(seq),
+                                                    _ABORT, uid, v))
+                                    heapq.heappush(
+                                        events,
+                                        (end + backoff_s * (2.0 ** kk),
+                                         next(seq), _RETRY, uid, v))
+                                    continue
+                                failed_i[uid] = True
+                                fctx.fault_dead.add((uid, v))
+                        if inv_log is not None:
+                            inv_log.append((end, cpu_row[v], mem_row[v]))
+                        heapq.heappush(events,
+                                       (end, next(seq), _FINISH, uid, v))
+                        continue
                     per_fn_busy[fn_keys[v]] += rt
                     delay = 0.0
                     if cold_delay_s > 0.0 and not self._take_warm(
@@ -1481,10 +1901,10 @@ class FleetEngine:
                 if not released:
                     break
 
-        stranded = {uid for _, uid, _ in pending if not dead[uid]}
+        stranded = [(uid, names[v], bool(dead[uid]), bool(failed_i[uid]))
+                    for _, uid, v in pending if not dead[uid]]
         if stranded:
-            raise RuntimeError(
-                f"scheduler stranded work for instances {sorted(stranded)}")
+            raise _stranded_error(stranded)
         carry_out = None
         if collect_carry:
             carry_out = FleetCarry(
@@ -1498,6 +1918,8 @@ class FleetEngine:
                 (tname, name): ResourceConfig(cpu=cpu_row[v], mem=mem_row[v])
                 for v, name in enumerate(names)}
             prov, repl = self._provision_ledgers(fn_configs, t0, t_last)
+        fault_ledgers = fctx.ledgers() if fctx is not None \
+            else (None, None, None, None)
         return self._report_arrays(
             arrival=arrival, finish=finish, queue_delay=queue_delay,
             cold_delay=cold_delay, failed=failed_i, dead=dead,
@@ -1506,7 +1928,7 @@ class FleetEngine:
             per_fn_queue=dict(per_fn_queue), carry_out=carry_out,
             tenants=[tname] * m, per_fn_busy=dict(per_fn_busy),
             per_fn_spin=dict(per_fn_spin), provision_by_fn=prov,
-            replicas_by_fn=repl)
+            replicas_by_fn=repl, fault_ledgers=fault_ledgers)
 
     def _run_many_vectorized(self, template, config_sets, times_list,
                              carry, names, cpu, mem, runtimes, failed,
@@ -1787,7 +2209,7 @@ class FleetEngine:
     def _start_pending(self, t, pending, state: _FleetState, warm,
                        used_cpu, used_mem, events, seq, per_fn_queue,
                        per_fn_busy, per_fn_spin, inv_log=None,
-                       running=None):
+                       running=None, fctx: Optional[_FaultCtx] = None):
         """FIFO admission: start every queued invocation that fits, stop
         at the first that doesn't (no overtaking => no starvation). All
         admitted invocations are evaluated in ONE backend batch call and
@@ -1833,7 +2255,11 @@ class FleetEngine:
                     np.asarray([self.interference.get(
                         (state.wfs[uid].identity, name), 1.0)
                         for _, uid, name in startable])
-            costs = self._price_batch(nodes, runtimes)
+            # under a fault model every leg is priced individually
+            # (attempts differ in executed runtime), so the batched
+            # pricing expression is skipped entirely
+            costs = self._price_batch(nodes, runtimes) \
+                if fctx is None else None
 
             released = False
             for k, ((ready_t, uid, name), node, rt, bad) in enumerate(zip(
@@ -1861,6 +2287,74 @@ class FleetEngine:
                         running[(state.wfs[uid].identity, name)] -= 1
                     state.dead[uid] = True
                     released = True
+                    continue
+                if fctx is not None:
+                    # fault-injection path: resolve the attempt through
+                    # the plane's pre-drawn stream; recovery semantics
+                    # (retry/timeout/hedge) come from the engine's
+                    # ResilienceModel
+                    identity = state.wfs[uid].identity
+                    delay = 0.0
+                    if self.cold_start.delay_s > 0.0 and \
+                            not self._take_warm((identity, name), t, warm):
+                        delay = self.cold_start.delay_s
+                        per_fn_spin[fkey] += 1
+                    state.cold_delay[uid] += delay
+                    rank = state.rank[uid][name]
+                    if bad:
+                        # OOM: deterministic config failure — retrying
+                        # cannot fix an undersized config, so the
+                        # clamped thrash burns exactly as without faults
+                        per_fn_busy[fkey] += rt
+                        state.cost_items[uid].append(
+                            (rank, fctx.price(rt, node.config)))
+                        end = t + delay + rt
+                    else:
+                        v = fctx.cols[(identity, name)]
+                        dur, ok, legs, n_to, hedged = fctx.resolve(
+                            uid, v, identity, name, t, rt, delay,
+                            node.config)
+                        for exec_s, c in legs:
+                            per_fn_busy[fkey] += exec_s
+                            state.cost_items[uid].append((rank, c))
+                        if n_to:
+                            fctx.timeouts[fkey] += n_to
+                        if hedged:
+                            fctx.hedges[fkey] += 1
+                        end = t + dur
+                        if not ok:
+                            fctx.failures[fkey] += 1
+                            kk = fctx.attempts.get((uid, v), 0)
+                            mr, _, backoff_s, _ = fctx.pol(identity, name)
+                            if kk < mr:
+                                # re-queue: slot frees when the attempt
+                                # resolves; the retry becomes ready
+                                # after exponential backoff
+                                fctx.attempts[(uid, v)] = kk + 1
+                                fctx.retries[fkey] += 1
+                                if inv_log is not None:
+                                    inv_log.append((end, node.config.cpu,
+                                                    node.config.mem))
+                                heapq.heappush(events, (end, next(seq),
+                                                        _ABORT, uid, name))
+                                heapq.heappush(
+                                    events,
+                                    (end + backoff_s * (2.0 ** kk),
+                                     next(seq), _RETRY, uid, name))
+                                continue
+                            # retries exhausted: terminal failure — the
+                            # instance still completes downstream but
+                            # is marked failed (OOM-like semantics, no
+                            # warm container left behind)
+                            node.failed = True
+                            node.fail_reason = "fault: attempts exhausted"
+                            state.failed[uid] = True
+                            fctx.fault_dead.add((uid, v))
+                    if inv_log is not None:
+                        inv_log.append((end, node.config.cpu,
+                                        node.config.mem))
+                    heapq.heappush(events,
+                                   (end, next(seq), _FINISH, uid, name))
                     continue
                 per_fn_busy[fkey] += rt
                 delay = 0.0
@@ -1909,7 +2403,8 @@ class FleetEngine:
     def _report(self, state: _FleetState, t0, t_end, cpu_area, mem_area,
                 per_fn_queue, carry_out=None, per_fn_busy=None,
                 per_fn_spin=None, provision_by_fn=None,
-                replicas_by_fn=None) -> FleetReport:
+                replicas_by_fn=None,
+                fault_ledgers=(None, None, None, None)) -> FleetReport:
         return self._report_arrays(
             arrival=state.arrival, finish=state.finish,
             queue_delay=state.queue_delay, cold_delay=state.cold_delay,
@@ -1919,14 +2414,16 @@ class FleetEngine:
             per_fn_queue=per_fn_queue, carry_out=carry_out,
             tenants=[wf.identity for wf in state.wfs],
             per_fn_busy=per_fn_busy, per_fn_spin=per_fn_spin,
-            provision_by_fn=provision_by_fn, replicas_by_fn=replicas_by_fn)
+            provision_by_fn=provision_by_fn, replicas_by_fn=replicas_by_fn,
+            fault_ledgers=fault_ledgers)
 
     def _report_arrays(self, *, arrival, finish, queue_delay, cold_delay,
                        failed, dead, costs, t0, t_end, cpu_area, mem_area,
                        per_fn_queue, carry_out=None,
                        tenants=None, per_fn_busy=None, per_fn_spin=None,
-                       provision_by_fn=None,
-                       replicas_by_fn=None) -> FleetReport:
+                       provision_by_fn=None, replicas_by_fn=None,
+                       fault_ledgers=(None, None, None, None)
+                       ) -> FleetReport:
         """Shared report assembly for the scalar event loop and the
         table-driven cells (identical inf-substitution, utilization and
         makespan arithmetic)."""
@@ -1939,6 +2436,7 @@ class FleetEngine:
         denom = self.cluster.total_mem_mb * makespan
         mem_util = mem_area / denom if denom > 0 and math.isfinite(denom) \
             else 0.0
+        retries, timeouts, hedges, failures = fault_ledgers
         return FleetReport.from_arrays(
             arrival=arrival, finish=finish_out, e2e=e2e,
             queue_delay=queue_delay, cold_delay=cold_delay,
@@ -1949,13 +2447,16 @@ class FleetEngine:
             tenants=tenants, busy_by_function=per_fn_busy,
             spinups_by_function=per_fn_spin,
             provision_by_function=provision_by_fn,
-            replicas_by_function=replicas_by_fn)
+            replicas_by_function=replicas_by_fn,
+            retries_by_function=retries, timeouts_by_function=timeouts,
+            hedges_by_function=hedges, failures_by_function=failures)
 
 
 def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],
               arrivals: ArrivalLike, *,
               cluster: ClusterModel = INFINITE_CLUSTER,
               cold_start: ColdStartModel = NO_COLD_START,
+              faults=None, resilience=None,
               copy: bool = True) -> FleetReport:
     """Run a fleet of instances of ``workflow`` through ``env``'s
     backend and pricing (the same ``Environment`` every searcher uses).
@@ -1974,5 +2475,6 @@ def run_fleet(env, workflow: Union[Workflow, Callable[[int], Workflow]],
             raise ValueError("copy=False only makes sense for a fleet of 1")
         instances = [workflow]
     engine = FleetEngine(env.backend, pricing=env.pricing, cluster=cluster,
-                         cold_start=cold_start)
+                         cold_start=cold_start, faults=faults,
+                         resilience=resilience)
     return engine.run(instances, times)

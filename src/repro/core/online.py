@@ -76,6 +76,9 @@ from repro.core.critical_path import find_critical_path
 from repro.core.engine import (ClusterModel, ColdStartModel, FleetCarry,
                                FleetEngine, PoissonArrivals, ReplicaModel)
 from repro.core.env import Environment
+from repro.core.faults import (FaultModel, ResilienceModel, ResilienceSpec,
+                               classify_failures, degrade_policies,
+                               grant_policies)
 from repro.core.placement import (PlacementPlan, PlacementSpec, TenantCell,
                                   plan_placement, scale_cluster)
 from repro.core.resources import ResourceConfig
@@ -122,6 +125,24 @@ class OnlineSpec:
     #: historical config-only serving path bit-identically (no
     #: :class:`ReplicaModel` is ever constructed).
     autoscale: Optional[AutoscaleSpec] = None
+    #: live fault injection: every serving epoch and every challenger
+    #: validation runs under this fault model, reseeded per epoch so
+    #: each epoch draws a fresh (but deterministic) fault stream while
+    #: challenger-vs-incumbent validation *inside* an epoch replays the
+    #: same paired draws. ``None`` (the default) keeps the fault-free
+    #: serving path bit-identically (the engine never constructs a
+    #: fault stream).
+    faults: Optional[FaultModel] = None
+    #: recovery-policy actuator (requires ``faults``): cells serve
+    #: behind per-function ladder policies
+    #: (:func:`repro.core.faults.policy_ladder`), drift misses classify
+    #: as *failure-bound* off the fleet's failure diagnostics — checked
+    #: before the capacity/config split — and grants climb the recovery
+    #: ladder (or degrade it off the critical path when attainment
+    #: collapses under an outage) as reconfigure candidates validated
+    #: jointly with config/scale actions. ``None`` serves with no
+    #: recovery (and, without ``faults``, keeps byte-identity).
+    resilience: Optional[ResilienceSpec] = None
     # -- drift detection ----------------------------------------------
     #: sliding-window length (served instances) per cell
     window: int = 48
@@ -165,6 +186,11 @@ class OnlineSpec:
             # must leave the searcher at least one sample to spend, or
             # the "challenger" would just be the base-config reset
             raise ValueError("grant_budget must be >= 2 (retune + search)")
+        if self.resilience is not None and self.faults is None:
+            # the engine treats resilience as inert without faults; at
+            # the spec level that is a misconfiguration, not a no-op
+            raise ValueError("resilience requires faults (the recovery "
+                             "actuator answers injected failures)")
 
 
 @dataclasses.dataclass
@@ -215,6 +241,13 @@ class ServingCell:
     replicas: Optional[Dict[str, int]] = None
     cluster_scale: float = 1.0
     queue_share: float = 0.0
+    #: recovery-policy state (``None`` unless ``OnlineSpec.resilience``
+    #: is set): per-function ladder levels, the solo-runtime scale the
+    #: ladder's timeouts/hedges key off, and the latest epoch's failed
+    #: attempt count (the failure-bound classification observable)
+    policy_levels: Optional[Dict[str, int]] = None
+    runtimes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    failures: int = 0
     saturation: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
     deploy_spent: int = 0
@@ -249,6 +282,9 @@ class ServingCell:
             # (BENCH_online.json) byte-identical to the pre-replica rows
             row["replicas"] = sorted(self.replicas.items())
             row["cluster_scale"] = self.cluster_scale
+        if self.policy_levels is not None:
+            # resilience cells only: fault-free payloads stay pinned
+            row["policy_levels"] = sorted(self.policy_levels.items())
         return row
 
 
@@ -324,6 +360,30 @@ class OnlineReport:
                 "queue_share_threshold": a.queue_share_threshold,
                 "min_overhead_frac": a.min_overhead_frac,
             }
+        if s.faults is not None:
+            f = s.faults
+            payload["spec"]["faults"] = {
+                "default_transient": f.default_transient,
+                "transient": sorted(
+                    (str(k), v) for k, v in f.transient.items()),
+                "straggler_prob": f.straggler_prob,
+                "straggler_factor": f.straggler_factor,
+                "cold_fail": f.cold_fail,
+                "outages": [dataclasses.asdict(o) for o in f.outages],
+                "outage_fail": f.outage_fail,
+                "seed": f.seed,
+            }
+        if s.resilience is not None:
+            rs = s.resilience
+            payload["spec"]["resilience"] = {
+                "max_retries": rs.max_retries,
+                "backoff_s": rs.backoff_s,
+                "timeout_factor": rs.timeout_factor,
+                "hedge_factor": rs.hedge_factor,
+                "grant_width": rs.grant_width,
+                "min_failures": rs.min_failures,
+                "degrade_attainment_frac": rs.degrade_attainment_frac,
+            }
         if s.placement is not None:
             p = s.placement
             payload["spec"]["placement"] = {
@@ -367,6 +427,10 @@ class OnlineController:
         self._packed_carry: Optional[FleetCarry] = None
         self._packed_clock: float = 0.0
         self._cells: List[ServingCell] = []
+        #: the current epoch's reseeded fault model (None when fault
+        #: injection is off, or before the first epoch — deploy-time
+        #: baselines validate fault-free)
+        self._live_faults: Optional[FaultModel] = None
 
     # -- conditions ----------------------------------------------------
     def _serving_env(self, cond: EpochConditions) -> Environment:
@@ -414,6 +478,67 @@ class OnlineController:
         base = self.spec.replay.cluster
         return base if f == 1.0 else scale_cluster(base, f)
 
+    # -- fault injection / recovery policy (spec.faults/.resilience) --
+    def _epoch_faults(self, epoch: int) -> Optional[FaultModel]:
+        """The epoch's fault model: the spec's model reseeded per epoch
+        so each epoch draws a fresh stream, while every validation
+        replay *inside* the epoch shares the serving stream's seed —
+        challenger vs. incumbent stays a paired fault experiment."""
+        f = self.spec.faults
+        if f is None:
+            return None
+        return dataclasses.replace(f, seed=f.seed + epoch)
+
+    def _cell_resilience(self, cell: ServingCell,
+                         levels: Optional[Dict[str, int]] = None
+                         ) -> Optional[ResilienceModel]:
+        """The cell's recovery actuator as an engine-side model (keys
+        tenant-qualified so packed fleets never alias policies);
+        ``None`` when the resilience actuator is off."""
+        rspec = self.spec.resilience
+        if rspec is None:
+            return None
+        levels = levels if levels is not None else cell.policy_levels
+        if levels is None:
+            return None
+        ident = cell.task.template.identity
+        model = rspec.resilience_model(levels, cell.runtimes)
+        return ResilienceModel(policies={
+            (ident, n): p for n, p in model.policies.items()})
+
+    def _packed_resilience(self, override: Optional[
+            Tuple[int, Dict[str, int]]] = None
+            ) -> Optional[ResilienceModel]:
+        """The packed fleet's recovery actuator: the union of every
+        cell's ladder levels under tenant-qualified keys (``override``
+        swaps cell ``index``'s levels for a challenger's)."""
+        rspec = self.spec.resilience
+        if rspec is None:
+            return None
+        policies: Dict[object, object] = {}
+        for cell in self._cells:
+            levels = cell.policy_levels or {}
+            if override is not None and cell.index == override[0]:
+                levels = override[1]
+            ident = cell.task.template.identity
+            model = rspec.resilience_model(levels, cell.runtimes)
+            for name, p in model.policies.items():
+                policies[(ident, name)] = p
+        return ResilienceModel(policies=policies)
+
+    def _failure_bound(self, cell: ServingCell) -> bool:
+        """Is the cell's drift *failure-bound* (failed attempts in the
+        serving window) rather than capacity-/config-bound? Checked
+        before the capacity/config split: a failed attempt inflates
+        neither queue delay nor cold overhead, so a failure-driven miss
+        looks deceptively config-bound to ``classify_saturation`` and
+        would waste grants on a re-search that cannot help."""
+        rspec = self.spec.resilience
+        if rspec is None:
+            return False
+        total, _ = classify_failures(cell.saturation)
+        return total >= rspec.min_failures
+
     def _observe_saturation(self, cell: ServingCell, report) -> None:
         """Record the serving epoch's saturation diagnostics on the
         cell — the observables drift classification reads."""
@@ -427,6 +552,10 @@ class OnlineController:
         ablations route every grant to the scale actuator."""
         aspec = self.spec.autoscale
         if aspec is None or "scale" not in aspec.actuators:
+            return False
+        if self._failure_bound(cell):
+            # failure-bound drift routes to the recovery actuator, not
+            # the replica pools — growing capacity cannot stop a fault
             return False
         if "config" not in aspec.actuators:
             return True
@@ -478,6 +607,19 @@ class OnlineController:
                 cell.cluster_scale = pool_capacity_factor(
                     cell.replicas, cell.configs, spec.replay.cluster,
                     max_scale=spec.autoscale.max_cluster_scale)
+            if spec.resilience is not None:
+                # every cell starts with no recovery — the controller
+                # *learns* policy online from failure-bound misses; the
+                # ladder's timeout/hedge scale reads the searched
+                # workflow's cached node runtimes (the deploy search
+                # measured them)
+                src = res.state.wf if res.state is not None \
+                    else task.template
+                cell.policy_levels = {n: 0 for n in task.template.nodes}
+                cell.runtimes = {
+                    name: (float(node.runtime)
+                           if math.isfinite(node.runtime) else 0.0)
+                    for name, node in src.nodes.items()}
             cells.append(cell)
         return cells
 
@@ -530,7 +672,9 @@ class OnlineController:
         engine = FleetEngine(env.backend, pricing=env.pricing,
                              cluster=self._cell_cluster(cell),
                              cold_start=self._cold_model(cond),
-                             scale=self._cell_scale(cell))
+                             scale=self._cell_scale(cell),
+                             faults=self._live_faults,
+                             resilience=self._cell_resilience(cell))
         instances = []
         for _ in range(r.n_instances):
             wf = cell.task.template.copy()
@@ -569,6 +713,16 @@ class OnlineController:
             row["queue_share"] = cell.queue_share
             row["total_replicas"] = sum((cell.replicas or {}).values())
             row["cluster_scale"] = cell.cluster_scale
+        if spec.faults is not None:
+            # fault runs only: fault-free payloads stay byte-identical
+            if spec.autoscale is None:
+                self._observe_saturation(cell, report)
+            cell.failures, _ = classify_failures(cell.saturation)
+            row["failed"] = int(report.failed_mask.sum())
+            row["fault_failures"] = cell.failures
+            row["retries"] = report.total_retries
+            row["timeouts"] = report.total_timeouts
+            row["hedges"] = report.total_hedges
         return row
 
     # -- shared-cluster (packed) serving -------------------------------
@@ -609,14 +763,20 @@ class OnlineController:
     def _packed_engine(self, cond: EpochConditions,
                        env: Optional[Environment] = None,
                        scale_override: Optional[Tuple[int, Dict[str, int]]]
-                       = None) -> FleetEngine:
+                       = None,
+                       resilience_override: Optional[
+                           Tuple[int, Dict[str, int]]] = None
+                       ) -> FleetEngine:
         env = env if env is not None else self._serving_env(cond)
         plan = self._plan
         return FleetEngine(env.backend, pricing=env.pricing,
                            cluster=plan.cluster,
                            cold_start=self._cold_model(cond),
                            interference=plan.multipliers,
-                           scale=self._packed_scale(scale_override))
+                           scale=self._packed_scale(scale_override),
+                           faults=self._live_faults,
+                           resilience=self._packed_resilience(
+                               resilience_override))
 
     def _repack(self) -> None:
         """Re-pack the shared cluster after an accepted capacity grant:
@@ -727,13 +887,23 @@ class OnlineController:
                 row["queue_share"] = cell.queue_share
                 row["total_replicas"] = sum((cell.replicas or {}).values())
                 row["cluster_scale"] = cell.cluster_scale
+            if spec.faults is not None:
+                if spec.autoscale is None:
+                    self._observe_saturation(cell, sub)
+                cell.failures, _ = classify_failures(cell.saturation)
+                row["failed"] = int(sub.failed_mask.sum())
+                row["fault_failures"] = cell.failures
+                row["retries"] = sub.total_retries
+                row["timeouts"] = sub.total_timeouts
+                row["hedges"] = sub.total_hedges
             rows.append(row)
         return rows
 
     def _validate_many_packed(self, cell: ServingCell,
                               config_sets: List[Dict[str, ResourceConfig]],
                               cond: EpochConditions, seed: int,
-                              replicas: Optional[Dict[str, int]] = None
+                              replicas: Optional[Dict[str, int]] = None,
+                              levels: Optional[Dict[str, int]] = None
                               ) -> List[ReplayMetrics]:
         """Challenger validation *inside* the packed cluster: each
         candidate config-map for ``cell`` is replayed with every other
@@ -753,9 +923,11 @@ class OnlineController:
             if self._packed_carry is not None else None
         seeds = [int(seed) + other.index for other in self._cells]
         override = (cell.index, replicas) if replicas is not None else None
+        l_override = (cell.index, levels) if levels is not None else None
         out: List[ReplayMetrics] = []
         for configs in config_sets:
-            engine = self._packed_engine(cond, scale_override=override)
+            engine = self._packed_engine(cond, scale_override=override,
+                                         resilience_override=l_override)
             wfs, times = self._packed_fleet(
                 self._cells, seeds, n, rate, clock,
                 override=(cell.index, configs))
@@ -797,7 +969,8 @@ class OnlineController:
                        config_sets: List[Dict[str, ResourceConfig]],
                        cond: EpochConditions, seed: int,
                        replicas: Optional[Dict[str, int]] = None,
-                       cluster_factor: Optional[float] = None
+                       cluster_factor: Optional[float] = None,
+                       levels: Optional[Dict[str, int]] = None
                        ) -> List[ReplayMetrics]:
         """Replay candidate config-maps on the live arrival seed under
         the live conditions, *from the live fleet state* (the cell's
@@ -815,7 +988,8 @@ class OnlineController:
         capacity growth applies after acceptance, via the re-pack)."""
         if self._plan is not None:
             return self._validate_many_packed(cell, config_sets, cond,
-                                              seed, replicas=replicas)
+                                              seed, replicas=replicas,
+                                              levels=levels)
         r = self.spec.replay
         carry = cell.carry.pruned(cell.clock) if cell.carry is not None \
             else None
@@ -828,6 +1002,13 @@ class OnlineController:
         if self.spec.autoscale is not None:
             kwargs["scale"] = self._cell_scale(cell, replicas)
             kwargs["cluster"] = self._cell_cluster(cell, cluster_factor)
+        if self.spec.faults is not None:
+            # the gate's evidence is the live fault stream: candidates
+            # replay under the epoch's reseeded model (one paired
+            # stream per run_many plane) with the candidate's recovery
+            # policies (defaults: the cell's live levels)
+            kwargs["faults"] = self._live_faults
+            kwargs["resilience"] = self._cell_resilience(cell, levels)
         env = self._serving_env(cond)
         deterministic = getattr(env.backend, "deterministic", False)
         if not getattr(env.backend, "batch_safe", deterministic):
@@ -903,6 +1084,31 @@ class OnlineController:
             if grown != old_r:
                 new_r = grown
 
+        # -- resilience half: failure-bound drift climbs the recovery
+        # ladder for the highest-failure-share functions; an attainment
+        # collapse below the outage threshold instead *degrades*
+        # off-critical-path recovery (graceful degradation — recovery
+        # spend concentrates where latency accrues)
+        rspec = spec.resilience
+        old_l = dict(cell.policy_levels) \
+            if cell.policy_levels is not None else None
+        new_l: Optional[Dict[str, int]] = None
+        if old_l is not None and self._failure_bound(cell):
+            live = cell.live_attainment()
+            if (math.isfinite(live) and rspec is not None
+                    and live < rspec.degrade_attainment_frac
+                    * cell.baseline):
+                shed = degrade_policies(old_l,
+                                        find_critical_path(state.wf))
+                if shed != old_l:
+                    new_l = shed
+            if new_l is None:
+                grown_l = grant_policies(
+                    old_l, cell.saturation, width=rspec.grant_width,
+                    max_level=rspec.max_level)
+                if grown_l != old_l:
+                    new_l = grown_l
+
         # -- config half: retune + incremental search grant (skipped by
         # the scale-only ablation, which spends no search samples)
         challenger: Optional[Dict[str, ResourceConfig]] = None
@@ -920,9 +1126,11 @@ class OnlineController:
         # replay (the autoscale-off path stays the single historical
         # [challenger, incumbent] call)
         cands: List[Tuple[Dict[str, ResourceConfig],
-                          Optional[Dict[str, int]], float, str]] = []
+                          Optional[Dict[str, int]], float,
+                          Optional[Dict[str, int]], str]] = []
         if challenger is not None:
-            cands.append((challenger, old_r, cell.cluster_scale, "config"))
+            cands.append((challenger, old_r, cell.cluster_scale, old_l,
+                          "config"))
         if new_r is not None:
             # capacity follows the candidate's pools AND configs: the
             # same replica assignment needs more cores under a fatter
@@ -934,22 +1142,33 @@ class OnlineController:
                     floor=cell.cluster_scale)
             if challenger is not None:
                 cands.append((challenger, new_r, cand_factor(challenger),
-                              "joint"))
+                              old_l, "joint"))
             cands.append((cell.configs, new_r, cand_factor(cell.configs),
-                          "scale"))
-        triples = cands + [(cell.configs, old_r, cell.cluster_scale,
+                          old_l, "scale"))
+        if new_l is not None:
+            # the recovery action pairs with both the incumbent and the
+            # challenger configs (recovery changes each config's cost
+            # and attainment, so the gate judges the joint action)
+            cands.append((cell.configs, old_r, cell.cluster_scale, new_l,
+                          "policy"))
+            if challenger is not None:
+                cands.append((challenger, old_r, cell.cluster_scale,
+                              new_l, "config+policy"))
+        triples = cands + [(cell.configs, old_r, cell.cluster_scale, old_l,
                             "incumbent")]
         metrics: List[Optional[ReplayMetrics]] = [None] * len(triples)
         groups: Dict[object, List[int]] = {}
-        for i, (_cfg, r_i, f_i, _lbl) in enumerate(triples):
+        for i, (_cfg, r_i, f_i, l_i, _lbl) in enumerate(triples):
             key = (tuple(sorted(r_i.items())) if r_i is not None else None,
-                   f_i)
+                   f_i,
+                   tuple(sorted(l_i.items())) if l_i is not None else None)
             groups.setdefault(key, []).append(i)
         for idxs in groups.values():
             out = self._validate_many(
                 cell, [triples[i][0] for i in idxs], cond, seed,
                 replicas=triples[idxs[0]][1],
-                cluster_factor=triples[idxs[0]][2])
+                cluster_factor=triples[idxs[0]][2],
+                levels=triples[idxs[0]][3])
             for i, m in zip(idxs, out):
                 metrics[i] = m
         val_inc = metrics[-1]
@@ -984,10 +1203,10 @@ class OnlineController:
             if best_i is None or better(metrics[i], metrics[best_i]):
                 best_i = i
         val_ch = metrics[best_i] if best_i is not None else val_inc
-        label = triples[best_i][3] if best_i is not None else "none"
+        label = triples[best_i][4] if best_i is not None else "none"
         accept = best_i is not None and better(val_ch, val_inc)
         if accept:
-            cfg, rep, factor, _lbl = triples[best_i]
+            cfg, rep, factor, lev, _lbl = triples[best_i]
             cell.configs = {n: c.copy() for n, c in cfg.items()}
             if rep is not None:
                 grew_capacity = factor != cell.cluster_scale
@@ -995,6 +1214,8 @@ class OnlineController:
                 cell.cluster_scale = factor
                 if grew_capacity and self._plan is not None:
                     self._repack()
+            if lev is not None:
+                cell.policy_levels = dict(lev)
             cell.validated = val_ch.slo_attainment
             cell.validated_cost = val_ch.total_cost
             cell.last_gain = self.scorer.realized_gain(
@@ -1016,12 +1237,19 @@ class OnlineController:
         cell.spent += used
         cell.cooldown = spec.cooldown_epochs
         kept = val_ch if accept else val_inc
-        if aspec is None:
+        if aspec is None and rspec is None:
             note = "swap" if accept else "challenger rejected"
         elif accept:
-            total_r = sum(cell.replicas.values()) if cell.replicas else 0
-            note = (f"{label} swap ({total_r} replicas, "
-                    f"cluster x{cell.cluster_scale:g})")
+            bits = []
+            if aspec is not None:
+                total_r = sum(cell.replicas.values()) if cell.replicas \
+                    else 0
+                bits.append(f"{total_r} replicas, "
+                            f"cluster x{cell.cluster_scale:g}")
+            if rspec is not None:
+                total_l = sum((cell.policy_levels or {}).values())
+                bits.append(f"policy levels {total_l}")
+            note = f"{label} swap ({', '.join(bits)})"
         else:
             note = "challenger rejected" if cands else \
                 "no actuator applicable"
@@ -1085,6 +1313,7 @@ class OnlineController:
         for epoch in range(spec.n_epochs):
             cond = spec.drift.conditions(epoch)
             regime = spec.drift.regime(epoch)
+            self._live_faults = self._epoch_faults(epoch)
             for cell in cells:
                 if regime != cell.regime:
                     # new disturbance: re-arm the detector and the

@@ -461,10 +461,11 @@ def make_searcher(name: str, env: EnvLike, **kwargs) -> Searcher:
     try:
         cls = SEARCHERS[name]
     except KeyError:
-        # the joint sizing+scaling searcher registers itself on import;
-        # importing it here (not at module top) keeps core.search free
-        # of a circular dependency on core.autoscale
+        # wrapper searchers register themselves on import; importing
+        # them here (not at module top) keeps core.search free of a
+        # circular dependency on core.autoscale / core.faults
         import repro.core.autoscale  # noqa: F401
+        import repro.core.faults     # noqa: F401
         try:
             cls = SEARCHERS[name]
         except KeyError:

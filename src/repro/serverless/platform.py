@@ -262,6 +262,20 @@ class StochasticBackend(AnalyticBackend):
     comparison is a paired experiment, and the same configuration in
     two candidate slots scores identically (pinned by
     ``tests/test_replay_batch.py``).
+
+    Fault injection (``FleetEngine(faults=...)``) composes with this
+    contract without touching the backend: the engine draws its own
+    per-plane fault stream (one seeded rng advance, keyed by the
+    ``(attempt, instance, function)`` coordinate — see
+    :meth:`repro.core.faults.FaultModel.fault_stream`) *independent* of
+    this backend's noise stream, so a stochastic fleet under faults
+    still replays as a paired experiment across candidates. Caveat
+    (pinned by ``tests/test_faults.py``): under faults the serial
+    looped-``run`` fallback re-draws ``replay_noise`` per cell while a
+    ``run_many`` plane draws once for all cells — the same plane-level
+    segmenting ``replay_noise`` itself has — so stochastic
+    serial-vs-batched identity holds per plane, not across differently
+    shaped planes.
     """
 
     deterministic = False

@@ -1,0 +1,530 @@
+"""Fault-injection plane + recovery policy: the paired fault-stream
+contract, deterministic retry/timeout/hedge semantics, placement-aware
+outage blast radius, and the ``faults=None`` identity pin.
+
+The load-bearing invariants:
+
+  * **paired streams** — one :meth:`FaultModel.fault_stream` rng
+    advance per replay plane, draws keyed by ``(attempt, instance,
+    function)``: the same configuration in two candidate slots of one
+    batch replays byte-identical outcomes (challenger validation is a
+    paired experiment, exactly like ``replay_noise``);
+  * **plane parity** — the serial event loop and the constrained
+    table plane resolve faults through the same float operations, so
+    ``run`` vs ``run_many`` is bit-identical under faults;
+  * **faults=None identity** — an engine constructed with explicit
+    ``faults=None, resilience=None`` is the plain engine: same plane
+    routing, same reports, no behavioural residue;
+  * **recovery semantics** — retries charge every attempt and back off
+    exponentially, timeouts kill and bill stragglers, hedges race a
+    burst duplicate with cancel-on-completion billing.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.backend import CallableBackend
+from repro.core.dag import Node, Workflow
+from repro.core.engine import (ClusterModel, ColdStartModel, FleetEngine,
+                               PoissonArrivals, run_fleet)
+from repro.core.engine import _stranded_error
+from repro.core.faults import (FaultModel, FaultStream, MAX_ATTEMPTS,
+                               NO_RECOVERY, OutageWindow, ResilienceModel,
+                               ResiliencePolicy, ResilienceSpec,
+                               classify_failures, degrade_policies,
+                               grant_policies, ladder_level, policy_ladder)
+from repro.core.resources import ResourceConfig
+from repro.core.search import make_searcher
+from repro.serverless.generator import chain_workflow, suggest_slo
+from repro.serverless.platform import SimulatedPlatform
+
+CONSTRAINED_KW = dict(cluster=ClusterModel(total_cpu=48.0,
+                                           total_mem_mb=48.0 * 1024.0),
+                      cold_start=ColdStartModel(delay_s=0.25,
+                                                keep_alive_s=60.0))
+
+FAULTS = FaultModel(default_transient=0.25, straggler_prob=0.15,
+                    straggler_factor=5.0, seed=3)
+
+RETRIES = ResilienceModel(default=ResiliencePolicy(max_retries=2,
+                                                   backoff_s=0.05))
+
+
+def make_engine(**kw):
+    env = SimulatedPlatform().environment()
+    return FleetEngine(env.backend, pricing=env.pricing, **kw)
+
+
+def candidate_sets(template, n_cand, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_cand):
+        out.append({n.name: ResourceConfig(cpu=float(rng.uniform(1.0, 8.0)),
+                                           mem=float(rng.uniform(1024.0,
+                                                                 8192.0)))
+                    for n in template})
+    return out
+
+
+def arrival_sets(n_seeds, n=8, rate=0.25):
+    return [PoissonArrivals(rate, n, seed=s).times() for s in range(n_seeds)]
+
+
+def scalar_cell(engine, template, configs, times):
+    wfs = []
+    for _ in range(len(times)):
+        wf = template.copy()
+        wf.apply_configs(configs)
+        wfs.append(wf)
+    return engine.run(wfs, times)
+
+
+def assert_reports_identical(got, want):
+    assert np.array_equal(got.arrivals, want.arrivals)
+    assert np.array_equal(got.finishes, want.finishes)
+    assert np.array_equal(got.latencies, want.latencies)
+    assert np.array_equal(got.queue_delays, want.queue_delays)
+    assert np.array_equal(got.cold_delays, want.cold_delays)
+    assert np.array_equal(got.costs, want.costs)
+    assert np.array_equal(got.failed_mask, want.failed_mask)
+    assert got.makespan == want.makespan
+    assert got.total_cost == want.total_cost
+    assert got.total_retries == want.total_retries
+    assert got.total_timeouts == want.total_timeouts
+    assert got.total_hedges == want.total_hedges
+    assert got.total_failures == want.total_failures
+
+
+def single_node_wf(rt_oracle, cpu=2.0, tenant=None):
+    wf = Workflow("unit", tenant=tenant)
+    wf.add_node(Node(name="f", config=ResourceConfig(cpu=cpu, mem=2048.0)))
+    return wf, CallableBackend(rt_oracle)
+
+
+# -- the paired fault-stream contract ----------------------------------
+
+def test_fault_stream_is_one_draw_keyed_by_coordinates():
+    """Same seed + same plane shape => byte-identical tensors; the
+    draw is a function of the coordinate grid, not of call order."""
+    a = FaultModel(seed=7).fault_stream(12, 4)
+    b = FaultModel(seed=7).fault_stream(12, 4)
+    assert isinstance(a, FaultStream)
+    assert a.primary.shape == (3, MAX_ATTEMPTS, 12, 4)
+    assert np.array_equal(a.primary, b.primary)
+    assert np.array_equal(a.hedge, b.hedge)
+    assert not np.array_equal(a.primary,
+                              FaultModel(seed=8).fault_stream(12, 4).primary)
+
+
+def test_run_many_consumes_one_fault_stream_draw_per_plane(monkeypatch):
+    """The plane advances the fault rng exactly once — never per
+    cell/candidate — which is what makes batched replays paired."""
+    template = chain_workflow(4, seed=11)
+    draws = {"n": 0}
+    real = FaultModel.fault_stream
+
+    def counting(self, n_instances, n_functions):
+        draws["n"] += 1
+        return real(self, n_instances, n_functions)
+
+    monkeypatch.setattr(FaultModel, "fault_stream", counting)
+    engine = make_engine(faults=FAULTS, resilience=RETRIES)
+    reports = engine.run_many(template, candidate_sets(template, 3, seed=9),
+                              arrival_sets(2))
+    assert draws["n"] == 1
+    assert len(reports) == 6
+
+
+def test_same_configs_in_two_candidate_slots_draw_the_same_faults():
+    """Paired experiment across the batch: duplicate candidates replay
+    bit-identically, so report deltas are policy, never luck."""
+    template = chain_workflow(4, seed=11)
+    cfg_a, cfg_b = candidate_sets(template, 2, seed=5)
+    engine = make_engine(faults=FAULTS, resilience=RETRIES)
+    reports = engine.run_many(template, [cfg_a, cfg_b, cfg_a],
+                              arrival_sets(1, n=12))
+    assert_reports_identical(reports[2], reports[0])
+    assert not np.array_equal(reports[1].latencies, reports[0].latencies)
+
+
+@pytest.mark.parametrize("engine_kw", [{}, CONSTRAINED_KW],
+                         ids=["infinite", "constrained"])
+def test_serial_run_matches_run_many_under_faults(engine_kw):
+    """The scalar event loop and the vectorized table plane must agree
+    bit-for-bit on fault outcomes AND recovery tallies."""
+    template = chain_workflow(5, seed=11)
+    configs = candidate_sets(template, 1, seed=2)[0]
+    times = arrival_sets(1, n=10)[0]
+    kw = dict(engine_kw, faults=FAULTS, resilience=RETRIES)
+    batched = make_engine(**kw).run_many(template, [configs], [times])[0]
+    serial = scalar_cell(make_engine(**kw), template, configs, times)
+    assert_reports_identical(batched, serial)
+    assert batched.total_failures > 0          # the schedule has teeth
+
+
+def test_faults_none_engine_is_bit_identical_to_plain():
+    """Explicit ``faults=None, resilience=None`` is the pinned no-op
+    path on both the fast and the constrained plane."""
+    template = chain_workflow(5, seed=11)
+    cands = candidate_sets(template, 2, seed=4)
+    seeds = arrival_sets(2)
+    for kw in ({}, CONSTRAINED_KW):
+        plain = make_engine(**kw).run_many(template, cands, seeds)
+        explicit = make_engine(faults=None, resilience=None,
+                               **kw).run_many(template, cands, seeds)
+        for got, want in zip(explicit, plain):
+            assert_reports_identical(got, want)
+
+
+def test_fault_injection_routes_off_the_fast_plane():
+    template = chain_workflow(4, seed=11)
+    plain = make_engine().batch_eligibility(template, [])
+    assert plain["plane"] == "fast"
+    faulty = make_engine(faults=FAULTS).batch_eligibility(template, [])
+    assert faulty["plane"] == "constrained" and faulty["vectorized"]
+    assert any("fault" in r for r in faulty["reasons"])
+
+
+# -- deterministic recovery semantics ----------------------------------
+
+def _split_rate(lo, hi):
+    """A probability strictly between two uniforms (draw ``lo`` fires,
+    draw ``hi`` does not)."""
+    assert lo < hi, "pick a seed where the draws are ordered"
+    return (lo + hi) / 2.0
+
+
+def _seed_where(channel, lane="primary"):
+    """A seed whose attempt-0 draw is below its attempt-1 draw on one
+    channel (so a split rate fails attempt 0 and passes attempt 1)."""
+    for seed in range(64):
+        s = FaultModel(seed=seed).fault_stream(1, 1)
+        t = s.primary if lane == "primary" else s.hedge
+        if t[channel, 0, 0, 0] < t[channel, 1, 0, 0]:
+            return seed, s
+    raise AssertionError("no ordered seed in range")
+
+
+def test_retry_charges_every_attempt_and_backs_off():
+    """attempt 0 burns its full runtime and fails; the retry launches
+    ``backoff_s`` later and succeeds: latency = 2*rt + backoff, cost =
+    2x the clean run."""
+    rt, backoff = 3.0, 0.125
+    seed, stream = _seed_where(channel=0)
+    rate = _split_rate(stream.primary[0, 0, 0, 0],
+                       stream.primary[0, 1, 0, 0])
+    wf, backend = single_node_wf(lambda node: rt)
+    faults = FaultModel(default_transient=rate, seed=seed)
+    policy = ResilienceModel(default=ResiliencePolicy(max_retries=2,
+                                                      backoff_s=backoff))
+    clean = FleetEngine(CallableBackend(lambda n: rt)).run([wf.copy()], [0.0])
+    rep = FleetEngine(backend, faults=faults,
+                      resilience=policy).run([wf], [0.0])
+    assert rep.latencies[0] == 2 * rt + backoff
+    assert rep.total_retries == 1 and rep.total_failures == 1
+    assert not rep.failed_mask[0]
+    assert rep.costs[0] == pytest.approx(2 * clean.costs[0])
+
+
+def test_unrecovered_transient_fault_kills_the_instance():
+    """Without a retry budget the failed attempt is a dead instance —
+    billed for the burned runtime, excluded from goodput."""
+    rt = 3.0
+    seed, stream = _seed_where(channel=0)
+    rate = _split_rate(stream.primary[0, 0, 0, 0],
+                       stream.primary[0, 1, 0, 0])
+    wf, backend = single_node_wf(lambda node: rt)
+    rep = FleetEngine(backend, faults=FaultModel(default_transient=rate,
+                                                 seed=seed)).run([wf], [0.0])
+    assert rep.failed_mask[0]
+    assert rep.latencies[0] == rt              # the burn IS the wall time
+    assert rep.total_failures == 1 and rep.total_retries == 0
+    assert rep.costs[0] > 0.0                  # the burn is billed
+    assert rep.goodput(slo=1e9) == 0.0         # dead => never goodput
+    assert rep.completion(1e9) == 1.0          # on time but wrong
+
+
+def test_timeout_kills_the_straggler_and_bills_the_executed_slice():
+    """attempt 0 straggles to factor*rt, is guillotined at timeout_s,
+    and the retry (no straggle) lands: latency = timeout + backoff +
+    rt, exactly one timeout on the ledger."""
+    rt, factor, backoff = 2.0, 10.0, 0.25
+    seed, stream = _seed_where(channel=1)
+    prob = _split_rate(stream.primary[1, 0, 0, 0],
+                       stream.primary[1, 1, 0, 0])
+    timeout = 3.0 * rt                         # < factor * rt
+    wf, backend = single_node_wf(lambda node: rt)
+    faults = FaultModel(straggler_prob=prob, straggler_factor=factor,
+                        seed=seed)
+    policy = ResilienceModel(default=ResiliencePolicy(
+        max_retries=1, timeout_s=timeout, backoff_s=backoff))
+    rep = FleetEngine(backend, faults=faults,
+                      resilience=policy).run([wf], [0.0])
+    assert rep.latencies[0] == timeout + backoff + rt
+    assert rep.total_timeouts == 1 and rep.total_retries == 1
+    assert not rep.failed_mask[0]
+
+
+def test_hedge_races_the_straggler_and_earliest_success_wins():
+    """The primary straggles; the hedge (independent draw lane) does
+    not: the duplicate fires at hedge_delay_s on burst capacity and
+    resolves the attempt at hedge_delay + rt."""
+    rt, factor, delay = 2.0, 8.0, 1.0
+    for seed in range(128):
+        s = FaultModel(seed=seed).fault_stream(1, 1)
+        if s.primary[1, 0, 0, 0] < s.hedge[1, 0, 0, 0]:
+            prob = _split_rate(s.primary[1, 0, 0, 0], s.hedge[1, 0, 0, 0])
+            break
+    else:
+        raise AssertionError("no ordered seed in range")
+    wf, backend = single_node_wf(lambda node: rt)
+    faults = FaultModel(straggler_prob=prob, straggler_factor=factor,
+                        seed=seed)
+    policy = ResilienceModel(default=ResiliencePolicy(hedge_delay_s=delay))
+    rep = FleetEngine(backend, faults=faults,
+                      resilience=policy).run([wf], [0.0])
+    assert rep.latencies[0] == delay + rt      # hedge leg wins
+    assert rep.total_hedges == 1
+    assert not rep.failed_mask[0]
+    no_hedge = FleetEngine(backend, faults=faults).run([wf.copy()], [0.0])
+    assert no_hedge.latencies[0] == factor * rt
+    clean = FleetEngine(backend).run([wf.copy()], [0.0])
+    # both legs billed (cancel-on-completion): dearer than a clean run,
+    # though cheaper here than letting the straggler burn to the end
+    assert rep.costs[0] > clean.costs[0]
+
+
+def test_hedge_past_the_finish_never_fires():
+    rt = 2.0
+    wf, backend = single_node_wf(lambda node: rt)
+    policy = ResilienceModel(default=ResiliencePolicy(hedge_delay_s=5 * rt))
+    rep = FleetEngine(backend, faults=FaultModel(seed=0),
+                      resilience=policy).run([wf], [0.0])
+    assert rep.latencies[0] == rt and rep.total_hedges == 0
+
+
+# -- correlated outages + placement ------------------------------------
+
+def test_outage_blast_radius_follows_the_placement_map():
+    """outage_fail=1.0 on node 0 kills exactly the tenant placed there
+    (admission-time windows); the anti-affinity-spread tenant on node 1
+    is untouched."""
+    rt = 1.0
+    window = OutageWindow(node=0, start_s=0.0, end_s=100.0)
+    faults = FaultModel(outages=(window,), node_of={"A": 0, "B": 1},
+                        outage_fail=1.0, seed=0)
+    wfs, times = [], []
+    for tenant in ("A", "B"):
+        for k in range(4):
+            wf, backend = single_node_wf(lambda node: rt, tenant=tenant)
+            wfs.append(wf)
+            times.append(float(k))
+    rep = FleetEngine(backend, faults=faults).run(wfs, times)
+    assert rep.tenant_slice("A").failed_mask.all()
+    assert not rep.tenant_slice("B").failed_mask.any()
+
+
+def test_fault_outage_window_is_admission_time():
+    """An attempt admitted after the window ends succeeds even though
+    the outage overlapped the fleet's lifetime."""
+    faults = FaultModel(outages=(OutageWindow(node=0, start_s=0.0,
+                                              end_s=5.0),),
+                        node_of={"A": 0}, seed=0)
+    assert faults.outage_active("A", "f", 4.999)
+    assert not faults.outage_active("A", "f", 5.0)
+    assert faults.effective_transient("A", "f", 1.0) == 1.0
+    assert faults.effective_transient("A", "f", 6.0) == 0.0
+    assert faults.effective_transient("B", "f", 1.0) == 0.0  # unplaced
+
+
+def test_fault_rate_and_policy_key_resolution_precedence():
+    """(identity, name) beats the bare name beats the default — the
+    ReplicaModel convention, shared by faults and policies."""
+    fm = FaultModel(transient={("t1", "f"): 0.5, "f": 0.25},
+                    default_transient=0.1)
+    assert fm.rate("t1", "f") == 0.5
+    assert fm.rate("t2", "f") == 0.25
+    assert fm.rate("t2", "g") == 0.1
+    pol = ResiliencePolicy(max_retries=2)
+    rm = ResilienceModel(policies={("t1", "f"): pol,
+                                   "f": ResiliencePolicy(max_retries=1)})
+    assert rm.policy("t1", "f") is pol
+    assert rm.policy("t2", "f").max_retries == 1
+    assert rm.policy("t2", "g") is NO_RECOVERY
+
+
+# -- report ledgers ----------------------------------------------------
+
+def test_saturation_reports_per_function_failure_rows():
+    template = chain_workflow(4, seed=11)
+    configs = candidate_sets(template, 1, seed=2)[0]
+    wf = template.copy()
+    wf.apply_configs(configs)
+    env = SimulatedPlatform().environment()
+    rep = run_fleet(env, wf, PoissonArrivals(0.5, 24, seed=1),
+                    faults=FAULTS, resilience=RETRIES)
+    sat = rep.saturation()
+    assert sat, "saturation must have per-function rows"
+    for row in sat.values():
+        assert {"failed", "failure_share"} <= set(row)
+    total, share = classify_failures(sat)
+    assert total == rep.total_failures > 0
+    assert sum(share.values()) == pytest.approx(1.0)
+
+
+def test_fault_goodput_is_attainment_over_survivors_only():
+    template = chain_workflow(4, seed=11)
+    configs = candidate_sets(template, 1, seed=2)[0]
+    wf = template.copy()
+    wf.apply_configs(configs)
+    env = SimulatedPlatform().environment()
+    rep = run_fleet(env, wf, PoissonArrivals(0.5, 24, seed=1), faults=FAULTS)
+    slo = suggest_slo(template, slack=3.0)
+    assert rep.failed_mask.any()
+    assert rep.goodput(slo) == rep.slo_attainment(slo) <= 1.0
+    assert rep.completion(slo) >= rep.goodput(slo)
+
+
+def test_stranded_fault_work_error_names_uids_and_functions():
+    err = _stranded_error([(3, "decode", False, False),
+                           (1, "encode", False, True)])
+    msg = str(err)
+    assert "scheduler invariant violated" in msg
+    assert "uid 1 fn 'encode'" in msg and "uid 3 fn 'decode'" in msg
+    assert "failed=True" in msg
+
+
+# -- validation --------------------------------------------------------
+
+def test_fault_model_rejects_invalid_rates():
+    with pytest.raises(ValueError):
+        FaultModel(default_transient=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(transient={"f": -0.1})
+    with pytest.raises(ValueError):
+        FaultModel(straggler_factor=0.5)
+    with pytest.raises(ValueError):
+        OutageWindow(node=0, start_s=5.0, end_s=5.0)
+
+
+def test_retry_policy_rejects_invalid_knobs():
+    with pytest.raises(ValueError):
+        ResiliencePolicy(max_retries=MAX_ATTEMPTS)
+    with pytest.raises(ValueError):
+        ResiliencePolicy(timeout_s=0.0)
+    with pytest.raises(ValueError):
+        ResiliencePolicy(backoff_s=-1.0)
+    with pytest.raises(ValueError):
+        ResilienceSpec(retune_step=0.0)
+
+
+# -- the policy ladder -------------------------------------------------
+
+def test_retry_ladder_roundtrips_through_its_inverse():
+    for level in range(6):
+        pol = policy_ladder(level, 2.5, max_retries=3)
+        assert ladder_level(pol, max_retries=3) == level
+    assert policy_ladder(0, 2.5) is NO_RECOVERY
+    top = policy_ladder(5, 2.0, max_retries=3, timeout_factor=4.0,
+                        hedge_factor=2.0)
+    assert top.max_retries == 3
+    assert top.timeout_s == 8.0 and top.hedge_delay_s == 4.0
+
+
+def test_grant_policies_target_the_highest_failure_share():
+    sat = {"t/a": {"failed": 3}, "t/b": {"failed": 1}, "t/c": {"failed": 0}}
+    out = grant_policies({"a": 0, "b": 0, "c": 0}, sat, width=2, max_level=5)
+    assert out == {"a": 2, "b": 0, "c": 0}     # the whole width, ranked
+    capped = grant_policies({"a": 5, "b": 0, "c": 0}, sat, width=1,
+                            max_level=5)
+    assert capped == {"a": 5, "b": 1, "c": 0}  # headroom-aware
+    assert grant_policies({"a": 5, "b": 5, "c": 0}, sat, width=2,
+                          max_level=5) == {"a": 5, "b": 5, "c": 0}
+
+
+def test_degrade_policies_shed_off_critical_path_hedges():
+    levels = {"a": 5, "b": 4, "c": 0}
+    out = degrade_policies(levels, ["a"])
+    assert out == {"a": 5, "b": 1, "c": 0}
+    assert levels == {"a": 5, "b": 4, "c": 0}  # input untouched
+
+
+# -- the searched policy -----------------------------------------------
+
+def test_resilience_searcher_registry_and_feasibility():
+    """``make_searcher("resilience", ...)`` searches recovery levels
+    jointly with configs and reports a coherent result."""
+    template = chain_workflow(3, seed=2)
+    slo = suggest_slo(template, slack=3.0)
+    spec = ResilienceSpec(
+        faults=FaultModel(default_transient=0.1, seed=1),
+        rate=0.5, n_instances=12, max_rounds=4, config_grant=16,
+        target_attainment=0.8)
+    searcher = make_searcher("resilience",
+                             lambda: SimulatedPlatform().environment(),
+                             spec=spec)
+    result = searcher.search(template.copy(), slo)
+    assert set(result.policies) <= set(template.nodes)
+    for pol in result.policies.values():
+        assert isinstance(pol, ResiliencePolicy)
+    assert 0.0 <= result.fleet_attainment <= 1.0
+    assert result.fleet_cost > 0.0 and result.fleet_evals > 0
+    assert set(result.configs) == set(template.nodes)
+    summary = result.summary()
+    assert summary["fleet_attainment"] == result.fleet_attainment
+
+
+# -- the online failure-bound actuator ---------------------------------
+
+def _online_fault_spec(**kw):
+    from repro.core.campaign import PortfolioSpec, ReplaySpec
+    from repro.core.online import OnlineSpec
+    faults = FaultModel(default_transient=0.15, straggler_prob=0.1,
+                        straggler_factor=5.0, seed=11)
+    base = dict(
+        portfolio=PortfolioSpec(n_workflows=2, size=6, slo_slacks=(2.0,)),
+        replay=ReplaySpec(n_instances=16, rate=0.5),
+        n_epochs=4, seed=0, total_budget=256,
+        faults=faults, resilience=ResilienceSpec(faults=faults))
+    base.update(kw)
+    return OnlineSpec(**base)
+
+
+def test_online_failure_bound_misses_earn_retry_policy_grants():
+    """Injected transients make epochs failure-bound; the controller
+    answers with ladder grants (policy levels climb from zero) and the
+    epoch rows carry the recovery ledgers."""
+    from repro.core.online import run_online
+    report = run_online(_online_fault_spec())
+    rows = report.epochs
+    assert rows
+    for row in rows:
+        assert {"failed", "fault_failures", "retries", "timeouts",
+                "hedges"} <= set(row)
+    assert any(row["fault_failures"] > 0 for row in rows)
+    assert any(lvl > 0 for cell in report.cells
+               for lvl in (cell.policy_levels or {}).values())
+    payload = report.to_payload()
+    assert "faults" in payload["spec"] and "resilience" in payload["spec"]
+
+
+def test_online_fault_free_payload_has_no_fault_residue():
+    """faults=None serving is the pinned pre-fault path: no fault keys
+    anywhere in the payload, and two runs are byte-identical."""
+    from repro.core.online import run_online
+    spec = _online_fault_spec(faults=None, resilience=None)
+    a = run_online(spec).to_payload()
+    b = run_online(spec).to_payload()
+    assert a == b
+    assert "faults" not in a["spec"] and "resilience" not in a["spec"]
+    for row in a["epochs"]:
+        assert "failed" not in row and "retries" not in row
+    for cell in a["cells"]:
+        assert "policy_levels" not in cell
+
+
+def test_online_resilience_without_faults_is_rejected():
+    from repro.core.online import OnlineSpec
+    with pytest.raises(ValueError):
+        OnlineSpec(resilience=ResilienceSpec())
